@@ -1,0 +1,84 @@
+"""Aggregate experiments/dryrun/*.json into the EXPERIMENTS.md tables.
+
+  PYTHONPATH=src python benchmarks/aggregate_dryrun.py [--markdown]
+"""
+
+import argparse
+import glob
+import json
+import os
+
+
+def load(out="experiments/dryrun"):
+    rows = []
+    for f in sorted(glob.glob(os.path.join(out, "*.json"))):
+        d = json.load(open(f))
+        rows.append(d)
+    return rows
+
+
+def fmt_bytes(b):
+    return f"{b/2**30:.1f}"
+
+
+def dryrun_table(rows, mesh):
+    hdr = (
+        "| arch | shape | status | params | compile s | HBM/dev GiB | fits 16G |\n"
+        "|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for d in rows:
+        if d.get("mesh") != mesh:
+            continue
+        if d["status"] == "skipped":
+            lines.append(
+                f"| {d['arch']} | {d['shape']} | SKIP ({d['reason'][:40]}...) | | | | |"
+            )
+            continue
+        mem = d.get("memory", {}).get("steady_state_bytes", 0)
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['status']} | "
+            f"{d.get('n_params', 0)/1e9:.2f}B | {d.get('compile_s', 0):.0f} | "
+            f"{fmt_bytes(mem)} | {'Y' if mem <= 16 * 2**30 else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def roofline_table(rows):
+    hdr = (
+        "| arch | shape | compute s | memory s | collective s | dominant | "
+        "MODEL_FLOPS | useful | note |\n|---|---|---|---|---|---|---|---|---|"
+    )
+    lines = [hdr]
+    for d in rows:
+        if d.get("mesh") != "16x16" or d["status"] != "ok" or d.get("tag"):
+            continue
+        r = d["roofline"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {r['compute_s']:.3g} | "
+            f"{r['memory_s']:.3g} | {r['collective_s']:.3g} | **{r['dominant']}** | "
+            f"{r['model_flops']:.2e} | {r['useful_ratio']:.2f} | "
+            f"{d['config'].get('remat','')}"
+            f"{'/sw' + str(d['config']['sliding_window']) if d['config'].get('sliding_window') else ''} |"
+        )
+    return "\n".join(lines)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+    rows = load(args.out)
+    ok = sum(1 for d in rows if d["status"] == "ok")
+    sk = sum(1 for d in rows if d["status"] == "skipped")
+    print(f"## Dry-run summary: {ok} ok, {sk} skipped, {len(rows)-ok-sk} failed\n")
+    print("### Single pod (16x16 = 256 chips)\n")
+    print(dryrun_table(rows, "16x16"))
+    print("\n### Multi-pod (2x16x16 = 512 chips)\n")
+    print(dryrun_table(rows, "2x16x16"))
+    print("\n## Roofline (single pod, probe-corrected)\n")
+    print(roofline_table(rows))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,109 @@
+"""§4 clustering: k-means (ℓ1/ℓ2/ℓ∞) vs k-windows, the paper's qualitative
+claims quantified:
+
+* k-windows precision is high, recall limited (§4.2);
+* k-windows degrades in high dimension ("not very effective in
+  high-dimensional spaces");
+* the naive distributed merge [60] over-merges close clusters;
+* sufficient-stats distributed k-means is exact vs centralized.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ml import clustering, kwindows
+
+
+def _blobs(rng, dim, sep, n_per=60, K=3):
+    # deterministic well-separated centers (random draws can collide and
+    # make precision meaningless); heterogeneity comes from the points
+    centers = np.zeros((K, dim))
+    for k in range(K):
+        centers[k, k % dim] = sep * (k + 1) * (-1) ** k
+    X = np.concatenate([rng.normal(size=(n_per, dim)) + c for c in centers])
+    labels = np.repeat(np.arange(K), n_per)
+    return jnp.asarray(X), centers, labels
+
+
+def _precision_recall(assign, labels, n_clusters):
+    correct = 0
+    captured = 0
+    for w in range(n_clusters):
+        pts = np.asarray(assign) == w
+        if pts.sum() == 0:
+            continue
+        correct += np.bincount(labels[pts]).max()
+        captured += pts.sum()
+    precision = correct / max(captured, 1)
+    recall = captured / len(labels)
+    return precision, recall
+
+
+def run(rows):
+    rng = np.random.default_rng(41)
+
+    # --- metric comparison on well-separated 2-D blobs
+    X, centers, labels = _blobs(rng, 2, 4.0)
+    C0 = clustering.kmeans_pp_init(jax.random.key(0), X, 3)
+    for metric in ("l1", "l2", "linf"):
+        t0 = time.perf_counter()
+        res = clustering.kmeans(X, C0, num_clusters=3, metric=metric, iters=30)
+        dt = (time.perf_counter() - t0) * 1e6
+        rows.append((f"clustering/kmeans_{metric}", dt, f"inertia={float(res.inertia):.1f}"))
+
+    # --- sufficient-stats distributed == centralized
+    perm = np.random.default_rng(1).permutation(X.shape[0])
+    Xs = jnp.asarray(np.asarray(X)[perm]).reshape(3, 60, 2)
+    res_d = clustering.distributed_kmeans(Xs, C0, num_clusters=3, iters=25)
+    res_c = clustering.kmeans(
+        jnp.asarray(np.asarray(X)[perm]), C0, num_clusters=3, metric="l2sq", iters=25
+    )
+    gap = abs(float(res_d.inertia) - float(res_c.inertia))
+    rows.append(("clustering/distributed_vs_central_gap", 0.0, f"{gap:.6f}"))
+
+    # --- k-windows: precision/recall at 2-D and high-D (paper's claim)
+    for dim in (2, 20):
+        X, centers, labels = _blobs(rng, dim, 3.0 if dim == 2 else 1.2)
+        t0 = time.perf_counter()
+        win = kwindows.kwindows(
+            jax.random.key(2), X, num_windows=9, r=1.2 if dim == 2 else 2.0
+        )
+        dt = (time.perf_counter() - t0) * 1e6
+        assign = kwindows.assign_points(X, win)
+        p, r = _precision_recall(assign, labels, win.centers.shape[0])
+        rows.append(
+            (
+                f"clustering/kwindows_d{dim}",
+                dt,
+                f"precision={p:.3f};recall={r:.3f};alive={int(jnp.sum(win.alive))}",
+            )
+        )
+
+    # --- naive distributed k-windows over-merges close clusters
+    X, centers, labels = _blobs(rng, 2, 1.0)  # closely-spaced blobs
+    Xs = X.reshape(3, 60, 2)
+    win_c = kwindows.kwindows(jax.random.key(3), X, num_windows=6, r=1.2)
+    win_d = kwindows.distributed_kwindows(jax.random.key(3), Xs, num_windows=6, r=1.2)
+    rows.append(
+        (
+            "clustering/kwindows_naive_distributed",
+            0.0,
+            f"central_alive={int(jnp.sum(win_c.alive))};"
+            f"distributed_alive={int(jnp.sum(win_d.alive))}",
+        )
+    )
+
+    # --- radius-T [27] + merge
+    X, centers, labels = _blobs(rng, 2, 4.0)
+    t0 = time.perf_counter()
+    C, counts, mask = clustering.radius_t_clustering(X, T=2.5, max_clusters=20)
+    C, counts, mask = clustering.merge_centroids(C, counts, mask, T=2.5)
+    dt = (time.perf_counter() - t0) * 1e6
+    rows.append(
+        ("clustering/radius_t", dt, f"clusters={int(jnp.sum(mask))}")
+    )

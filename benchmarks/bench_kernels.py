@@ -1,0 +1,68 @@
+"""Pallas kernels: wall time per call (interpret mode on CPU — structural
+check + relative comparison only; real perf numbers require a TPU) and
+oracle agreement as the derived column."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile/warm
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) * 1e6 / reps
+
+
+def run(rows):
+    from repro.kernels.flash_attention import ops as fa, ref as fa_ref
+
+    key = jax.random.key(0)
+    q = jax.random.normal(key, (1, 256, 4, 64))
+    k = jax.random.normal(key, (1, 256, 2, 64))
+    v = jax.random.normal(key, (1, 256, 2, 64))
+    us = _time(lambda a, b, c: fa.flash_attention(a, b, c, bq=128, bk=128), q, k, v)
+    out = fa.flash_attention(q, k, v, bq=128, bk=128)
+    exp = fa_ref.attention_ref(
+        q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3), v.transpose(0, 2, 1, 3)
+    ).transpose(0, 2, 1, 3)
+    err = float(jnp.max(jnp.abs(out - exp)))
+    rows.append(("kernels/flash_attention_256", us, f"max_err={err:.2e}"))
+
+    from repro.kernels.decode_attention import ops as da, ref as da_ref
+
+    q1 = jax.random.normal(key, (4, 8, 64))
+    k1 = jax.random.normal(key, (4, 1024, 2, 64))
+    v1 = jax.random.normal(key, (4, 1024, 2, 64))
+    us = _time(lambda a, b, c: da.decode_attention(a, b, c, jnp.asarray(1000)), q1, k1, v1)
+    err = float(
+        jnp.max(
+            jnp.abs(
+                da.decode_attention(q1, k1, v1, jnp.asarray(1000))
+                - da_ref.decode_attention_ref(q1, k1, v1, 1000)
+            )
+        )
+    )
+    rows.append(("kernels/decode_attention_1k", us, f"max_err={err:.2e}"))
+
+    from repro.kernels.topk_compress import ops as tk, ref as tk_ref
+
+    x = jax.random.normal(key, (65536,))
+    us = _time(lambda a: tk.topk_sparsify(a, 1024), x)
+    ok = bool(jnp.allclose(tk.topk_sparsify(x, 1024), tk_ref.topk_sparsify_ref(x, 1024)))
+    rows.append(("kernels/topk_64k", us, f"exact={ok}"))
+
+    from repro.kernels.pdist_argmin import ops as pd, ref as pd_ref
+
+    X = jax.random.normal(key, (4096, 16))
+    C = jax.random.normal(key, (64, 16))
+    us = _time(lambda a, b: pd.pdist_argmin(a, b, metric="l2"), X, C)
+    idx, _ = pd.pdist_argmin(X, C, metric="l2")
+    eidx, _ = pd_ref.pdist_argmin_ref(X, C, metric="l2")
+    rows.append(
+        ("kernels/pdist_argmin_4k", us, f"agree={float(jnp.mean((idx == eidx)*1.0)):.4f}")
+    )

@@ -1,0 +1,48 @@
+"""Staleness sweep: the §5 algorithm generalized to delay D on a reduced LM
+(derived column = final loss; SGD vs the paper's cited Adagrad [19])."""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.core.staleness import delay_init, delay_push_pop, staleness_bound_lr
+from repro.data import synthetic_lm_batches
+from repro.models import transformer as tf
+from repro.optim import adagrad, sgd
+from repro.optim.optimizers import apply_updates
+
+
+def run(rows):
+    cfg = get_config("qwen2-1.5b").reduced().replace(vocab_size=256)
+    params0 = tf.init_params(jax.random.key(0), cfg)
+    grad_fn = jax.jit(
+        jax.value_and_grad(lambda p, b: tf.loss_fn(p, cfg, b)[0])
+    )
+    steps = 40
+
+    for opt_name, make_opt in [
+        ("sgd", lambda lr: sgd(lr)),
+        ("adagrad", lambda lr: adagrad(lr * 10)),
+    ]:
+        for D in (0, 1, 2, 4):
+            opt = make_opt(staleness_bound_lr(3e-2, D))
+            params = params0
+            opt_state = opt.init(params)
+            delay = delay_init(params, D) if D else None
+            data = synthetic_lm_batches(1, 4, 32, cfg.vocab_size)
+            t0 = time.perf_counter()
+            last = 0.0
+            for _ in range(steps):
+                batch = next(data)
+                l, g = grad_fn(params, batch)
+                if D:
+                    delay, g = delay_push_pop(delay, g)
+                upd, opt_state = opt.update(g, opt_state, params)
+                params = apply_updates(params, upd)
+                last = float(l)
+            dt = (time.perf_counter() - t0) * 1e6 / steps
+            rows.append((f"staleness_lm/{opt_name}_D{D}", dt, f"{last:.4f}"))

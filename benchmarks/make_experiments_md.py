@@ -1,0 +1,254 @@
+"""Compose EXPERIMENTS.md from the dry-run JSONs + hand-written analysis.
+
+  PYTHONPATH=src python benchmarks/make_experiments_md.py
+"""
+
+import glob
+import json
+
+from aggregate_dryrun import dryrun_table, load, roofline_table
+
+HEADER = """# EXPERIMENTS — Revisiting Large Scale Distributed Machine Learning
+
+Environment: CPU-only container (1 core); TPU v5e is the **target**
+(197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link ICI per chip), proven by
+AOT lowering + compilation against 512 host devices.  Pallas kernels are
+validated in interpret mode against pure-jnp oracles.
+
+## §Paper-validation
+
+Claims of the paper validated by `tests/` + `benchmarks/` (run
+`PYTHONPATH=src python -m benchmarks.run` for the CSV):
+
+| paper claim | result |
+|---|---|
+| §5 round-robin ≡ serial mini-batch GD | exact to float reassociation (tests/test_core_server.py, test_system.py — real LM gradients) |
+| §5 async converges at the same rate | logistic: async 200 contacts ≈ sync loss (bench `async_vs_sync_logistic`); reduced LM: same ballpark |
+| §5 literal θ_{t-1} (stale) handoff converges | bench `stale_round_robin`; ε-neighborhood tests |
+| §5 + [19] Adagrad under staleness | staleness sweep D∈{0,1,2,4}: SGD degrades gracefully; **Adagrad degrades faster at D=4** (its accumulator absorbs stale variance) — an honest counterpoint to the Downpour intuition |
+| §3.1 one-Allreduce L-BFGS [5] | 30 L-BFGS iters beat 30 GD iters at equal comm rounds |
+| §3.1 privacy second-order stats [6] | exact OLS recovery; wire = K·(n²+n) numbers, 6.8 % of raw data in the healthcare example |
+| §3.1/§3.2 ADMM consensus | LASSO matches centralized ISTA to 1e-3; consensus SVM reaches centralized accuracy |
+| §3.2 cascade SVM [25] | SV set stabilizes in ≤3 rounds, accuracy = centralized, wire = 13.5 % of raw |
+| §3.3 PoE overconfidence / gPoE & (g)BCM prior fallback | far-from-data variance ratio: PoE 1/K vs 1.0 for gPoE/BCM/gBCM (bench `gp_experts`) |
+| §4.2 k-windows: high precision, limited recall | d=2: precision 1.00 / recall 0.94 |
+| §4.2 k-windows degrades in high dimension | d=20: precision 0.66 / recall 0.71 |
+| §4.2 naive distributed merge over-merges [60] | close blobs: centralized 3 clusters, naive merge 2 |
+| beyond-paper: slot-aligned consensus k-means | survives maximally heterogeneous shards within 3 % of centralized inertia ([21] assumes homogeneous) |
+| §1/§5 low-communication push | top-k 10 % + error feedback trains within ~7 % of uncompressed loss at 20 % wire; int8 at 25 % wire matches baseline |
+
+## §Dry-run
+
+Every (architecture × input shape) lowers AND compiles on the single-pod
+16×16 mesh and the 2×16×16 multi-pod mesh: **78 ok + 2 documented skips
+(whisper long_500k: 448-token decoder context by construction) = 80/80.**
+Multi-pod proves the `pod` axis shards (gradient reduction and FSDP span
+`(pod, data)`).
+
+Memory notes:
+* "fits 16G" uses XLA-CPU's `memory_analysis`, which is pessimistic for
+  TPU: XLA-CPU upcasts bf16 weights to f32 before matmuls (the MXU
+  consumes bf16 natively) and fuses less, so weight-heavy entries are
+  inflated ~2-4×.  Entries marked N at ≤40 GiB generally fit on v5e after
+  accounting for this; the giants are honestly over:
+* deepseek-v3-671b train on ONE v5e-256 pod does not fit (params+opt
+  alone = 16 GiB/chip in bf16 at 512 chips; DeepSeek themselves used 2048
+  H800s).  The multi-pod mesh halves state per chip (58 GiB→ analytic
+  ~24 GiB incl. CPU inflation) — a 4-pod mesh is the realistic training
+  footprint; serve shapes fit.
+"""
+
+MID = """
+## §Roofline
+
+Method: XLA `cost_analysis()` counts scan bodies ONCE, so FLOPs/bytes/
+collective bytes are extracted by **probe lowering** (`telemetry/
+costprobe.py`): unrolled 1-and-2-layer variants at two batch sizes →
+per-segment marginal costs → affine-in-batch extrapolation to the
+production shape (sLSTM's time recurrence added analytically).  Hardware
+constants: 197 TFLOP/s bf16, 819 GB/s HBM, 50 GB/s ICI.  `useful` =
+MODEL_FLOPS (6·N_active·D train / 2·N_active per decode token) over total
+compiled FLOPs.  Caveat: `bytes accessed` on the CPU backend overstates a
+fused TPU executable (limited fusion + f32 weight upcasts); absolute
+memory terms are upper bounds, relative comparisons across configs are
+the signal.
+
+Reading the table: train/prefill shapes are memory-term-dominated under
+this metric (activation + weight traffic); the interesting outliers are
+the collective-bound pairs (deepseek-67b/jamba decode_32k: FSDP parameter
+re-gathers — see hillclimb B; xlstm prefill: small model on a big TP
+mesh) and deepseek-v3 train (both terms huge — hillclimb A).  Decode
+`useful` ratios are near zero by construction: one token's 2·N FLOPs
+against full-cache traffic — decode is bandwidth-bound, as expected.
+
+NOTE: the MoE rows (olmoe, deepseek-v3, jamba) are the PAPER-FAITHFUL
+baselines recorded before the dispatch-layout fix of hillclimb A; the
+shipped `moe.py` includes the fix, so re-running the sweep reproduces the
+improved numbers (tagged `a2a` JSONs; e.g. olmoe train memory 24.5→8.4 s,
+deepseek-v3 train memory 355→169 s).
+"""
+
+PERF = """
+## §Perf — hillclimbing log
+
+Three pairs selected per the brief: worst roofline fraction
+(**deepseek-v3-671b × train_4k**), most collective-bound
+(**deepseek-67b × decode_32k**), most representative of the paper's
+technique (**tinyllama-1.1b × train_4k** — pure data-parallel
+central-server training; the collective term IS the paper's push/pull).
+All numbers are per-device roofline terms from the probe-corrected
+dry-run on the 16×16 mesh.
+
+### Hillclimb C — tinyllama-1.1b × train_4k (the paper's setting)
+
+Baseline (TP16 × DP16, remat full, microbatch 4): compute 0.226 s /
+memory 5.34 s / collective 1.99 s (99.5 GB/dev) — dominant: memory.
+
+1. **Hypothesis**: a 1.1B model needs no tensor parallelism; TP spends
+   ~2 psums × 22 layers × fwd+bwd on 268 MB activations (≈ 47 GB) plus
+   logits collectives, while pure DP over all 256 chips costs only the
+   gradient all-reduce (4.4 GB fp32).  Params+opt replicated = 13 GiB,
+   fits.  → **`--strategy dp`**: collective 1.99 → **0.088 s (22.6×)**,
+   memory 5.34 → 2.64 s; measured collective bytes = 4.40 GB = exactly
+   the fp32 gradient (napkin confirmed).  CONFIRMED.  Cost: args 12.3 GiB
+   replicated → steady-state 17.5 GiB, marginally over budget.
+2. **Hypothesis**: ZeRO-3 (`dp_fsdp`) removes the replicated state for a
+   param all-gather (~4.4 GB fwd + 4.4 GB bwd) + grad reduce-scatter
+   (~4.4 GB) ≈ 13 GB collectives — still 8× under baseline TP.
+   → collective 0.25 s (12.5 GB — napkin confirmed), memory 4.43 s,
+   steady-state **7.4 GiB** (fits).  CONFIRMED.
+3. **Hypothesis**: fewer microbatches → fewer per-microbatch param
+   re-gathers under ZeRO-3.  → REFUTED-BY-INSTRUMENTATION: the cost
+   probes model the mb=1 path, so the collective estimate is
+   mb-invariant; memory_analysis shows mb=1 also drops the fp32 grad
+   accumulator → **6.6 GiB** steady state.  Recorded as a probe-harness
+   limitation.
+
+**Paper-faithful baseline**: TP+DP, sync allreduce = the paper's server
+in its exact-aggregation limit — memory 5.34 s / collective 1.99 s.
+**Beyond-paper optimized**: ZeRO-3 data-parallel — memory 4.43 s (1.2×)
+/ collective 0.25 s (8×), dominant term down 17 %.  Additionally the
+paper's own §5 top-k push (bench `compression`) cuts the remaining
+gradient traffic 5× at ~7 % loss penalty — on this config that is
+collective 0.25 → ~0.06 s (modeled from wire bytes; XLA has no sparse
+all-reduce primitive, so this lever needs a custom collective on real
+hardware).
+
+### Hillclimb B — deepseek-67b × decode_32k (most collective-bound)
+
+Baseline (TP16 × FSDP16 params, cache seq-sharded over model): compute
+0.0012 s / memory 0.287 s / collective 0.336 s (16.8 GB/dev) — dominant:
+collective; 19.7 GiB steady state (over).
+
+1. **Hypothesis**: XLA all-gathers the seq-sharded KV cache; pin
+   `kvseq` sharding through the attention compute (flash-decode
+   locality).  → REFUTED: terms unchanged.  Per-layer probe breakdown
+   showed the 365 MB/layer of all-gathers are **parameter un-shards**
+   (lm_head `[8192,6400]`, FFN `[8192,1376]`…), not KV.
+2. **Hypothesis** (from the refutation): FSDP at decode is pure waste —
+   there is no optimizer state to shard; params should stay TP-only and
+   never be gathered.  → **`--strategy serve`**: collective 0.336 →
+   **0.0027 s (123×)**, collective bytes 16.8 GB → 136 MB; dominant term
+   flips to memory (0.27 s).  CONFIRMED — and the lesson generalizes:
+   `serve` strategy is now the recommended default for all decode/prefill
+   shapes.  (memory_analysis rises to 41 GiB on the CPU backend because
+   un-FSDP'd bf16 weights get f32-upcast copies before every dot — a
+   backend artifact; analytic v5e footprint = 8.4 GiB bf16 params + 3.2
+   GiB cache ≈ 12 GiB, fits.)
+3. **Decomposition of the remaining memory term** (affine-in-batch probe
+   fit, per layer): weight reads ≈ 776 MB/layer/step (batch-invariant)
+   vs cache+activation ≈ 12.8 MB/row/layer.  At B=128 the cache term
+   dominates (151 vs 72 GiB/device/step equivalents): ds67b serving at
+   this batch is **KV-bandwidth-bound** → next levers are int8 KV cache
+   (2× on the dominant share) or windowed attention; both noted as
+   future work, neither implemented as they change numerics/semantics.
+
+**Paper-faithful baseline**: collective-bound, 0.336 s.  **Beyond-paper
+optimized**: serve-strategy TP-only params — collective 123× down,
+bottleneck moved to the physics-bound cache reads.
+
+### Hillclimb A — deepseek-v3-671b × train_4k (worst roofline fraction)
+
+Baseline (TP16 experts + FSDP16, bf16 params+moments, remat full, mb 4):
+compute 13.0 s / memory 355 s / collective 191 s — dominant: memory;
+100.6 GiB steady state (does not fit one pod, see §Dry-run).
+
+1. **Hypothesis**: 2-D expert parallelism (experts over model×data =
+   1 expert-shard/device) eliminates FSDP re-gathers of the 654 B expert
+   params.  → **REFUTED HARD**: collective 191 → 1716 s (9× worse), temp
+   342 GiB.  With tokens sharded over `data` and experts over
+   `(model,data)`, the dispatch buffer cannot keep batch sharded — the
+   partitioner replicates the (B,E,C,d) buffer across the expert grid
+   (token traffic ×16).  Lesson: EP grids must be co-designed with the
+   dispatch resharding; naive 2-D EP is an anti-pattern under SPMD.
+2. **Hypothesis**: remat `dots` (save dot outputs) cuts backward
+   recompute traffic.  → PARTIALLY REFUTED: memory 355 → 346 s (−2.4 %),
+   compute 13.0 → 11.2 s, useful 0.37 → 0.43, but temp 83 → 133 GiB.
+   The memory term is not recompute-dominated.
+3. **Hypothesis** (from the XLA "inefficient partition" warning): the
+   MoE dispatch buffer is replicated-and-sliced instead of all-to-all'd;
+   pinning `(batch→data, expert→model, ·, ·)` sharding constraints on
+   both sides of the expert einsums forces the token-sized all-to-all.
+   Validated on olmoe first (fast): memory 24.5 → **8.36 s (2.9×)**,
+   collective 16.7 → **5.29 s (3.2×)**, temp 13.5 → 9.5 GiB.  Then on
+   deepseek-v3 itself: memory 355 → **168.6 s (2.1×)**, collective 191 →
+   **78.7 s (2.4×)**, compute unchanged (12.4 s).  CONFIRMED — the
+   constraint ships in `moe.py` for every MoE arch.
+
+**Paper-faithful baseline** vs **beyond-paper optimized** (deepseek-v3):
+dominant memory term 2.1× down and collective 2.4× down from one layout
+constraint; the ep2d refutation and the dispatch fix together are the
+§Perf story: on TPU SPMD, MoE performance is decided by whether the
+dispatch boundary reshards by all-to-all or by replication.
+
+### Bonus measurements (budget beyond the three hillclimbs)
+
+* **MLA absorbed decode** (minicpm3-4b × decode_32k, serve strategy): the
+  paper-faithful MLA decode up-projects the whole cached latent to
+  per-head K/V every step; the absorbed form (W_uk folded into the query,
+  W_uv into the output — `--mla-absorb`, bit-exact per
+  tests/test_decode_consistency.py) gives compute 0.0137 → **0.0003 s
+  (46×)** and memory 0.151 → **0.046 s (3.3×)**.  This is DeepSeek's
+  published inference optimization reproduced as a measured lever.
+* **Jamba × train_4k with the MoE dispatch fix**: memory 347 → 274 s
+  (1.27×), collective 108 → **37 s (2.9×)** — the hillclimb-A fix
+  generalizes across MoE architectures.
+* **Jamba × decode_32k with the serve strategy** — a scale boundary:
+  collective 0.266 → **0.0019 s (140×)** as for ds67b, but the memory term
+  rises 0.177 → 0.49 s and becomes dominant: a 398B model TP-sharded
+  16-way reads ~50 GB/device of weights per decode step, more than the
+  FSDP'd layout's local reads.  Conclusion: TP-only serving wins when
+  params/TP-degree is small next to the cache traffic (≤67B here); at
+  398B+, decode wants a wider model axis (more chips) or weight
+  quantization — the roofline harness quantifies exactly where the
+  crossover sits.
+
+### Stop criterion
+
+Hillclimbs ended when remaining candidates (int8 KV cache, sparse
+all-reduce, sequence parallelism for activations) either change model
+numerics or require collectives XLA does not expose — all documented
+above as future levers with napkin estimates.
+"""
+
+
+def main():
+    rows = load()
+    ok = sum(1 for d in rows if d["status"] == "ok" and not d.get("tag"))
+    with open("EXPERIMENTS.md", "w") as f:
+        f.write(HEADER)
+        f.write("\n### Single pod (16×16 = 256 chips), baselines\n\n")
+        f.write(dryrun_table([d for d in rows if not d.get("tag")], "16x16"))
+        f.write("\n\n### Multi-pod (2×16×16 = 512 chips), baselines\n\n")
+        f.write(dryrun_table([d for d in rows if not d.get("tag")], "2x16x16"))
+        f.write("\n")
+        f.write(MID)
+        f.write("\n")
+        f.write(roofline_table(rows))
+        f.write("\n")
+        f.write(PERF)
+    print("EXPERIMENTS.md written")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,55 @@
+"""Benchmark harness — one module per paper claim/table (DESIGN.md §6).
+
+Prints ``name,us_per_call,derived`` CSV.  Run:
+  PYTHONPATH=src python -m benchmarks.run [--only substring]
+"""
+
+import argparse
+import sys
+import traceback
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="run benches whose name contains this")
+    args = ap.parse_args()
+
+    from benchmarks import (
+        bench_admm,
+        bench_async_vs_sync,
+        bench_cascade_svm,
+        bench_clustering,
+        bench_compression,
+        bench_gp_experts,
+        bench_kernels,
+        bench_staleness,
+    )
+
+    modules = {
+        "async_vs_sync": bench_async_vs_sync,
+        "staleness": bench_staleness,
+        "admm": bench_admm,
+        "compression": bench_compression,
+        "cascade_svm": bench_cascade_svm,
+        "gp_experts": bench_gp_experts,
+        "clustering": bench_clustering,
+        "kernels": bench_kernels,
+    }
+
+    rows: list = []
+    print("name,us_per_call,derived")
+    for name, mod in modules.items():
+        if args.only and args.only not in name:
+            continue
+        try:
+            start = len(rows)
+            mod.run(rows)
+            for r in rows[start:]:
+                print(f"{r[0]},{r[1]:.1f},{r[2]}")
+                sys.stdout.flush()
+        except Exception:  # noqa: BLE001 — print and continue
+            print(f"{name},ERROR,{traceback.format_exc().splitlines()[-1]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,90 @@
+"""Sequential dry-run sweep over all (arch × shape × mesh) combinations.
+
+Single-pod runs include cost probes (roofline inputs); multi-pod runs are
+lower+compile proofs only.  Existing JSONs are skipped so the sweep is
+resumable.  Run:  PYTHONPATH=src python benchmarks/sweep_dryrun.py
+"""
+
+import json
+import os
+import subprocess
+import sys
+import time
+
+ARCHS = [
+    "xlstm-125m",
+    "whisper-base",
+    "tinyllama-1.1b",
+    "qwen2-1.5b",
+    "qwen2-vl-2b",
+    "olmoe-1b-7b",
+    "minicpm3-4b",
+    "deepseek-67b",
+    "jamba-1.5-large-398b",
+    "deepseek-v3-671b",
+]
+SHAPES = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+OUT = "experiments/dryrun"
+
+
+def path_for(arch, shape, multipod):
+    mesh = "2x16x16" if multipod else "16x16"
+    return os.path.join(OUT, f"{arch}__{shape}__{mesh}.json")
+
+
+def main():
+    os.makedirs(OUT, exist_ok=True)
+    jobs = []
+    for multipod in (False, True):
+        for arch in ARCHS:
+            for shape in SHAPES:
+                jobs.append((arch, shape, multipod))
+    t0 = time.time()
+    for i, (arch, shape, multipod) in enumerate(jobs):
+        p = path_for(arch, shape, multipod)
+        if os.path.exists(p):
+            try:
+                st = json.load(open(p)).get("status")
+            except Exception:
+                st = None
+            if st in ("ok", "skipped"):
+                print(f"[{i+1}/{len(jobs)}] SKIP (done) {p}", flush=True)
+                continue
+        cmd = [
+            sys.executable, "-m", "repro.launch.dryrun",
+            "--arch", arch, "--shape", shape, "--out", OUT,
+        ]
+        if multipod:
+            cmd.append("--multipod")
+        print(
+            f"[{i+1}/{len(jobs)}] {arch} {shape} "
+            f"{'2x16x16' if multipod else '16x16'} "
+            f"(t={time.time()-t0:.0f}s)", flush=True,
+        )
+        r = subprocess.run(
+            cmd, capture_output=True, text=True, timeout=3600,
+            env=dict(os.environ, PYTHONPATH="src"),
+        )
+        if r.returncode != 0:
+            print(f"  FAILED rc={r.returncode}: {r.stderr[-500:]}", flush=True)
+            with open(p, "w") as f:
+                json.dump(
+                    {"arch": arch, "shape": shape,
+                     "mesh": "2x16x16" if multipod else "16x16",
+                     "status": "crash", "stderr": r.stderr[-2000:]}, f)
+        else:
+            try:
+                st = json.load(open(p))
+                print(
+                    f"  -> {st['status']} compile={st.get('compile_s')}s "
+                    f"probe={st.get('probe_s')}s "
+                    f"mem={st.get('memory', {}).get('steady_state_bytes', 0)/2**30:.1f}GiB",
+                    flush=True,
+                )
+            except Exception as e:
+                print(f"  -> result unreadable: {e}", flush=True)
+    print(f"sweep done in {time.time()-t0:.0f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,82 @@
+"""The paper's motivating scenario: personal-healthcare clients that must
+not share raw data, coordinating through a strict client-server model.
+
+K clinics each hold private patient features.  Three §3.1 tools compose:
+
+1. privacy-preserving regression — only second-order statistics leave a
+   clinic ([6]);
+2. consensus LASSO via ADMM — interpretable sparse risk model, one
+   Allreduce of the coefficient vector per iteration;
+3. the §5 asynchronous server — clinics contact whenever they finish,
+   with contact frequency ∝ 1/dataset size.
+
+Everything reports its communication footprint (the paper's evaluation
+axis for mobile/clinical clients).
+
+  PYTHONPATH=src python examples/healthcare_federated.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import schedules, server
+from repro.core.allreduce import CommLedger
+from repro.data import make_feature_shards
+from repro.ml import linear
+
+K, DIM = 6, 12
+rng = np.random.default_rng(7)
+# heterogeneous clinics: different patient populations, different sizes
+sizes = [30, 45, 60, 80, 120, 200]
+w_true = rng.normal(size=DIM) * (rng.uniform(size=DIM) > 0.5)  # sparse risk factors
+Xs_list, ys_list = [], []
+for k in range(K):
+    X = rng.normal(size=(sizes[k], DIM)) + 0.3 * rng.normal(size=DIM)
+    y = X @ w_true + 0.1 * rng.normal(size=sizes[k])
+    Xs_list.append(X)
+    ys_list.append(y)
+
+raw_bytes = sum(x.size * 8 + y.size * 8 for x, y in zip(Xs_list, ys_list))
+print(f"raw data that NEVER leaves the clinics: {raw_bytes/1024:.1f} KiB\n")
+
+# ---- 1. privacy-preserving OLS via sufficient statistics -------------------
+pad = max(sizes)
+Xp = jnp.asarray(np.stack([np.pad(x, ((0, pad - len(x)), (0, 0))) for x in Xs_list]))
+yp = jnp.asarray(np.stack([np.pad(y, (0, pad - len(y))) for y in ys_list]))
+theta_priv, ledger = linear.private_second_order(Xp, yp)
+err = float(jnp.linalg.norm(theta_priv - jnp.asarray(w_true)))
+print("1. second-order-statistics regression ([6])")
+print(f"   ‖θ − w*‖ = {err:.4f};  wire = {ledger.total_bytes} bytes "
+      f"({ledger.total_bytes/raw_bytes:.1%} of raw)\n")
+
+# ---- 2. consensus LASSO: sparse, interpretable, distributed ----------------
+res = linear.admm_lasso(Xp, yp, lam=3.0, iters=150)
+support_true = np.abs(w_true) > 1e-9
+support_found = np.abs(np.asarray(res.z)) > 1e-2
+agree = (support_true == support_found).mean()
+comm = 150 * 2 * 2 * K * DIM * 4
+print("2. consensus LASSO via ADMM (§3.1)")
+print(f"   support recovery: {agree:.1%};  wire = {comm} bytes\n")
+
+# ---- 3. asynchronous central server, work-proportional contacts (§5) -------
+probs = schedules.work_proportional_probs(jnp.asarray(sizes, jnp.float32))
+print("3. asynchronous §5 server, contact probs ∝ 1/size:")
+print("   ", np.round(np.asarray(probs), 3))
+lr = 0.1
+
+def F(k, theta):
+    X, y = Xp[k], yp[k]
+    n = jnp.asarray(sizes)[k]
+    g = X.T @ (X @ theta - y) / n
+    return theta - lr * g
+
+sched = schedules.asynchronous(jax.random.key(1), K, 400, probs=probs)
+final, _ = server.run_protocol(jnp.zeros(DIM), F, sched)
+err = float(jnp.linalg.norm(final.theta - jnp.asarray(w_true)))
+led = CommLedger()
+for _ in range(len(sched)):
+    led.record_push(final.theta, "theta")
+    led.record_pull(final.theta, "theta")
+print(f"   after {len(sched)} contacts: ‖θ − w*‖ = {err:.4f}; "
+      f"wire = {led.total_bytes} bytes ({led.total_bytes/raw_bytes:.1%} of raw)")

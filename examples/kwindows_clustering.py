@@ -1,0 +1,55 @@
+"""K-windows walkthrough (paper §4.2): the three phases on synthetic blobs,
+the ℓ∞ k-means connection, and the naive distributed variant's over-merging.
+
+  PYTHONPATH=src python examples/kwindows_clustering.py
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.ml import clustering, kwindows
+
+rng = np.random.default_rng(3)
+centers = np.asarray([(-5.0, -5.0), (0.0, 5.0), (5.0, -2.0)])
+X = jnp.asarray(np.concatenate([rng.normal(size=(70, 2)) * 0.7 + c for c in centers]))
+labels = np.repeat(np.arange(3), 70)
+
+print("=== centralized k-windows, 9 initial windows ===")
+win = kwindows.init_windows(jax.random.key(0), X, 9, r=1.3)
+win = kwindows.phase1_movements(X, win)
+print(f"phase 1 (movements): captured {int(jnp.sum(win.counts))} points")
+win = kwindows.phase2_enlargement(X, win)
+member = kwindows.window_membership(X, win)
+print(f"phase 2 (enlargement): captured {int(jnp.sum(jnp.any(member, 1)))} points")
+win = kwindows.phase3_merging(X, win)
+alive = int(jnp.sum(win.alive))
+print(f"phase 3 (merging): {alive} windows remain (3 blobs)")
+
+assign = kwindows.assign_points(X, win)
+correct = sum(
+    np.bincount(labels[np.asarray(assign) == w]).max()
+    for w in range(9)
+    if (np.asarray(assign) == w).sum() > 0
+)
+captured = int((np.asarray(assign) >= 0).sum())
+print(f"precision {correct/captured:.3f}, recall {captured/len(labels):.3f} "
+      "(paper: high precision from window growth)\n")
+
+print("=== ℓ∞ k-means (the paper's formal link: uniform prior ML) ===")
+C0 = clustering.kmeans_pp_init(jax.random.key(1), X, 3)
+for metric in ("l2", "linf", "l1"):
+    res = clustering.kmeans(X, C0, num_clusters=3, metric=metric)
+    print(f"  {metric:4s}: inertia {float(res.inertia):8.1f}")
+
+print("\n=== naive distributed k-windows ([60]) on CLOSE blobs ===")
+close = jnp.asarray(
+    np.concatenate([rng.normal(size=(70, 2)) * 0.8 + c for c in centers / 3.2])
+)
+win_c = kwindows.kwindows(jax.random.key(2), close, num_windows=6, r=1.2)
+win_d = kwindows.distributed_kwindows(
+    jax.random.key(2), close.reshape(3, 70, 2), num_windows=6, r=1.2
+)
+print(f"centralized merge-by-count: {int(jnp.sum(win_c.alive))} clusters")
+print(f"naive merge-on-any-overlap: {int(jnp.sum(win_d.alive))} clusters "
+      "(the paper's observed over-merging)")

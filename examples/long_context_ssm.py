@@ -1,0 +1,66 @@
+"""Long-context serving with sub-quadratic mixers — why xLSTM/Jamba run the
+``long_500k`` shape: the decode state is O(1) in context length, so cache
+memory and per-token cost stay flat while an attention KV cache grows
+linearly (and its attention reads with it).
+
+This demo serves a reduced xLSTM and a reduced sliding-window dense model
+side by side, growing the context, and prints per-token decode state sizes.
+
+  PYTHONPATH=src python examples/long_context_ssm.py
+"""
+
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config
+from repro.models import transformer as tf
+
+
+def state_bytes(cache) -> int:
+    return sum(x.size * x.dtype.itemsize for x in jax.tree.leaves(cache))
+
+
+def decode_n(cfg, params, cache, n, key):
+    decode = jax.jit(lambda p, t, c: tf.decode_step(p, cfg, t, c))
+    tok = jax.random.randint(key, (1, 1), 0, cfg.vocab_size)
+    for _ in range(n):
+        logits, cache = decode(params, tok, cache)
+        tok = jnp.argmax(logits[:, :, : cfg.vocab_size], -1).astype(jnp.int32)
+    jax.block_until_ready(tok)
+    return cache
+
+
+def main():
+    contexts = [256, 1024, 4096]
+
+    print("=== xLSTM (O(1) state) vs sliding-window dense (O(window)) ===\n")
+    for name, cfg in [
+        ("xlstm-125m (reduced)", get_config("xlstm-125m").reduced()),
+        (
+            "tinyllama sw=256 (reduced)",
+            get_config("tinyllama-1.1b").reduced().replace(sliding_window=256),
+        ),
+    ]:
+        params = tf.init_params(jax.random.key(0), cfg)
+        print(name)
+        for ctx in contexts:
+            cache = tf.init_cache(cfg, 1, ctx, jnp.float32)
+            t0 = time.perf_counter()
+            cache = decode_n(cfg, params, cache, 8, jax.random.key(1))
+            dt = (time.perf_counter() - t0) / 8 * 1e3
+            print(
+                f"  ctx {ctx:6d}: decode state {state_bytes(cache)/2**20:7.2f} MiB,"
+                f"  {dt:6.1f} ms/token (CPU, incl. dispatch)"
+            )
+        print()
+
+    print("note: the xLSTM state is context-INDEPENDENT (matrix memory C per")
+    print("head); the attention cache grows with ctx — at 524k context the")
+    print("full-attention variant needs a sequence-sharded cache (see the")
+    print("long_500k dry-runs) while SSM state still fits in one core's VMEM.")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,58 @@
+"""Architecture registry: the 10 assigned configs + input shapes."""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.models.config import ModelConfig
+
+_ARCH_MODULES = {
+    "qwen2-vl-2b": "repro.configs.qwen2_vl_2b",
+    "whisper-base": "repro.configs.whisper_base",
+    "minicpm3-4b": "repro.configs.minicpm3_4b",
+    "deepseek-v3-671b": "repro.configs.deepseek_v3_671b",
+    "deepseek-67b": "repro.configs.deepseek_67b",
+    "qwen2-1.5b": "repro.configs.qwen2_1_5b",
+    "xlstm-125m": "repro.configs.xlstm_125m",
+    "tinyllama-1.1b": "repro.configs.tinyllama_1_1b",
+    "jamba-1.5-large-398b": "repro.configs.jamba_1_5_large_398b",
+    "olmoe-1b-7b": "repro.configs.olmoe_1b_7b",
+}
+
+ARCHS = tuple(_ARCH_MODULES.keys())
+
+
+def get_config(name: str) -> ModelConfig:
+    import importlib
+
+    if name not in _ARCH_MODULES:
+        raise KeyError(f"unknown arch {name!r}; known: {sorted(_ARCH_MODULES)}")
+    return importlib.import_module(_ARCH_MODULES[name]).CONFIG
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # train | prefill | decode
+
+
+SHAPES = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+
+def applicable(arch: str, shape: str) -> tuple[bool, str]:
+    """(runs?, reason) — the DESIGN.md §Arch-applicability skip table."""
+    cfg = get_config(arch)
+    if shape == "long_500k":
+        if cfg.family == "audio":
+            return False, "enc-dec ASR: 448-token decoder context by construction"
+        if cfg.family in ("dense", "moe", "vlm"):
+            return True, "sliding-window attention variant (window 8192)"
+        return True, "sub-quadratic decode state (SSM/hybrid)"
+    return True, ""

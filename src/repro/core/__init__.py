@@ -1,0 +1,44 @@
+"""The paper's primary contribution (Ionescu 2015, §5 + §3.1 machinery):
+
+* ``server``      — central information server with θ_{t-1} handoff
+* ``schedules``   — round-robin / asynchronous contact schedules
+* ``staleness``   — the §5 algorithm as a TPU-native bounded-staleness trainer
+* ``admm``        — global-variable-consensus ADMM (Douglas-Rachford)
+* ``allreduce``   — server-simulated + native allreduce, comm accounting
+* ``compression`` — low-communication-overhead push (top-k / rand-k / int8 / EF)
+"""
+
+from repro.core import admm, allreduce, compression, schedules, server, staleness
+from repro.core.server import ServerState, contact, init_server, pull, run_protocol
+from repro.core.schedules import asynchronous, round_robin, work_proportional_probs
+from repro.core.staleness import (
+    AsyncSGDState,
+    DelayLine,
+    delay_init,
+    delay_push_pop,
+    make_stale_update,
+    staleness_bound_lr,
+)
+
+__all__ = [
+    "admm",
+    "allreduce",
+    "compression",
+    "schedules",
+    "server",
+    "staleness",
+    "ServerState",
+    "contact",
+    "init_server",
+    "pull",
+    "run_protocol",
+    "asynchronous",
+    "round_robin",
+    "work_proportional_probs",
+    "AsyncSGDState",
+    "DelayLine",
+    "delay_init",
+    "delay_push_pop",
+    "make_stale_update",
+    "staleness_bound_lr",
+]

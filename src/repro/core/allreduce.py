@@ -1,0 +1,100 @@
+"""Allreduce primitives + byte-accurate communication accounting.
+
+The paper (§3.1) observes that the MPI ``Allreduce`` used by [47] and [5]
+"can be simulated by a two step communication with a central server, first
+each node sends to the server the current local estimate θ^(k) and then all
+of the nodes receive back from the server the optimal global parameter θ".
+
+On TPU we invert the observation: ``jax.lax.psum`` over mesh axes *is* the
+central server in its exact-aggregation limit.  Both forms are provided:
+
+* ``psum_allreduce`` — native collective, for use inside ``shard_map``.
+* ``server_allreduce`` — the literal two-phase simulation over a stacked
+  node axis (gather-to-server + broadcast), used by the classical ``ml/``
+  algorithms which model K logical nodes on one host.
+
+``CommLedger`` counts bytes moved under the paper's client-server cost model
+(uplink: K·|θ| to the server, downlink: K·|θ| back), so every surveyed
+algorithm can report its communication overhead — the paper's recurring
+evaluation axis.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.utils.tree import tree_bytes
+
+PyTree = Any
+
+
+def psum_allreduce(tree: PyTree, axis_name: str | tuple[str, ...]) -> PyTree:
+    """Native TPU allreduce over one or more mesh axes (inside shard_map/pjit)."""
+    return jax.tree.map(lambda x: jax.lax.psum(x, axis_name), tree)
+
+
+def pmean_allreduce(tree: PyTree, axis_name: str | tuple[str, ...]) -> PyTree:
+    return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
+
+
+def server_allreduce(stacked: PyTree, op: str = "sum") -> PyTree:
+    """Two-phase central-server Allreduce over a leading node axis.
+
+    ``stacked`` holds each node's local estimate along axis 0 (K nodes).
+    Phase 1 (push): the server receives all K estimates — modeled by the
+    stacked layout itself.  Phase 2 (aggregate + broadcast): the server
+    reduces and every node receives the same global value.  Returns the
+    aggregated tree (one copy; broadcasting back is a no-op on one host).
+    """
+    if op == "sum":
+        return jax.tree.map(lambda x: jnp.sum(x, axis=0), stacked)
+    if op == "mean":
+        return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
+    if op == "max":
+        return jax.tree.map(lambda x: jnp.max(x, axis=0), stacked)
+    raise ValueError(f"unknown op: {op!r}")
+
+
+@dataclass
+class CommLedger:
+    """Byte accounting under the paper's strict client-server cost model."""
+
+    uplink_bytes: int = 0
+    downlink_bytes: int = 0
+    rounds: int = 0
+    events: list = field(default_factory=list)
+
+    def record_allreduce(self, tree: PyTree, num_nodes: int, tag: str = "") -> None:
+        """One Allreduce = K pushes of |θ| + K pulls of |θ|."""
+        nbytes = tree_bytes(tree)
+        self.uplink_bytes += num_nodes * nbytes
+        self.downlink_bytes += num_nodes * nbytes
+        self.rounds += 1
+        self.events.append(("allreduce", tag, num_nodes * nbytes * 2))
+
+    def record_push(self, tree: PyTree, tag: str = "") -> None:
+        """One node→server push (the §5 protocol is push+pull per contact)."""
+        nbytes = tree_bytes(tree)
+        self.uplink_bytes += nbytes
+        self.events.append(("push", tag, nbytes))
+
+    def record_pull(self, tree: PyTree, tag: str = "") -> None:
+        nbytes = tree_bytes(tree)
+        self.downlink_bytes += nbytes
+        self.events.append(("pull", tag, nbytes))
+
+    @property
+    def total_bytes(self) -> int:
+        return self.uplink_bytes + self.downlink_bytes
+
+    def summary(self) -> dict:
+        return {
+            "uplink_bytes": self.uplink_bytes,
+            "downlink_bytes": self.downlink_bytes,
+            "total_bytes": self.total_bytes,
+            "rounds": self.rounds,
+        }

@@ -1,0 +1,76 @@
+"""Contact schedules for the §5 central-information-server algorithm.
+
+The paper considers two regimes:
+
+* **Round-robin** — ``S_t = t mod K``.  "If F(·) is a first order method
+  based on a convex objective this is equivalent to a mini-batch gradient
+  descent algorithm."
+* **Asynchronous** — ``S_t ~ S`` i.i.d. over ``{1..K}`` with
+  ``p(S = i) > 0`` for all i ("there exists no node that will never contact
+  the server"), under which the paper argues convergence is preserved with
+  the *same rate* as the non-distributed stochastic mini-batch algorithm.
+  The contact distribution is allowed to be non-uniform — "the actual
+  distribution S is dependent on the local datasets, e.g. number of
+  examples" — so we expose per-node probabilities.
+
+Schedules are plain int32 arrays so they can drive ``jax.lax.scan`` in
+``repro.core.server.run_protocol``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def round_robin(num_nodes: int, num_rounds: int) -> jnp.ndarray:
+    """``S_t = t mod K`` for ``num_rounds`` full passes over the K nodes."""
+    return jnp.tile(jnp.arange(num_nodes, dtype=jnp.int32), num_rounds)
+
+
+def asynchronous(
+    key: jax.Array,
+    num_nodes: int,
+    num_contacts: int,
+    probs: jnp.ndarray | None = None,
+) -> jnp.ndarray:
+    """I.i.d. random contacts ``S_t ~ S``; ``probs`` defaults to uniform.
+
+    Raises if any node has zero probability — the paper's convergence
+    condition requires ``p(S=i) > 0`` for every node.
+    """
+    if probs is None:
+        probs = jnp.full((num_nodes,), 1.0 / num_nodes)
+    probs = jnp.asarray(probs, dtype=jnp.float32)
+    if probs.shape != (num_nodes,):
+        raise ValueError(f"probs must have shape ({num_nodes},), got {probs.shape}")
+    # Static check where possible (concrete arrays only).
+    try:
+        if bool(jnp.any(probs <= 0.0)):
+            raise ValueError(
+                "p(S=i) must be > 0 for every node (paper §5 convergence condition)"
+            )
+    except jax.errors.TracerBoolConversionError:  # pragma: no cover
+        pass
+    return jax.random.categorical(
+        key, jnp.log(probs), shape=(num_contacts,)
+    ).astype(jnp.int32)
+
+
+def work_proportional_probs(shard_sizes: jnp.ndarray) -> jnp.ndarray:
+    """Contact probabilities ∝ 1 / shard size.
+
+    The paper notes the contact distribution is driven by per-node compute
+    time, which "at least" scales with the number of local examples: a node
+    with less data finishes sooner and contacts the server more often.
+    """
+    sizes = jnp.asarray(shard_sizes, dtype=jnp.float32)
+    rates = 1.0 / jnp.maximum(sizes, 1.0)
+    return rates / jnp.sum(rates)
+
+
+def coverage(schedule: jnp.ndarray, num_nodes: int) -> jnp.ndarray:
+    """Fraction of nodes that appear at least once — sanity diagnostic for
+    the paper's p(S=i)>0 condition on a *finite* sample."""
+    hits = jnp.zeros((num_nodes,), dtype=jnp.int32).at[schedule].set(1)
+    return jnp.mean(hits.astype(jnp.float32))

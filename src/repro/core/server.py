@@ -1,0 +1,121 @@
+"""The paper's §5 central-information-server algorithm.
+
+    "We propose the following algorithm in which the server in iteration t
+     when a node would push a computed parameter θ the server would record
+     this as θ_t ← θ and would send to the node the parameter θ_{t-1} from
+     memory.  Any machine learning algorithm F(·) chosen to run on each of
+     the nodes would be effectively seen as running in isolation on the
+     local dataset [...] ending with an equivalent update of the form
+     θ_t ← F^(S_t)(… F^(S_2)(F^(S_1)(θ_0)) …)."
+
+Two handoff semantics are implemented, because the paper's prose describes a
+one-step-stale protocol while its equivalence claim states a strictly
+sequential composition:
+
+* ``handoff="sequential"`` — the node that pushes receives the *current*
+  server value (i.e. its own push, which includes every predecessor's work);
+  the global trajectory is exactly ``θ_t = F^(S_t)(θ_{t-1})``.  This is the
+  semantics under which the paper's round-robin ≡ mini-batch-GD equivalence
+  holds *bit-exactly* (tested in ``tests/test_core_server.py``).
+* ``handoff="stale"`` — the literal protocol text: the pusher receives
+  ``θ_{t-1}`` (the previous contact's value) and therefore next computes on a
+  one-step-stale parameter while its own push is handed to the successor.
+  This is the pipelined variant that lets node computation overlap.
+
+Everything is purely functional: ``ServerState`` is a pytree, ``contact`` is
+jit-able, and the whole multi-round protocol can sit inside ``jax.lax.scan``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class ServerState(NamedTuple):
+    """State of the central information server.
+
+    ``theta`` is θ_t (the most recent push); ``theta_prev`` is θ_{t-1}.
+    ``t`` counts contacts (pushes).
+    """
+
+    theta: PyTree
+    theta_prev: PyTree
+    t: jnp.ndarray  # scalar int32
+
+
+def init_server(theta_init: PyTree) -> ServerState:
+    """θ_0 (central server) is initialized to θ_init (paper §5)."""
+    return ServerState(
+        theta=theta_init,
+        theta_prev=theta_init,
+        t=jnp.asarray(0, dtype=jnp.int32),
+    )
+
+
+def contact(
+    state: ServerState, theta_pushed: PyTree, *, handoff: str = "sequential"
+) -> tuple[ServerState, PyTree]:
+    """One node contact: push ``theta_pushed``, receive the handoff parameter.
+
+    Returns ``(new_state, theta_received)``.
+    """
+    new_state = ServerState(
+        theta=theta_pushed,
+        theta_prev=state.theta,
+        t=state.t + 1,
+    )
+    if handoff == "sequential":
+        received = new_state.theta  # θ_t — build on your own (recorded) push
+    elif handoff == "stale":
+        received = new_state.theta_prev  # θ_{t-1} — the literal protocol
+    else:  # pragma: no cover - config error
+        raise ValueError(f"unknown handoff: {handoff!r}")
+    return new_state, received
+
+
+def pull(state: ServerState) -> PyTree:
+    """A pure pull (first contact of a node before it has computed anything)."""
+    return state.theta
+
+
+def run_protocol(
+    theta_init: PyTree,
+    local_updates: Callable[[jnp.ndarray, PyTree], PyTree],
+    schedule: jnp.ndarray,
+    *,
+    handoff: str = "sequential",
+) -> tuple[ServerState, PyTree]:
+    """Run the full §5 protocol under a contact ``schedule``.
+
+    Args:
+      theta_init: θ_0.
+      local_updates: ``F(k, θ) -> θ_new`` — the per-node learning method
+        ``F^(k)`` applied to its local dataset.  Must be traceable with a
+        traced node index ``k`` (use ``jax.lax.switch`` or gather-style data
+        selection inside).
+      schedule: int32 array of node indices ``S_1 .. S_T`` (the contact
+        order).  Round-robin or random — see ``repro.core.schedules``.
+      handoff: see module docstring.
+
+    Returns ``(final_server_state, per_contact_thetas)`` where the second
+    element stacks the handed-back parameters (useful for trajectory
+    analysis / convergence plots).
+    """
+
+    def step(state: ServerState, k):
+        # The contacting node computes on the parameter it last received.
+        # Under "sequential" handoff that is the server's current θ; under
+        # "stale" handoff it is θ_{t-1}.
+        theta_start = state.theta if handoff == "sequential" else state.theta_prev
+        theta_new = local_updates(k, theta_start)
+        state, received = contact(state, theta_new, handoff=handoff)
+        return state, received
+
+    state0 = init_server(theta_init)
+    final_state, trajectory = jax.lax.scan(step, state0, schedule)
+    return final_state, trajectory

@@ -1,0 +1,105 @@
+"""Stale-gradient training — the §5 algorithm mapped to TPU SPMD.
+
+On a TPU pod there is no literal server; the paper's protocol becomes a
+*bounded-staleness delay line* carried in the train state:
+
+* the "push" is the data-parallel gradient (aggregated by ``psum`` — the
+  server's record step);
+* the "θ_{t-1} handoff" generalizes to applying the gradient that was pushed
+  ``D`` steps ago (``D = 0`` → synchronous mini-batch GD, the paper's
+  round-robin limit; ``D = 1`` → the paper's literal one-step-stale
+  protocol; larger ``D`` models deeper pipelining / slower clients).
+
+This keeps the whole thing one deterministic SPMD program — the functional
+equivalent of asynchrony, preserving the convergence-relevant structure
+(composition of local updates with bounded staleness) without wall-clock
+nondeterminism.  See DESIGN.md §2.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class DelayLine(NamedTuple):
+    """FIFO of the last ``D`` pushed gradients (leaves stacked on axis 0)."""
+
+    buffer: PyTree  # each leaf: (D, *leaf_shape)
+    step: jnp.ndarray
+
+
+def delay_init(params: PyTree, depth: int) -> DelayLine:
+    if depth < 1:
+        raise ValueError("use depth >= 1; depth 0 means 'no delay line at all'")
+    buf = jax.tree.map(
+        lambda p: jnp.zeros((depth,) + p.shape, dtype=p.dtype), params
+    )
+    return DelayLine(buffer=buf, step=jnp.asarray(0, jnp.int32))
+
+
+def delay_push_pop(state: DelayLine, grads: PyTree) -> tuple[DelayLine, PyTree]:
+    """Push fresh ``grads``, pop the D-step-old gradient to apply.
+
+    For the first D steps the popped gradient is the zero warm-up content of
+    the buffer — matching an async cluster where the first replies have not
+    yet arrived.
+    """
+    popped = jax.tree.map(lambda b: b[0], state.buffer)
+    new_buf = jax.tree.map(
+        lambda b, g: jnp.concatenate([b[1:], g[None]], axis=0),
+        state.buffer,
+        grads,
+    )
+    return DelayLine(buffer=new_buf, step=state.step + 1), popped
+
+
+class AsyncSGDState(NamedTuple):
+    params: PyTree
+    delay: DelayLine | None
+    opt_state: Any
+
+
+def make_stale_update(
+    optimizer_update: Callable[[PyTree, Any, PyTree], tuple[PyTree, Any]],
+    *,
+    staleness: int = 0,
+):
+    """Wrap an optimizer-update fn with a staleness-D delay line.
+
+    ``optimizer_update(grads, opt_state, params) -> (new_params, new_opt_state)``.
+
+    Returns ``(init_fn, update_fn)`` where ``update_fn(state, grads)`` applies
+    the (possibly stale) gradient.  With ``staleness == 0`` this is exactly
+    the synchronous optimizer (paper's round-robin ≡ mini-batch GD limit).
+    """
+
+    def init_fn(params: PyTree, opt_state: Any) -> AsyncSGDState:
+        delay = delay_init(params, staleness) if staleness > 0 else None
+        return AsyncSGDState(params=params, delay=delay, opt_state=opt_state)
+
+    def update_fn(state: AsyncSGDState, grads: PyTree) -> AsyncSGDState:
+        if staleness > 0:
+            delay, grads_applied = delay_push_pop(state.delay, grads)
+        else:
+            delay, grads_applied = None, grads
+        new_params, new_opt = optimizer_update(
+            grads_applied, state.opt_state, state.params
+        )
+        return AsyncSGDState(params=new_params, delay=delay, opt_state=new_opt)
+
+    return init_fn, update_fn
+
+
+def staleness_bound_lr(base_lr: float, staleness: int) -> float:
+    """Heuristic staleness-compensated learning rate.
+
+    The classic async-SGD analysis (and the paper's cited Downpour/[19]
+    adaptive procedure) requires the step size to shrink with the maximum
+    delay; ``lr / (1 + D)`` is the standard conservative choice.
+    """
+    return base_lr / (1.0 + float(staleness))

@@ -1,0 +1,7 @@
+from repro.data.pipeline import (
+    make_feature_shards,
+    synthetic_lm_batches,
+    synthetic_lm_batch,
+)
+
+__all__ = ["make_feature_shards", "synthetic_lm_batches", "synthetic_lm_batch"]

@@ -1,0 +1,113 @@
+"""Deterministic synthetic data pipelines.
+
+Two kinds of data feed the framework:
+
+* **LM token streams** for the assigned architectures — a seeded Markov-ish
+  synthetic language (token t+1 depends on token t through a fixed affine
+  map plus noise) so that models have actual structure to learn and loss
+  curves are meaningful, while remaining fully offline and reproducible.
+* **Feature shards** for the classical `ml/` algorithms — per-node
+  (X_k, y_k) with controllable heterogeneity (the paper's homogeneous vs
+  heterogeneous node-distribution distinction, §4.1).
+
+Sharding: batches are generated per data-parallel group from a key folded
+with the shard index — the same construction a multi-host input pipeline
+would use (each host generates only its slice).
+"""
+
+from __future__ import annotations
+
+from typing import Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def synthetic_lm_batch(
+    key: jax.Array,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    structure: int = 7,
+) -> dict:
+    """One (tokens, labels) LM batch with learnable bigram structure:
+    ``tok_{t+1} = (structure * tok_t + noise_t) % vocab`` with sparse noise.
+    """
+    k1, k2, k3 = jax.random.split(key, 3)
+    first = jax.random.randint(k1, (batch, 1), 0, vocab)
+    noise = jax.random.randint(k2, (batch, seq), 0, vocab)
+    keep = jax.random.bernoulli(k3, 0.1, (batch, seq))
+
+    def step(tok, inputs):
+        nz, kp = inputs
+        nxt = jnp.where(kp, nz, (structure * tok + 1) % vocab)
+        return nxt, nxt
+
+    _, toks = jax.lax.scan(
+        step, first[:, 0], (noise.T, keep.T)
+    )
+    tokens = toks.T  # (batch, seq)
+    labels = jnp.roll(tokens, -1, axis=1)
+    return {"tokens": tokens, "labels": labels}
+
+
+def synthetic_lm_batches(
+    seed: int,
+    batch: int,
+    seq: int,
+    vocab: int,
+    *,
+    shard_index: int = 0,
+    num_shards: int = 1,
+) -> Iterator[dict]:
+    """Infinite deterministic stream; each data shard draws disjoint keys."""
+    assert batch % num_shards == 0
+    local = batch // num_shards
+    step = 0
+    while True:
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(seed), step), shard_index
+        )
+        yield synthetic_lm_batch(key, local, seq, vocab)
+        step += 1
+
+
+def make_feature_shards(
+    seed: int,
+    num_nodes: int,
+    per_node: int,
+    dim: int,
+    *,
+    task: str = "regression",
+    heterogeneity: float = 0.0,
+    noise: float = 0.05,
+):
+    """Per-node (X, y) shards for the classical algorithms.
+
+    ``heterogeneity`` shifts each node's feature distribution by a
+    node-specific offset of that magnitude — 0.0 reproduces the paper's
+    homogeneous case (each shard an i.i.d. sample of the same distribution),
+    larger values the heterogeneous case that breaks naive aggregation.
+    """
+    rng = np.random.default_rng(seed)
+    w_true = rng.normal(size=(dim,))
+    Xs, ys = [], []
+    for k in range(num_nodes):
+        offset = heterogeneity * rng.normal(size=(dim,))
+        X = rng.normal(size=(per_node, dim)) + offset
+        if task == "regression":
+            y = X @ w_true + noise * rng.normal(size=(per_node,))
+        elif task == "classification":
+            y = np.sign(X @ w_true + noise * rng.normal(size=(per_node,)))
+            y[y == 0] = 1.0
+        else:
+            raise ValueError(task)
+        Xs.append(X)
+        ys.append(y)
+    return (
+        jnp.asarray(np.stack(Xs)),
+        jnp.asarray(np.stack(ys)),
+        jnp.asarray(w_true),
+    )

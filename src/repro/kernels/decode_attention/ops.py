@@ -1,0 +1,45 @@
+"""Jit'd wrapper for the decode-attention kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import NEG_INF, decode_attention_fwd
+
+
+@partial(jax.jit, static_argnames=("bk", "interpret"))
+def decode_attention(
+    q: jnp.ndarray,  # (B, Hq, D)
+    k: jnp.ndarray,  # (B, S, Hkv, D)
+    v: jnp.ndarray,
+    valid_len: jnp.ndarray,  # (B,) or scalar
+    *,
+    bk: int = 512,
+    interpret: bool | None = None,
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    bk_eff = min(bk, S)
+
+    pad = (-S) % bk_eff
+    if pad:
+        widths = [(0, 0)] * 4
+        widths[1] = (0, pad)
+        k = jnp.pad(k, widths)
+        v = jnp.pad(v, widths)
+    Sp = S + pad
+
+    vl = jnp.broadcast_to(jnp.asarray(valid_len).reshape(-1), (B,))
+    bias = jnp.where(jnp.arange(Sp)[None, :] < vl[:, None], 0.0, NEG_INF).astype(
+        jnp.float32
+    )
+
+    qg = q.reshape(B, Hkv, G, D)
+    out = decode_attention_fwd(qg, k, v, bias, bk=bk_eff, interpret=interpret)
+    return out.reshape(B, Hq, D)

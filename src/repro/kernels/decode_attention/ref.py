@@ -1,0 +1,26 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(
+    q: jnp.ndarray,  # (B, Hq, D) — one query token per batch row
+    k: jnp.ndarray,  # (B, S, Hkv, D) — cache
+    v: jnp.ndarray,  # (B, S, Hkv, D)
+    valid_len: jnp.ndarray | int,  # keys < valid_len attend
+) -> jnp.ndarray:
+    B, Hq, D = q.shape
+    S, Hkv = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    qg = q.reshape(B, Hkv, G, D)
+    logits = jnp.einsum(
+        "bhgd,bshd->bhgs", qg.astype(jnp.float32), k.astype(jnp.float32)
+    ) * (D ** -0.5)
+    mask = jnp.arange(S)[None, :] < jnp.asarray(valid_len).reshape(-1, 1)  # (B, S)
+    logits = jnp.where(mask[:, None, None, :], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgs,bshd->bhgd", probs, v.astype(jnp.float32))
+    return out.reshape(B, Hq, D).astype(q.dtype)

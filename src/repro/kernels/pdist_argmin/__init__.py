@@ -1,0 +1,3 @@
+from repro.kernels.pdist_argmin import ops, ref
+
+__all__ = ["ops", "ref"]

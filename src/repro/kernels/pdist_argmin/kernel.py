@@ -1,0 +1,66 @@
+"""Pallas TPU nearest-centroid kernel (k-means / k-windows E-step).
+
+Design: the centroid matrix (K, d) is small enough to stay VMEM-resident
+across the whole grid (K ≤ 1024, d ≤ 512 → ≤ 2 MB); point blocks (bn, d)
+stream HBM→VMEM.  For ℓ2 the cross term runs on the MXU
+(‖x−c‖² = ‖x‖² − 2x·cᵀ + ‖c‖²); ℓ1/ℓ∞ are VPU compare/reduce over a
+(bn, K, d) tile — the reason bn is kept at 128.  Outputs are the argmin
+index and min distance per point (two (bn,) rows).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _pdist_kernel(x_ref, c_ref, idx_ref, dist_ref, *, metric: str):
+    x = x_ref[...].astype(jnp.float32)  # (bn, d)
+    c = c_ref[...].astype(jnp.float32)  # (K, d)
+    if metric == "l2":
+        x2 = jnp.sum(x * x, axis=1, keepdims=True)  # (bn, 1)
+        c2 = jnp.sum(c * c, axis=1)[None, :]  # (1, K)
+        xc = jax.lax.dot_general(
+            x, c, (((1,), (1,)), ((), ())), preferred_element_type=jnp.float32
+        )  # MXU
+        d = x2 - 2.0 * xc + c2
+        d = jnp.maximum(d, 0.0)
+    else:
+        diff = jnp.abs(x[:, None, :] - c[None, :, :])  # (bn, K, d) VPU tile
+        d = jnp.sum(diff, axis=-1) if metric == "l1" else jnp.max(diff, axis=-1)
+    idx_ref[...] = jnp.argmin(d, axis=1).astype(jnp.int32)
+    dist_ref[...] = jnp.min(d, axis=1)
+
+
+def pdist_argmin_fwd(
+    X: jnp.ndarray,  # (Np, d) — pre-padded to bn multiple
+    C: jnp.ndarray,  # (K, d)
+    *,
+    metric: str,
+    bn: int = 128,
+    interpret: bool = True,
+):
+    Np, d = X.shape
+    K = C.shape[0]
+    grid = (Np // bn,)
+    kernel = functools.partial(_pdist_kernel, metric=metric)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bn, d), lambda i: (i, 0)),
+            pl.BlockSpec((K, d), lambda i: (0, 0)),  # centroids VMEM-resident
+        ],
+        out_specs=[
+            pl.BlockSpec((bn,), lambda i: (i,)),
+            pl.BlockSpec((bn,), lambda i: (i,)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((Np,), jnp.int32),
+            jax.ShapeDtypeStruct((Np,), jnp.float32),
+        ],
+        interpret=interpret,
+    )(X, C)

@@ -1,0 +1,33 @@
+"""Jit'd wrapper for the nearest-centroid kernel."""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.pdist_argmin.kernel import pdist_argmin_fwd
+
+
+@partial(jax.jit, static_argnames=("metric", "bn", "interpret"))
+def pdist_argmin(
+    X: jnp.ndarray,
+    C: jnp.ndarray,
+    *,
+    metric: str = "l2",
+    bn: int = 128,
+    interpret: bool | None = None,
+):
+    """Returns (assignments (N,) int32, min distance (N,) f32).
+
+    ℓ2 distances are squared (argmin-equivalent, matches the oracle).
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    N, d = X.shape
+    bn_eff = min(bn, max(8, N))
+    pad = (-N) % bn_eff
+    Xp = jnp.pad(X, ((0, pad), (0, 0))) if pad else X
+    idx, dist = pdist_argmin_fwd(Xp, C, metric=metric, bn=bn_eff, interpret=interpret)
+    return idx[:N], dist[:N]

@@ -1,0 +1,18 @@
+"""Pure-jnp oracle: nearest-centroid assignment under ℓ1/ℓ2/ℓ∞."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def pdist_argmin_ref(X: jnp.ndarray, C: jnp.ndarray, metric: str = "l2"):
+    diff = X[:, None, :].astype(jnp.float32) - C[None, :, :].astype(jnp.float32)
+    if metric == "l2":
+        d = jnp.sum(diff * diff, axis=-1)  # squared — same argmin
+    elif metric == "l1":
+        d = jnp.sum(jnp.abs(diff), axis=-1)
+    elif metric == "linf":
+        d = jnp.max(jnp.abs(diff), axis=-1)
+    else:
+        raise ValueError(metric)
+    return jnp.argmin(d, axis=1).astype(jnp.int32), jnp.min(d, axis=1)

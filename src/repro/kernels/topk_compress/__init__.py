@@ -1,0 +1,3 @@
+from repro.kernels.topk_compress import ops, ref
+
+__all__ = ["ops", "ref"]

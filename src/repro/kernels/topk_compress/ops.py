@@ -1,0 +1,45 @@
+"""Top-k sparsification: batched-candidate bisection + streaming mask.
+
+Three rounds of 128-candidate evaluation bracket the k-th magnitude to
+|range|/128³ relative precision, then the exact in-bracket threshold is
+chosen from the counts — matching exact top-k whenever magnitudes are
+distinct at the bracket resolution (ties keep ≥ k entries, conservative).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.topk_compress.kernel import NCAND, apply_threshold, count_ge
+
+
+@partial(jax.jit, static_argnames=("k", "rounds", "interpret"))
+def topk_sparsify(
+    x: jnp.ndarray, k: int, *, rounds: int = 3, interpret: bool | None = None
+) -> jnp.ndarray:
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    k = max(1, min(int(k), x.size))
+
+    hi = jnp.max(jnp.abs(x)).astype(jnp.float32) * (1.0 + 1e-6) + 1e-30
+    lo = jnp.zeros((), jnp.float32) + 1e-30
+
+    def round_(carry, _):
+        lo, hi = carry
+        cand = lo + (hi - lo) * (jnp.arange(1, NCAND + 1) / NCAND)
+        counts = count_ge(x, cand, interpret=interpret)  # decreasing in cand
+        # largest candidate with count >= k  → new lo; its successor → new hi
+        ok = counts >= k
+        j = jnp.maximum(jnp.sum(ok.astype(jnp.int32)) - 1, 0)  # last True
+        new_lo = jnp.where(ok[0], cand[j], lo)
+        new_hi = jnp.where(
+            j + 1 < NCAND, cand[jnp.minimum(j + 1, NCAND - 1)], hi
+        )
+        new_hi = jnp.where(ok[0], new_hi, cand[0])
+        return (new_lo, new_hi), None
+
+    (lo, hi), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
+    return apply_threshold(x, lo, interpret=interpret)

@@ -1,0 +1,13 @@
+"""Pure-jnp oracle: exact top-k magnitude sparsification."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def topk_sparsify_ref(x: jnp.ndarray, k: int) -> jnp.ndarray:
+    flat = jnp.abs(x.reshape(-1))
+    k = max(1, min(int(k), flat.size))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return x * (jnp.abs(x) >= thresh).astype(x.dtype)

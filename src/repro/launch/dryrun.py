@@ -1,0 +1,234 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: prove every (arch × shape × mesh) lowers and compiles.
+
+For each combination this lowers the appropriate step (train_step /
+prefill_step / serve_step) against ``input_specs`` ShapeDtypeStructs with
+the production sharding specs, compiles it, and records:
+
+* ``memory_analysis``   — per-device HBM (proves it fits / doesn't);
+* ``cost_analysis``     — raw per-device FLOPs + bytes (NOTE: XLA counts
+  scan bodies once; kept for reference only);
+* probe-corrected costs — trip-count-correct FLOPs / bytes / collective
+  bytes via ``telemetry.costprobe`` (unrolled probe lowers + extrapolation);
+* the three roofline terms + dominant bottleneck (telemetry.roofline).
+
+Results land in ``experiments/dryrun/<arch>__<shape>__<mesh>[__tag].json``.
+
+NOTE the two lines above MUST stay the first statements in this module:
+jax fixes the device count at first initialization.
+"""
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import SHAPES, applicable
+from repro.launch.mesh import make_production_mesh
+from repro.launch import specs as S
+from repro.sharding.rules import set_mesh_context
+from repro.telemetry import hlo as hlo_lib
+from repro.telemetry import roofline as rl
+from repro.telemetry.costprobe import probe_costs
+
+
+def run_one(
+    arch: str,
+    shape_name: str,
+    *,
+    multi_pod: bool = False,
+    mla_absorb: bool = False,
+    remat_override: str | None = None,
+    microbatches: int | None = None,
+    strategy: str = "tp",
+    probes: bool = True,
+    extra_tag: str = "",
+    seed: int = 0,
+) -> dict:
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.size
+    cfg = S.shape_adapted_config(arch, shape_name)
+    if remat_override is not None:
+        cfg = cfg.replace(remat_policy=remat_override)
+
+    ok, why = applicable(arch, shape_name)
+    if not ok:
+        return {
+            "arch": arch, "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "skipped", "reason": why,
+        }
+
+    t0 = time.time()
+    set_mesh_context(
+        S.make_mesh_context_for(mesh, cfg, shape.global_batch, strategy=strategy)
+    )
+    if microbatches is None:
+        microbatches = 4 if shape.kind == "train" else 1
+    try:
+        jitted, args, params_shape = S.build_jitted(
+            cfg, shape.kind, mesh, shape.global_batch, shape.seq_len,
+            mla_absorb=mla_absorb, microbatches=microbatches,
+            strategy=strategy, seed=seed,
+        )
+        lowered = jitted.lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+        mem = compiled.memory_analysis()
+        cost = compiled.cost_analysis()
+        if isinstance(cost, (list, tuple)):
+            cost = cost[0]
+        coll_raw = hlo_lib.collective_stats(compiled.as_text())
+        set_mesh_context(None)
+
+        # --- trip-count-correct costs (probe lowering)
+        if probes:
+            t_p = time.time()
+            pc = probe_costs(
+                cfg, shape.kind, mesh, shape.global_batch, shape.seq_len,
+                mla_absorb=mla_absorb, strategy=strategy,
+            )
+            t_probe = time.time() - t_p
+        else:
+            pc = {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes": float(cost.get("bytes accessed", 0.0)),
+                "coll": float(coll_raw.get("total_bytes", 0)),
+                "n_probes": 0,
+            }
+            t_probe = 0.0
+
+        # model flops
+        active = S.count_active_params(cfg, params_shape)
+        if shape.kind == "train":
+            tokens = shape.global_batch * (
+                min(shape.seq_len, S.DECODER_CTX)
+                if cfg.is_encoder_decoder
+                else shape.seq_len
+            )
+            mf = rl.model_flops_train(active, tokens)
+        elif shape.kind == "prefill":
+            tokens = shape.global_batch * (
+                min(shape.seq_len, S.DECODER_CTX)
+                if cfg.is_encoder_decoder
+                else shape.seq_len
+            )
+            mf = rl.model_flops_decode(active, tokens)
+        else:
+            mf = rl.model_flops_decode(active, shape.global_batch)
+
+        roof = rl.roofline(
+            flops_per_device=pc["flops"],
+            bytes_per_device=pc["bytes"],
+            collective_bytes_per_device=pc["coll"],
+            chips=chips,
+            model_flops=mf,
+        )
+
+        mem_d = {}
+        for attr in (
+            "temp_size_in_bytes",
+            "argument_size_in_bytes",
+            "output_size_in_bytes",
+            "alias_size_in_bytes",
+        ):
+            v = getattr(mem, attr, None)
+            if v is not None:
+                mem_d[attr] = int(v)
+        mem_d["steady_state_bytes"] = (
+            mem_d.get("argument_size_in_bytes", 0)
+            + mem_d.get("temp_size_in_bytes", 0)
+            - mem_d.get("alias_size_in_bytes", 0)
+        )
+
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "chips": chips,
+            "status": "ok",
+            "tag": extra_tag,
+            "kind": shape.kind,
+            "n_params": int(S.count_params(params_shape)),
+            "active_params": float(active),
+            "lower_s": round(t_lower, 2),
+            "compile_s": round(t_compile, 2),
+            "probe_s": round(t_probe, 2),
+            "memory": mem_d,
+            "cost_raw": {
+                "flops": float(cost.get("flops", 0.0)),
+                "bytes_accessed": float(cost.get("bytes accessed", 0.0)),
+            },
+            "cost_corrected": pc,
+            "collectives_raw": coll_raw,
+            "roofline": roof.to_dict(),
+            "config": {
+                "param_dtype": cfg.param_dtype,
+                "remat": cfg.remat_policy,
+                "sliding_window": cfg.sliding_window,
+                "mla_absorb": mla_absorb,
+                "microbatches": microbatches,
+                "strategy": strategy,
+            },
+        }
+    except Exception as e:  # noqa: BLE001 — record the failure, keep sweeping
+        result = {
+            "arch": arch,
+            "shape": shape_name,
+            "mesh": "2x16x16" if multi_pod else "16x16",
+            "status": "error",
+            "tag": extra_tag,
+            "error": f"{type(e).__name__}: {e}",
+            "traceback": traceback.format_exc()[-2000:],
+        }
+    finally:
+        set_mesh_context(None)
+    return result
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True, choices=sorted(SHAPES))
+    ap.add_argument("--multipod", action="store_true")
+    ap.add_argument("--mla-absorb", action="store_true")
+    ap.add_argument("--remat", default=None)
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--strategy", default="tp",
+                    choices=["tp", "dp", "dp_fsdp", "kvseq", "serve", "ep2d"])
+    ap.add_argument("--no-probes", action="store_true")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    res = run_one(
+        args.arch,
+        args.shape,
+        multi_pod=args.multipod,
+        mla_absorb=args.mla_absorb,
+        remat_override=args.remat,
+        microbatches=args.microbatches,
+        strategy=args.strategy,
+        probes=not args.no_probes and not args.multipod,
+        extra_tag=args.tag,
+    )
+    os.makedirs(args.out, exist_ok=True)
+    mesh_tag = "2x16x16" if args.multipod else "16x16"
+    suffix = f"__{args.tag}" if args.tag else ""
+    path = os.path.join(
+        args.out, f"{args.arch}__{args.shape}__{mesh_tag}{suffix}.json"
+    )
+    with open(path, "w") as f:
+        json.dump(res, f, indent=2)
+    print(json.dumps({k: v for k, v in res.items() if k != "traceback"}, indent=2))
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,487 @@
+"""Input specs, sharding specs and step builders for the launcher/dry-run.
+
+``input_specs`` returns weak-type-correct ``ShapeDtypeStruct`` stand-ins for
+every model input (no device allocation) — the shapes the production mesh
+is proven against.  ``decode`` shapes lower ``serve_step`` (1 new token vs a
+``seq_len`` cache); train/prefill lower ``train_step``/``prefill_step``.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.launch.mesh import batch_axes, data_axis_size
+from repro.models import transformer as tf, whisper
+from repro.models.cache import KVCache, MLACache, MambaCache, MLSTMCache, SLSTMCache
+from repro.models.config import ModelConfig
+from repro.optim import adam, clip_by_global_norm, warmup_cosine
+from repro.optim.optimizers import apply_updates
+from repro.sharding.rules import MeshContext, partition_params, set_mesh_context
+
+VISION_PREFIX = 256  # stubbed patch-embedding prefix length (qwen2-vl)
+DECODER_CTX = 448  # whisper decoder context for train/prefill shapes
+
+
+# ----------------------------------------------------------------------------
+# Config adaptation per input shape
+# ----------------------------------------------------------------------------
+
+def shape_adapted_config(arch: str, shape_name: str) -> ModelConfig:
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    # big models: bf16 params + bf16 Adam moments (HBM budget; DESIGN.md §5)
+    if _approx_param_count(cfg) > 2e10:
+        cfg = cfg.replace(param_dtype="bfloat16")
+    if shape.kind == "decode" and shape_name == "long_500k":
+        if cfg.family in ("dense", "moe", "vlm"):
+            # sub-quadratic variant: sliding-window attention (DESIGN.md)
+            cfg = cfg.replace(sliding_window=8192)
+    if shape.kind != "train":
+        cfg = cfg.replace(remat_policy="none", num_mtp_layers=0)
+    else:
+        # training at 4k×256 always wants activation checkpointing; "full"
+        # is the memory-safe baseline ("dots" is a §Perf lever where it fits)
+        cfg = cfg.replace(remat_policy="full")
+    if shape.kind in ("train", "prefill") and not cfg.is_encoder_decoder:
+        # query-chunked attention bounds the live softmax matrix (flash-
+        # attention memory behavior for the XLA path; Pallas kernel on TPU)
+        cfg = cfg.replace(attn_q_chunk=512)
+    return cfg
+
+
+def _approx_param_count(cfg: ModelConfig) -> float:
+    d, L, f, V = cfg.d_model, cfg.num_layers, cfg.d_ff, cfg.vocab_size
+    base = V * d * (1 if cfg.tie_embeddings else 2)
+    attn = 4 * d * cfg.num_heads * cfg.head_dim
+    per_layer = attn + 3 * d * f
+    if cfg.moe is not None:
+        per_layer = attn + 3 * d * cfg.moe.d_ff_expert * cfg.moe.num_experts
+    return base + L * per_layer
+
+
+def count_params(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def count_active_params(cfg: ModelConfig, params) -> float:
+    """Active parameters (MoE experts scaled by top_k/num_experts)."""
+    total = 0.0
+    scale = 1.0
+    if cfg.moe is not None:
+        scale = cfg.moe.top_k / cfg.moe.num_experts
+    for path, leaf in jax.tree_util.tree_flatten_with_path(params)[0]:
+        pstr = "/".join(str(getattr(p, "key", p)) for p in path)
+        total += leaf.size * (scale if "experts/" in pstr else 1.0)
+    return total
+
+
+# ----------------------------------------------------------------------------
+# Input specs (ShapeDtypeStruct stand-ins)
+# ----------------------------------------------------------------------------
+
+def input_specs(arch: str, shape_name: str) -> dict[str, Any]:
+    cfg = shape_adapted_config(arch, shape_name)
+    shape = SHAPES[shape_name]
+    return input_specs_for(cfg, shape.kind, shape.global_batch, shape.seq_len)
+
+
+def input_specs_for(cfg: ModelConfig, kind: str, B: int, S: int) -> dict[str, Any]:
+    i32 = jnp.int32
+    cd = jnp.dtype(cfg.compute_dtype)
+
+    if kind in ("train", "prefill"):
+        if cfg.is_encoder_decoder:
+            T = min(S, DECODER_CTX)
+            specs = {
+                "frame_embeds": jax.ShapeDtypeStruct(
+                    (B, cfg.encoder_seq_len, cfg.d_model), cd
+                ),
+                "tokens": jax.ShapeDtypeStruct((B, T), i32),
+            }
+            if kind == "train":
+                specs["labels"] = jax.ShapeDtypeStruct((B, T), i32)
+            return specs
+        specs = {"tokens": jax.ShapeDtypeStruct((B, S), i32)}
+        if kind == "train":
+            specs["labels"] = jax.ShapeDtypeStruct((B, S), i32)
+        if cfg.family == "vlm":
+            specs["vision_embeds"] = jax.ShapeDtypeStruct(
+                (B, VISION_PREFIX, cfg.d_model), cd
+            )
+            specs["mrope_positions"] = jax.ShapeDtypeStruct((3, B, S), i32)
+        return specs
+
+    # decode: one new token against a seq_len cache
+    specs = {"tokens": jax.ShapeDtypeStruct((B, 1), i32)}
+    cache_dtype = jnp.bfloat16
+    if cfg.is_encoder_decoder:
+        specs["memory"] = jax.ShapeDtypeStruct((B, cfg.encoder_seq_len, cfg.d_model), cd)
+        cache = jax.eval_shape(
+            lambda: whisper.init_decoder_cache(cfg, B, S, cache_dtype, index=S - 1)
+        )
+    else:
+        cache = jax.eval_shape(
+            lambda: tf.init_cache(cfg, B, S, cache_dtype, index=S - 1)
+        )
+    specs["cache"] = cache
+    return specs
+
+
+def concrete_inputs(arch: str, shape_name: str, seed: int = 0) -> dict[str, Any]:
+    """Concrete (small-seeded) inputs matching ``input_specs`` — used by the
+    CPU smoke tests with reduced configs, NOT by the dry-run."""
+    cfg = shape_adapted_config(arch, shape_name)
+    shape = SHAPES[shape_name]
+    specs = input_specs(arch, shape_name)
+    key = jax.random.key(seed)
+
+    def realize(path, s):
+        if s.dtype == jnp.int32:
+            return jax.random.randint(key, s.shape, 0, max(2, cfg.vocab_size - 1))
+        return jax.random.normal(key, s.shape, s.dtype)
+
+    return jax.tree_util.tree_map_with_path(realize, specs)
+
+
+# ----------------------------------------------------------------------------
+# Sharding specs
+# ----------------------------------------------------------------------------
+
+def make_mesh_context(mesh, cfg: ModelConfig, shape_name: str) -> MeshContext:
+    return make_mesh_context_for(mesh, cfg, SHAPES[shape_name].global_batch)
+
+
+def make_mesh_context_for(
+    mesh, cfg: ModelConfig, B: int, *, strategy: str = "tp"
+) -> MeshContext:
+    baxes = batch_axes(mesh)
+    if strategy in ("dp", "dp_fsdp"):
+        baxes = tuple(mesh.axis_names)  # batch over EVERY axis, no TP
+    dsize = 1
+    for a in baxes:
+        dsize *= mesh.shape[a]
+    logical = {} if strategy in ("dp", "dp_fsdp") else {"model": "model"}
+    if strategy == "kvseq":
+        # decode variant: pin the KV cache's sequence dim to the model axis
+        # inside attention so XLA keeps partial-softmax locality
+        logical["kvseq"] = "model"
+    if B % dsize == 0 and B >= dsize:
+        logical["batch"] = baxes if len(baxes) > 1 else baxes[0]
+    # (seq stays unsharded for activations; cache seq sharding is separate)
+    fsdp = _approx_param_count(cfg) > FSDP_THRESHOLD or strategy == "dp_fsdp"
+    return MeshContext(mesh=mesh, logical=logical, fsdp=fsdp)
+
+
+FSDP_THRESHOLD = 5e9  # params above this shard over the data axes too
+
+
+def param_specs(cfg: ModelConfig, params, mesh, *, strategy: str = "tp"):
+    if strategy == "serve":
+        # decode/prefill: no optimizer state exists, so FSDP only buys
+        # per-step parameter all-gathers — keep params TP-sharded instead
+        return partition_params(params, model_axis="model", fsdp_axis=None)
+    if strategy == "ep2d":
+        # 2-D expert parallelism: experts sharded over (model × data) so
+        # expert weights are never FSDP-gathered; non-expert params keep
+        # TP + FSDP
+        baxes = batch_axes(mesh)
+        fsdp_axis = baxes if len(baxes) > 1 else baxes[0]
+        return partition_params(
+            params, model_axis="model", fsdp_axis=fsdp_axis,
+            expert_axes=("model",) + tuple(
+                a for a in mesh.axis_names if a in ("data",)
+            ),
+        )
+    if strategy == "dp":
+        # pure data parallelism: params replicated on every axis
+        return partition_params(params, model_axis=None, fsdp_axis=None)
+    if strategy == "dp_fsdp":
+        # ZeRO-3: no tensor parallelism, params sharded over all axes
+        return partition_params(
+            params, model_axis=None, fsdp_axis=tuple(mesh.axis_names)
+        )
+    ctx_fsdp = _approx_param_count(cfg) > FSDP_THRESHOLD
+    baxes = batch_axes(mesh)
+    fsdp_axis = (baxes if len(baxes) > 1 else baxes[0]) if ctx_fsdp else None
+    return partition_params(params, model_axis="model", fsdp_axis=fsdp_axis)
+
+
+def _cache_entry_axes(mesh, B: int, n_heads: int):
+    """Decide (batch, seq, heads) physical axes for cache tensors."""
+    baxes = batch_axes(mesh)
+    dsize = data_axis_size(mesh)
+    msize = mesh.shape["model"]
+    batch_ax = (baxes if len(baxes) > 1 else baxes[0]) if B % dsize == 0 and B >= dsize else None
+    heads_ax = "model" if n_heads % msize == 0 else None
+    if batch_ax is None and heads_ax is None:
+        seq_ax = tuple(list(baxes) + ["model"])
+    elif batch_ax is None:
+        seq_ax = baxes if len(baxes) > 1 else baxes[0]
+    elif heads_ax is None:
+        seq_ax = "model"
+    else:
+        seq_ax = None
+    return batch_ax, seq_ax, heads_ax
+
+
+def layer_cache_specs(cfg: ModelConfig, spec_mixer: str, mesh, B: int):
+    if spec_mixer in ("attn", "whisper"):
+        n_kv = cfg.num_kv_heads if spec_mixer == "attn" else cfg.num_heads
+        b, s, h = _cache_entry_axes(mesh, B, n_kv)
+        kv = P(b, s, h, None)
+        return KVCache(k=kv, v=kv, index=P())
+    if spec_mixer == "mla":
+        b, s, _ = _cache_entry_axes(mesh, B, 1)  # latent has no head dim
+        return MLACache(c_kv=P(b, s, None), k_rope=P(b, s, None), index=P())
+    if spec_mixer == "mamba":
+        b, _, _ = _cache_entry_axes(mesh, B, 1)
+        return MambaCache(conv=P(b, None, "model"), ssm=P(b, "model", None))
+    if spec_mixer == "mlstm":
+        msize = mesh.shape["model"]
+        b, _, _ = _cache_entry_axes(mesh, B, 1)
+        h_ax = "model" if cfg.num_heads % msize == 0 else None
+        return MLSTMCache(C=P(b, h_ax, None, None), n=P(b, h_ax, None), m=P(b, h_ax))
+    if spec_mixer == "slstm":
+        msize = mesh.shape["model"]
+        b, _, _ = _cache_entry_axes(mesh, B, 1)
+        d_ax = "model" if cfg.d_model % msize == 0 else None
+        return SLSTMCache(c=P(b, d_ax), n=P(b, d_ax), h=P(b, d_ax), m=P(b, d_ax))
+    raise ValueError(spec_mixer)
+
+
+def _prepend_none(spec: P) -> P:
+    return P(*((None,) + tuple(spec)))
+
+
+def cache_specs(cfg: ModelConfig, mesh, B: int):
+    """PartitionSpec pytree mirroring ``tf.init_cache`` (stacked segments)."""
+    if cfg.is_encoder_decoder:
+        unit = layer_cache_specs(cfg, "whisper", mesh, B)
+        return jax.tree.map(
+            _prepend_none, unit, is_leaf=lambda x: isinstance(x, P)
+        )
+    out = {}
+    for si, seg in enumerate(tf.segments(cfg)):
+        unit_spec = {
+            f"l{li}": layer_cache_specs(cfg, spec.mixer, mesh, B)
+            for li, spec in enumerate(seg.unit)
+        }
+        out[f"seg{si}"] = jax.tree.map(
+            _prepend_none, unit_spec, is_leaf=lambda x: isinstance(x, P)
+        )
+    return out
+
+
+def batch_specs(specs: dict, mesh, B: int, *, strategy: str = "tp") -> dict:
+    """Shardings for the input batch dict (tokens/labels/embeds/...)."""
+    baxes = batch_axes(mesh)
+    if strategy in ("dp", "dp_fsdp"):
+        baxes = tuple(mesh.axis_names)
+    dsize = 1
+    for a in baxes:
+        dsize *= mesh.shape[a]
+    bax = (baxes if len(baxes) > 1 else baxes[0]) if B % dsize == 0 and B >= dsize else None
+    out = {}
+    for k, v in specs.items():
+        if k == "cache":
+            continue
+        if k == "mrope_positions":
+            out[k] = P(None, bax, None)
+        elif hasattr(v, "ndim") and v.ndim >= 2:
+            out[k] = P(*((bax,) + (None,) * (v.ndim - 1)))
+        else:
+            out[k] = P(bax)
+    return out
+
+
+# ----------------------------------------------------------------------------
+# Step builders
+# ----------------------------------------------------------------------------
+
+def make_optimizer(cfg: ModelConfig, *, peak_lr=3e-4, warmup=100, total=10_000):
+    moment_dtype = "bfloat16" if _approx_param_count(cfg) > 2e10 else None
+    return clip_by_global_norm(
+        adam(warmup_cosine(peak_lr, warmup, total), moment_dtype=moment_dtype), 1.0
+    )
+
+
+def make_train_step(cfg: ModelConfig, optimizer, *, microbatches: int = 1):
+    """Data-parallel train step, optionally with gradient accumulation.
+
+    Microbatching IS the paper's §5 round-robin schedule applied within a
+    step: the global update is the sequential composition of per-shard
+    first-order updates, which the paper proves equivalent to mini-batch GD
+    — here made literal by summing the per-microbatch gradients before one
+    optimizer application.  It is also the standard HBM lever: the live
+    activation working set scales with B/microbatches.
+    """
+    loss = whisper.loss_fn if cfg.is_encoder_decoder else tf.loss_fn
+
+    def train_step(params, opt_state, batch):
+        if microbatches == 1:
+            (l, metrics), grads = jax.value_and_grad(
+                lambda p: loss(p, cfg, batch), has_aux=True
+            )(params)
+        else:
+
+            def split(k, v):
+                ax = 1 if k == "mrope_positions" else 0
+                n = v.shape[ax]
+                v = jnp.moveaxis(v, ax, 0)
+                v = v.reshape(microbatches, n // microbatches, *v.shape[1:])
+                return jnp.moveaxis(v, 1, ax + 1)
+
+            mb = {k: split(k, v) for k, v in batch.items()}
+            g0 = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def body(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    lambda p: loss(p, cfg, mbatch), has_aux=True
+                )(params)
+                g_acc = jax.tree.map(
+                    lambda a, gi: a + gi.astype(jnp.float32) / microbatches,
+                    g_acc, g,
+                )
+                return (g_acc, l_acc + l / microbatches), None
+
+            (grads, l), _ = jax.lax.scan(body, (g0, jnp.zeros(())), mb)
+            metrics = {}
+        updates, opt_state = optimizer.update(grads, opt_state, params)
+        params = apply_updates(params, updates)
+        metrics = dict(metrics, loss=l)
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    if cfg.is_encoder_decoder:
+
+        def prefill_step(params, batch):
+            memory = whisper.encode(params, cfg, batch["frame_embeds"])
+            logits, _ = whisper.decode(params, cfg, batch["tokens"], memory)
+            return logits
+
+    else:
+
+        def prefill_step(params, batch):
+            logits, _, _ = tf.forward(
+                params,
+                cfg,
+                batch["tokens"],
+                mrope_positions=batch.get("mrope_positions"),
+                vision_embeds=batch.get("vision_embeds"),
+            )
+            return logits
+
+    return prefill_step
+
+
+# ----------------------------------------------------------------------------
+# One-stop lowering builder (used by dryrun + cost probes)
+# ----------------------------------------------------------------------------
+
+def _named(mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda s: isinstance(s, P),
+    )
+
+
+def opt_state_specs(opt_state_shape, params_shape, pspec_tree):
+    """Optimizer-state specs: subtrees mirroring the param tree reuse the
+    param specs (FSDP'd moments); everything else is replicated."""
+    params_structure = jax.tree.structure(params_shape)
+
+    def assign(sub):
+        if jax.tree.structure(sub) == params_structure:
+            return pspec_tree
+        return jax.tree.map(lambda _: P(), sub)
+
+    if isinstance(opt_state_shape, dict):
+        return {k: assign(v) for k, v in opt_state_shape.items()}
+    return jax.tree.map(lambda _: P(), opt_state_shape)
+
+
+def build_jitted(cfg: ModelConfig, kind: str, mesh, B: int, S: int, *,
+                 mla_absorb: bool = False, microbatches: int = 1,
+                 strategy: str = "tp", seed: int = 0):
+    """Build the jitted step + abstract args for (cfg, kind, B, S) on mesh.
+
+    Returns ``(jitted, args, params_shape)``.  Caller is responsible for
+    setting the mesh context (``make_mesh_context_for``) around lowering.
+    """
+    key = jax.random.key(seed)
+    init = whisper.init_params if cfg.is_encoder_decoder else tf.init_params
+    params_shape = jax.eval_shape(lambda: init(key, cfg))
+    pspecs = param_specs(cfg, params_shape, mesh, strategy=strategy)
+    in_specs = input_specs_for(cfg, kind, B, S)
+    bspecs = batch_specs(in_specs, mesh, B, strategy=strategy)
+
+    if kind == "train":
+        optimizer = make_optimizer(cfg)
+        opt_shape = jax.eval_shape(optimizer.init, params_shape)
+        ospecs = opt_state_specs(opt_shape, params_shape, pspecs)
+        step = make_train_step(cfg, optimizer, microbatches=microbatches)
+        jitted = jax.jit(
+            step,
+            in_shardings=(
+                _named(mesh, pspecs),
+                _named(mesh, ospecs),
+                _named(mesh, bspecs),
+            ),
+            out_shardings=(_named(mesh, pspecs), _named(mesh, ospecs), None),
+        )
+        args = (params_shape, opt_shape, in_specs)
+    elif kind == "prefill":
+        step = make_prefill_step(cfg)
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs)),
+            out_shardings=None,
+        )
+        args = (params_shape, in_specs)
+    else:  # decode
+        step = make_serve_step(cfg, mla_absorb=mla_absorb)
+        cspecs = cache_specs(cfg, mesh, B)
+        bspecs_all = dict(bspecs)
+        bspecs_all["cache"] = cspecs
+        jitted = jax.jit(
+            step,
+            in_shardings=(_named(mesh, pspecs), _named(mesh, bspecs_all)),
+            out_shardings=(None, _named(mesh, cspecs)),
+        )
+        args = (params_shape, in_specs)
+    return jitted, args, params_shape
+
+
+def make_serve_step(cfg: ModelConfig, *, mla_absorb: bool = False):
+    if cfg.is_encoder_decoder:
+
+        def serve_step(params, batch):
+            cache = batch["cache"]
+            idx = jax.tree.leaves(cache)[-1].reshape(-1)[0]  # stacked index
+            logits, new_cache = whisper.decode_step(
+                params, cfg, batch["tokens"], batch["memory"], cache, position=idx
+            )
+            return logits, new_cache
+
+    else:
+
+        def serve_step(params, batch):
+            logits, new_cache = tf.decode_step(
+                params, cfg, batch["tokens"], batch["cache"], mla_absorb=mla_absorb
+            )
+            return logits, new_cache
+
+    return serve_step

@@ -1,0 +1,5 @@
+"""The surveyed distributed-ML algorithm families (paper §3–§4)."""
+
+from repro.ml import clustering, gp, graphical, kwindows, linear, svm
+
+__all__ = ["clustering", "gp", "graphical", "kwindows", "linear", "svm"]

@@ -1,0 +1,358 @@
+"""Distributed clustering (paper §4.1).
+
+* ``kmeans``                 — EM-style k-means with configurable assignment
+                               metric ℓ1 / ℓ2 / ℓ∞ (the paper's §4.2 link to
+                               Laplace / Gaussian / uniform ML priors), and
+                               metric-matched M-steps (median / mean /
+                               midrange).
+* ``distributed_kmeans``     — sufficient-statistics form: nodes push only
+                               per-cluster (Σx, count); one Allreduce per EM
+                               iteration; provably identical to centralized
+                               k-means on the union (tested).
+* ``consensus_kmeans``       — [21]: ADMM consensus on the centroid matrix.
+* ``summarize_representatives`` — [30]-style density summarization: each
+                               node transmits a small set of representative
+                               points (every representative has ≥ min_pts
+                               neighbors within eps; neighborhoods do not
+                               overlap); global clustering runs server-side
+                               on representatives only.
+* ``radius_t_clustering``    — [27]: dynamic local clusters of maximum
+                               radius T; centroids + summary statistics are
+                               pushed, and the server merges clusters whose
+                               centroids are closer than T.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+# ----------------------------------------------------------------------------
+# Distances
+# ----------------------------------------------------------------------------
+
+def pdist(X: jnp.ndarray, C: jnp.ndarray, metric: str = "l2") -> jnp.ndarray:
+    """Pairwise distances (N, K) between points X (N,d) and centroids C (K,d).
+
+    The compute hot spot of every E-step; has a Pallas TPU kernel
+    (``repro.kernels.pdist_argmin``) — this is the reference path.
+    """
+    diff = X[:, None, :] - C[None, :, :]
+    if metric == "l2":
+        return jnp.sqrt(jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0))
+    if metric == "l2sq":
+        return jnp.sum(diff * diff, axis=-1)
+    if metric == "l1":
+        return jnp.sum(jnp.abs(diff), axis=-1)
+    if metric == "linf":
+        return jnp.max(jnp.abs(diff), axis=-1)
+    raise ValueError(f"unknown metric {metric!r}")
+
+
+def kmeans_pp_init(key: jax.Array, X: jnp.ndarray, K: int) -> jnp.ndarray:
+    """k-means++ seeding: iteratively pick centers ∝ squared distance to the
+    nearest already-chosen center (fixed-shape, jit-safe)."""
+    N = X.shape[0]
+    k0, key = jax.random.split(key)
+    first = X[jax.random.randint(k0, (), 0, N)]
+    C = jnp.tile(first[None], (K, 1))
+
+    def body(carry, i):
+        C, key = carry
+        d2 = jnp.min(pdist(X, C, metric="l2sq"), axis=1)
+        key, kc = jax.random.split(key)
+        idx = jax.random.categorical(kc, jnp.log(jnp.maximum(d2, 1e-12)))
+        C = C.at[i].set(X[idx])
+        return (C, key), None
+
+    (C, _), _ = jax.lax.scan(body, (C, key), jnp.arange(1, K))
+    return C
+
+
+class KMeansResult(NamedTuple):
+    centroids: jnp.ndarray  # (K, d)
+    assignments: jnp.ndarray  # (N,)
+    inertia: jnp.ndarray  # scalar
+    iters: int
+
+
+def _m_step(X, assign, K, metric):
+    onehot = jax.nn.one_hot(assign, K, dtype=X.dtype)  # (N, K)
+    counts = jnp.sum(onehot, axis=0)  # (K,)
+    if metric in ("l2", "l2sq"):
+        sums = onehot.T @ X
+        return sums / jnp.maximum(counts, 1.0)[:, None], counts
+    if metric == "l1":
+        # coordinate-wise median of assigned points (masked)
+        def med(k):
+            m = onehot[:, k]
+            big = 1e30
+            Xm = jnp.where(m[:, None] > 0, X, big)
+            n_k = jnp.sum(m)
+            srt = jnp.sort(Xm, axis=0)
+            lo = jnp.maximum((n_k - 1) // 2, 0).astype(jnp.int32)
+            hi = (n_k // 2).astype(jnp.int32)
+            return 0.5 * (srt[lo] + srt[hi])
+
+        meds = jax.vmap(med)(jnp.arange(K))
+        fallback = (onehot.T @ X) / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where(counts[:, None] > 0, meds, fallback), counts
+    if metric == "linf":
+        # midrange: (min + max)/2 of assigned points, per coordinate
+        big = 1e30
+
+        def midrange(k):
+            m = onehot[:, k][:, None]
+            mn = jnp.min(jnp.where(m > 0, X, big), axis=0)
+            mx = jnp.max(jnp.where(m > 0, X, -big), axis=0)
+            return 0.5 * (mn + mx)
+
+        mids = jax.vmap(midrange)(jnp.arange(K))
+        fallback = (onehot.T @ X) / jnp.maximum(counts, 1.0)[:, None]
+        return jnp.where(counts[:, None] > 0, mids, fallback), counts
+    raise ValueError(metric)
+
+
+@partial(jax.jit, static_argnames=("num_clusters", "metric", "iters"))
+def kmeans(
+    X: jnp.ndarray,
+    init_centroids: jnp.ndarray,
+    *,
+    num_clusters: int,
+    metric: str = "l2",
+    iters: int = 50,
+) -> KMeansResult:
+    K = num_clusters
+
+    def step(C, _):
+        d = pdist(X, C, metric=metric)
+        assign = jnp.argmin(d, axis=1)
+        C_new, _ = _m_step(X, assign, K, metric)
+        return C_new, None
+
+    C, _ = jax.lax.scan(step, init_centroids, None, length=iters)
+    d = pdist(X, C, metric=metric)
+    assign = jnp.argmin(d, axis=1)
+    inertia = jnp.sum(jnp.min(pdist(X, C, metric="l2sq"), axis=1))
+    return KMeansResult(centroids=C, assignments=assign, inertia=inertia, iters=iters)
+
+
+# ----------------------------------------------------------------------------
+# Sufficient-statistics distributed k-means
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("num_clusters", "iters"))
+def distributed_kmeans(
+    Xs: jnp.ndarray,  # (Knodes, Nk, d)
+    init_centroids: jnp.ndarray,
+    *,
+    num_clusters: int,
+    iters: int = 50,
+) -> KMeansResult:
+    """Each node pushes per-cluster (Σx, count); the server aggregates.
+
+    One Allreduce of (K·d + K) numbers per EM iteration — independent of the
+    local dataset sizes.  Identical trajectory to centralized ℓ2 k-means on
+    the union of shards.
+    """
+    K = num_clusters
+
+    def local_stats(X, C):
+        d = pdist(X, C, metric="l2sq")
+        assign = jnp.argmin(d, axis=1)
+        onehot = jax.nn.one_hot(assign, K, dtype=X.dtype)
+        return onehot.T @ X, jnp.sum(onehot, axis=0)  # (K,d), (K,)
+
+    def step(C, _):
+        sums, counts = jax.vmap(local_stats, in_axes=(0, None))(Xs, C)
+        g_sums = jnp.sum(sums, axis=0)  # Allreduce
+        g_counts = jnp.sum(counts, axis=0)  # Allreduce
+        C_new = g_sums / jnp.maximum(g_counts, 1.0)[:, None]
+        C_new = jnp.where(g_counts[:, None] > 0, C_new, C)
+        return C_new, None
+
+    C, _ = jax.lax.scan(step, init_centroids, None, length=iters)
+    Xall = Xs.reshape(-1, Xs.shape[-1])
+    assign = jnp.argmin(pdist(Xall, C, metric="l2sq"), axis=1)
+    inertia = jnp.sum(jnp.min(pdist(Xall, C, metric="l2sq"), axis=1))
+    return KMeansResult(centroids=C, assignments=assign, inertia=inertia, iters=iters)
+
+
+# ----------------------------------------------------------------------------
+# Consensus k-means via ADMM ([21])
+# ----------------------------------------------------------------------------
+
+def consensus_kmeans(
+    Xs: jnp.ndarray,
+    init_centroids: jnp.ndarray,
+    *,
+    rho: float = 0.1,
+    iters: int = 60,
+    local_em_iters: int = 3,
+):
+    """ADMM consensus on the flattened centroid matrix.
+
+    Local prox: a few EM steps on the node's shard pulled toward the
+    consensus centroids (quadratic penalty has a closed-form blend:
+    weighted average of local cluster mean and the consensus value,
+    weights = local count vs ρ), followed by a greedy slot re-alignment to
+    the consensus — consensus on a SET of centroids is only defined up to
+    per-node permutation, and without alignment nodes that discover the
+    clusters in different slot orders make the z-average meaningless.
+    """
+    Knodes, Nk, d = Xs.shape
+    K = init_centroids.shape[0]
+    dim = K * d
+
+    def _align(C, V):
+        """Greedily permute rows of C to match rows of V (K is small)."""
+        d2 = jnp.sum((V[:, None, :] - C[None, :, :]) ** 2, axis=-1)  # (K, K)
+
+        def pick(carry, i):
+            d2m, perm = carry
+            j = jnp.argmin(d2m[i])
+            perm = perm.at[i].set(j)
+            d2m = d2m.at[:, j].set(jnp.inf)
+            return (d2m, perm), None
+
+        (_, perm), _ = jax.lax.scan(
+            pick, (d2, jnp.zeros((K,), jnp.int32)), jnp.arange(K)
+        )
+        return C[perm]
+
+    def local_prox(v_flat, u, rho_):
+        def one(v_row, X):
+            V = v_row.reshape(K, d)
+            C = V
+
+            def em(C, _):
+                dd = pdist(X, C, metric="l2sq")
+                assign = jnp.argmin(dd, axis=1)
+                onehot = jax.nn.one_hot(assign, K, dtype=X.dtype)
+                counts = jnp.sum(onehot, axis=0)
+                sums = onehot.T @ X
+                # argmin Σ‖x−c‖² + (ρ/2)‖c−v‖² → (Σx + ρ/2·v) / (n + ρ/2)
+                C_new = (sums + 0.5 * rho_ * V) / (counts[:, None] + 0.5 * rho_)
+                return C_new, None
+
+            C, _ = jax.lax.scan(em, C, None, length=local_em_iters)
+            return _align(C, V).reshape(-1)
+
+        return jax.vmap(one)(v_flat, Xs)
+
+    from repro.core.admm import consensus_admm
+
+    theta0 = jnp.tile(init_centroids.reshape(1, -1), (Knodes, 1))
+    res = consensus_admm(
+        local_prox, Knodes, dim, rho=rho, g="none", iters=iters, theta0=theta0
+    )
+    return res.z.reshape(K, d), res
+
+
+# ----------------------------------------------------------------------------
+# Representative-point summarization ([30], DBSCAN-flavored)
+# ----------------------------------------------------------------------------
+
+def summarize_representatives(
+    X: jnp.ndarray,
+    *,
+    eps: float,
+    min_pts: int,
+    max_reps: int,
+) -> tuple[jnp.ndarray, jnp.ndarray]:
+    """Greedy core-point cover: every representative has ≥ min_pts neighbors
+    within eps and covered neighborhoods do not overlap.
+
+    Returns ``(reps, mask)`` with fixed shape (max_reps, d) / (max_reps,).
+    """
+    N, d = X.shape
+    D = pdist(X, X, metric="l2")
+    neigh = D <= eps  # (N, N)
+    counts0 = jnp.sum(neigh, axis=1)
+
+    def body(carry, _):
+        covered, reps, mask, slot = carry
+        counts = jnp.sum(neigh & ~covered[None, :], axis=1)
+        counts = jnp.where(covered, -1, counts)
+        best = jnp.argmax(counts)
+        ok = counts[best] >= min_pts
+        covered = jnp.where(ok, covered | neigh[best], covered)
+        reps = jnp.where(ok, reps.at[slot].set(X[best]), reps)
+        mask = jnp.where(ok, mask.at[slot].set(1.0), mask)
+        slot = slot + jnp.where(ok, 1, 0)
+        return (covered, reps, mask, slot), None
+
+    covered0 = counts0 < min_pts  # noise points never become reps
+    carry0 = (
+        covered0,
+        jnp.zeros((max_reps, d)),
+        jnp.zeros((max_reps,)),
+        jnp.asarray(0),
+    )
+    (covered, reps, mask, _), _ = jax.lax.scan(body, carry0, None, length=max_reps)
+    return reps, mask
+
+
+# ----------------------------------------------------------------------------
+# Radius-T incremental clustering ([27])
+# ----------------------------------------------------------------------------
+
+def radius_t_clustering(
+    X: jnp.ndarray, *, T: float, max_clusters: int
+) -> tuple[jnp.ndarray, jnp.ndarray, jnp.ndarray]:
+    """One pass: assign each point to the nearest existing centroid if within
+    T, else open a new cluster (up to ``max_clusters``; overflow folds into
+    the nearest).  Returns (centroids, counts, mask)."""
+    N, d = X.shape
+
+    def body(carry, x):
+        C, counts, ncl = carry
+        dd = jnp.where(
+            jnp.arange(max_clusters) < ncl,
+            jnp.sqrt(jnp.sum((C - x[None, :]) ** 2, axis=1)),
+            jnp.inf,
+        )
+        j = jnp.argmin(dd)
+        near = dd[j] <= T
+        can_open = ncl < max_clusters
+        open_new = (~near) & can_open
+        tgt = jnp.where(open_new, ncl, j)
+        new_count = counts[tgt] + 1.0
+        # running mean update
+        C = C.at[tgt].set(C[tgt] + (x - C[tgt]) / new_count)
+        counts = counts.at[tgt].set(new_count)
+        ncl = ncl + jnp.where(open_new, 1, 0)
+        return (C, counts, ncl), None
+
+    carry0 = (jnp.zeros((max_clusters, d)), jnp.zeros((max_clusters,)), jnp.asarray(0))
+    (C, counts, ncl), _ = jax.lax.scan(body, carry0, X)
+    mask = (jnp.arange(max_clusters) < ncl).astype(jnp.float32)
+    return C, counts, mask
+
+
+def merge_centroids(
+    C: jnp.ndarray, counts: jnp.ndarray, mask: jnp.ndarray, *, T: float
+):
+    """Server-side merge: greedily fold together centroids closer than T
+    (count-weighted means) — the aggregation step of [27]."""
+    Kc = C.shape[0]
+
+    def body(carry, i):
+        C, counts, mask = carry
+        dd = jnp.sqrt(jnp.sum((C - C[i][None, :]) ** 2, axis=1))
+        cand = (dd <= T) & (mask > 0) & (jnp.arange(Kc) > i) & (mask[i] > 0)
+        j = jnp.argmax(cand)
+        do = jnp.any(cand)
+        tot = counts[i] + counts[j]
+        merged = (C[i] * counts[i] + C[j] * counts[j]) / jnp.maximum(tot, 1.0)
+        C = jnp.where(do, C.at[i].set(merged), C)
+        counts = jnp.where(do, counts.at[i].set(tot).at[j].set(0.0), counts)
+        mask = jnp.where(do, mask.at[j].set(0.0), mask)
+        return (C, counts, mask), None
+
+    (C, counts, mask), _ = jax.lax.scan(body, (C, counts, mask), jnp.arange(Kc))
+    return C, counts, mask

@@ -1,0 +1,289 @@
+"""K-windows clustering — the paper's §4.2 exhaustive treatment.
+
+The paper translates the empirical k-windows algorithm [69] into the
+ℓ∞-constrained k-means
+
+    min_{c_k} Σ_i Σ_k  1{‖x_i − c_k‖_{ℓ∞^w} < r} · ‖x_i − c_k‖²₂
+
+"a K-means algorithm where the E-step is skipped and simply replaced with
+the cluster assignments u_{i,k} = 1{‖x_i − c_k‖_∞ < r} and the M-step
+remaining the same", followed by:
+
+* **Phase 2 (enlargement)** — per cluster k and coordinate d the window
+  weight w_d is relaxed (window grows) while the capture-ratio gain
+  card(new)/card(old) ≥ θ_e;
+* **Phase 3 (merging)** — clusters are merged when the overlap count ratio
+  card(x in W_i ∩ W_j)/min card exceeds θ_m (paper: ratio of captured
+  counts), seeded from pairs with dist(c_i, c_j) < 2·max window radius.
+
+Windows are boxes: center ``c`` (K, d) + halfwidths ``h`` (K, d); the
+weighted ℓ∞ norm of the paper is ‖x−c‖_{ℓ∞^w} = max_d |x_d−c_d|/h_d (so the
+window is the unit ball).  A point may satisfy several window indicators;
+ties go to the nearest center in ℓ2 (the paper notes unassigned-overlap
+handling is an open gap in [69] — we make the standard choice and say so).
+
+``distributed_kwindows`` implements [60]'s naive variant: nodes run local
+k-windows and the server merges ALL overlapping windows regardless of
+overlap counts — the paper's observed failure mode (over-merging of close
+clusters) is reproduced in ``benchmarks/bench_clustering.py``.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class KWindows(NamedTuple):
+    centers: jnp.ndarray  # (K, d)
+    halfwidths: jnp.ndarray  # (K, d)
+    alive: jnp.ndarray  # (K,) 1.0 = active cluster
+    counts: jnp.ndarray  # (K,) points captured
+
+
+def window_membership(X: jnp.ndarray, win: KWindows) -> jnp.ndarray:
+    """(N, K) indicator u_{i,k} = 1{‖x_i − c_k‖_{ℓ∞^w} < 1} (and k alive)."""
+    z = jnp.abs(X[:, None, :] - win.centers[None, :, :]) / jnp.maximum(
+        win.halfwidths[None, :, :], 1e-12
+    )
+    inside = jnp.max(z, axis=-1) < 1.0
+    return inside & (win.alive[None, :] > 0)
+
+
+def assign_points(X: jnp.ndarray, win: KWindows) -> jnp.ndarray:
+    """Resolve overlapping membership by nearest center (ℓ2); -1 = uncaptured."""
+    member = window_membership(X, win)
+    d2 = jnp.sum((X[:, None, :] - win.centers[None, :, :]) ** 2, axis=-1)
+    d2 = jnp.where(member, d2, jnp.inf)
+    a = jnp.argmin(d2, axis=1)
+    return jnp.where(jnp.any(member, axis=1), a, -1)
+
+
+def _masked_mean(X, mask, fallback):
+    cnt = jnp.sum(mask, axis=0)  # (K,)
+    s = mask.T @ X  # (K, d)
+    mean = s / jnp.maximum(cnt, 1.0)[:, None]
+    return jnp.where(cnt[:, None] > 0, mean, fallback), cnt
+
+
+# ----------------------------------------------------------------------------
+# Phase 1 — windowed k-means ("E-step replaced by the window indicator")
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("iters",))
+def phase1_movements(X: jnp.ndarray, win: KWindows, *, iters: int = 20) -> KWindows:
+    def step(win, _):
+        member = window_membership(X, win).astype(X.dtype)
+        centers, cnt = _masked_mean(X, member, win.centers)
+        return KWindows(centers, win.halfwidths, win.alive, cnt), None
+
+    win, _ = jax.lax.scan(step, win, None, length=iters)
+    return win
+
+
+# ----------------------------------------------------------------------------
+# Phase 2 — enlargement, gated on relative capture gain θ_e
+# ----------------------------------------------------------------------------
+
+@partial(jax.jit, static_argnames=("rounds",))
+def phase2_enlargement(
+    X: jnp.ndarray,
+    win: KWindows,
+    *,
+    enlarge_factor: float = 1.25,
+    theta_e: float = 1.05,
+    rounds: int = 8,
+) -> KWindows:
+    """Grow each window per-coordinate while capture grows ≥ θ_e×.
+
+    Implements the [61] criterion the paper quotes ("the number of newly
+    added examples to be above a given threshold") as a relative ratio, with
+    re-centering (movement) after each accepted enlargement.
+    """
+    d = X.shape[1]
+
+    def try_coord(win, coord):
+        member = window_membership(X, win)
+        old_cnt = jnp.sum(member, axis=0).astype(jnp.float32)  # (K,)
+        h_new = win.halfwidths.at[:, coord].mul(enlarge_factor)
+        cand = KWindows(win.centers, h_new, win.alive, win.counts)
+        new_cnt = jnp.sum(window_membership(X, cand), axis=0).astype(jnp.float32)
+        accept = new_cnt >= theta_e * jnp.maximum(old_cnt, 1.0)  # (K,)
+        h = jnp.where(accept[:, None] & (jnp.arange(d) == coord)[None, :],
+                      h_new, win.halfwidths)
+        win = KWindows(win.centers, h, win.alive, win.counts)
+        # movement after enlargement (paper: enlargement is followed by
+        # recentering; a cluster whose centroid drifts too far rejects)
+        member = window_membership(X, win).astype(X.dtype)
+        centers, cnt = _masked_mean(X, member, win.centers)
+        return KWindows(centers, win.halfwidths, win.alive, cnt), None
+
+    def round_(win, _):
+        win, _ = jax.lax.scan(try_coord, win, jnp.arange(d))
+        return win, None
+
+    win, _ = jax.lax.scan(round_, win, None, length=rounds)
+    return win
+
+
+# ----------------------------------------------------------------------------
+# Phase 3 — merging, gated on overlap ratio θ_m
+# ----------------------------------------------------------------------------
+
+def _overlap_counts(X: jnp.ndarray, win: KWindows) -> jnp.ndarray:
+    member = window_membership(X, win).astype(jnp.float32)  # (N, K)
+    return member.T @ member  # (K, K) pairwise joint-capture counts
+
+
+@jax.jit
+def phase3_merging(X: jnp.ndarray, win: KWindows, *, theta_m: float = 0.5) -> KWindows:
+    """Merge pairs whose shared-capture ratio exceeds θ_m.
+
+    ratio(i,j) = card(W_i ∩ W_j captured) / min(card_i, card_j); merged
+    cluster = count-weighted center, union box.  Candidate pairs are
+    pre-filtered by the paper's dist(c_i,c_j) < 2·max radius test.
+    """
+    K = win.centers.shape[0]
+    joint = _overlap_counts(X, win)
+    cnt = jnp.diag(joint)
+
+    cdist = jnp.sqrt(
+        jnp.sum((win.centers[:, None, :] - win.centers[None, :, :]) ** 2, axis=-1)
+    )
+    rad = jnp.max(win.halfwidths, axis=1)
+    near = cdist < 2.0 * jnp.maximum(rad[:, None], rad[None, :])
+
+    ratio = joint / jnp.maximum(jnp.minimum(cnt[:, None], cnt[None, :]), 1.0)
+    mergeable = (
+        (ratio > theta_m)
+        & near
+        & (win.alive[:, None] > 0)
+        & (win.alive[None, :] > 0)
+        & (jnp.triu(jnp.ones((K, K)), k=1) > 0)
+    )
+
+    def body(carry, i):
+        centers, half, alive, counts = carry
+        row = mergeable[i] & (alive > 0)
+        j = jnp.argmax(row)
+        do = jnp.any(row) & (alive[i] > 0)
+        tot = counts[i] + counts[j]
+        c = (centers[i] * counts[i] + centers[j] * counts[j]) / jnp.maximum(tot, 1.0)
+        lo = jnp.minimum(centers[i] - half[i], centers[j] - half[j])
+        hi = jnp.maximum(centers[i] + half[i], centers[j] + half[j])
+        centers = jnp.where(do, centers.at[i].set(c), centers)
+        half = jnp.where(do, half.at[i].set(jnp.maximum((hi - lo) / 2.0, 1e-12)), half)
+        counts = jnp.where(do, counts.at[i].set(tot).at[j].set(0.0), counts)
+        alive = jnp.where(do, alive.at[j].set(0.0), alive)
+        return (centers, half, alive, counts), None
+
+    carry0 = (win.centers, win.halfwidths, win.alive, win.counts)
+    (centers, half, alive, counts), _ = jax.lax.scan(body, carry0, jnp.arange(K))
+    return KWindows(centers, half, alive, counts)
+
+
+# ----------------------------------------------------------------------------
+# Full pipeline + distributed variant
+# ----------------------------------------------------------------------------
+
+def init_windows(key: jax.Array, X: jnp.ndarray, K: int, r: float) -> KWindows:
+    """Initial square windows of edge 2r centered on random data points."""
+    idx = jax.random.choice(key, X.shape[0], shape=(K,), replace=False)
+    centers = X[idx]
+    half = jnp.full((K, X.shape[1]), r)
+    return KWindows(centers, half, jnp.ones((K,)), jnp.zeros((K,)))
+
+
+def kwindows(
+    key: jax.Array,
+    X: jnp.ndarray,
+    *,
+    num_windows: int,
+    r: float,
+    theta_e: float = 1.05,
+    theta_m: float = 0.5,
+    p1_iters: int = 20,
+    p2_rounds: int = 6,
+) -> KWindows:
+    """The three-phase k-windows algorithm (start with many windows; the
+    merge phase converges toward the natural cluster count — the paper's
+    random over-initialization procedure)."""
+    win = init_windows(key, X, num_windows, r)
+    win = phase1_movements(X, win, iters=p1_iters)
+    win = phase2_enlargement(X, win, theta_e=theta_e, rounds=p2_rounds)
+    win = phase3_merging(X, win, theta_m=theta_m)
+    # refresh counts after merging
+    member = window_membership(X, win).astype(X.dtype)
+    cnt = jnp.sum(member, axis=0)
+    return KWindows(win.centers, win.halfwidths, win.alive * (cnt > 0), cnt)
+
+
+def boxes_overlap(win: KWindows) -> jnp.ndarray:
+    """(K, K) pairwise geometric box-overlap indicator."""
+    lo = win.centers - win.halfwidths
+    hi = win.centers + win.halfwidths
+    sep = jnp.any(
+        (lo[:, None, :] > hi[None, :, :]) | (hi[:, None, :] < lo[None, :, :]),
+        axis=-1,
+    )
+    return (
+        (~sep)
+        & (win.alive[:, None] > 0)
+        & (win.alive[None, :] > 0)
+    )
+
+
+def distributed_kwindows(
+    key: jax.Array,
+    Xs: jnp.ndarray,  # (Knodes, Nk, d)
+    *,
+    num_windows: int,
+    r: float,
+    **kw,
+) -> KWindows:
+    """[60]'s naive distributed k-windows: local runs, then the server merges
+    ALL geometrically overlapping windows regardless of shared counts.
+
+    The paper criticizes exactly this ("often leads to merging of
+    neighboring clusters") — reproduced in the clustering benchmark.
+    """
+    Knodes = Xs.shape[0]
+    keys = jax.random.split(key, Knodes)
+    locals_ = [
+        kwindows(keys[k], Xs[k], num_windows=num_windows, r=r, **kw)
+        for k in range(Knodes)
+    ]
+    centers = jnp.concatenate([w.centers for w in locals_], axis=0)
+    half = jnp.concatenate([w.halfwidths for w in locals_], axis=0)
+    alive = jnp.concatenate([w.alive for w in locals_], axis=0)
+    counts = jnp.concatenate([w.counts for w in locals_], axis=0)
+    win = KWindows(centers, half, alive, counts)
+
+    # server: merge every overlapping pair (no count test — the naive rule)
+    K = centers.shape[0]
+    ov = boxes_overlap(win)
+
+    def body(carry, i):
+        centers, half, alive, counts = carry
+        row = ov[i] & (alive > 0) & (jnp.arange(K) > i)
+        j = jnp.argmax(row)
+        do = jnp.any(row) & (alive[i] > 0)
+        tot = counts[i] + counts[j]
+        c = (centers[i] * counts[i] + centers[j] * counts[j]) / jnp.maximum(tot, 1.0)
+        lo = jnp.minimum(centers[i] - half[i], centers[j] - half[j])
+        hi = jnp.maximum(centers[i] + half[i], centers[j] + half[j])
+        centers = jnp.where(do, centers.at[i].set(c), centers)
+        half = jnp.where(do, half.at[i].set(jnp.maximum((hi - lo) / 2.0, 1e-12)), half)
+        counts = jnp.where(do, counts.at[i].set(tot).at[j].set(0.0), counts)
+        alive = jnp.where(do, alive.at[j].set(0.0), alive)
+        return (centers, half, alive, counts), None
+
+    carry = (centers, half, alive, counts)
+    # a few sweeps so chained overlaps collapse
+    for _ in range(3):
+        ov = boxes_overlap(KWindows(*carry))
+        (carry), _ = jax.lax.scan(body, carry, jnp.arange(K))
+    return KWindows(*carry)

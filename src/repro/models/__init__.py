@@ -1,0 +1,39 @@
+"""Model substrate: unified decoder LM + encoder-decoder + caches."""
+
+from repro.models import (
+    attention,
+    cache,
+    config,
+    layers,
+    mamba,
+    mla,
+    moe,
+    transformer,
+    whisper,
+    xlstm,
+)
+from repro.models.config import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    XLSTMConfig,
+)
+
+__all__ = [
+    "attention",
+    "cache",
+    "config",
+    "layers",
+    "mamba",
+    "mla",
+    "moe",
+    "transformer",
+    "whisper",
+    "xlstm",
+    "MLAConfig",
+    "MoEConfig",
+    "ModelConfig",
+    "SSMConfig",
+    "XLSTMConfig",
+]

@@ -1,0 +1,84 @@
+"""Decode caches for every mixer family (pytree NamedTuples).
+
+``serve_step`` lowers ONE new token against a cache of ``seq_len`` — these
+structures are what gets sharded by the decode sharding rules (KV sequence
+dim over the data axis for `long_500k`, heads over the model axis).
+"""
+
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax.numpy as jnp
+
+
+class KVCache(NamedTuple):
+    k: jnp.ndarray  # (B, S, H_kv, D)
+    v: jnp.ndarray  # (B, S, H_kv, D)
+    index: jnp.ndarray  # scalar int32 — number of valid positions
+
+
+class MLACache(NamedTuple):
+    """DeepSeek MLA latent cache: compressed KV + shared rope key."""
+
+    c_kv: jnp.ndarray  # (B, S, kv_lora_rank)
+    k_rope: jnp.ndarray  # (B, S, qk_rope_head_dim)
+    index: jnp.ndarray
+
+
+class MambaCache(NamedTuple):
+    conv: jnp.ndarray  # (B, d_conv - 1, d_inner) — conv tail window
+    ssm: jnp.ndarray  # (B, d_inner, d_state)
+
+
+class MLSTMCache(NamedTuple):
+    C: jnp.ndarray  # (B, H, Dk, Dv) matrix memory
+    n: jnp.ndarray  # (B, H, Dk) normalizer
+    m: jnp.ndarray  # (B, H) gate stabilizer
+
+
+class SLSTMCache(NamedTuple):
+    c: jnp.ndarray  # (B, d)
+    n: jnp.ndarray  # (B, d)
+    h: jnp.ndarray  # (B, d)
+    m: jnp.ndarray  # (B, d)
+
+
+def kv_cache_init(batch: int, seq: int, n_kv: int, head_dim: int, dtype) -> KVCache:
+    return KVCache(
+        k=jnp.zeros((batch, seq, n_kv, head_dim), dtype),
+        v=jnp.zeros((batch, seq, n_kv, head_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def mla_cache_init(batch: int, seq: int, kv_lora: int, rope_dim: int, dtype) -> MLACache:
+    return MLACache(
+        c_kv=jnp.zeros((batch, seq, kv_lora), dtype),
+        k_rope=jnp.zeros((batch, seq, rope_dim), dtype),
+        index=jnp.zeros((), jnp.int32),
+    )
+
+
+def mamba_cache_init(batch: int, d_conv: int, d_inner: int, d_state: int, dtype) -> MambaCache:
+    return MambaCache(
+        conv=jnp.zeros((batch, d_conv - 1, d_inner), dtype),
+        ssm=jnp.zeros((batch, d_inner, d_state), jnp.float32),
+    )
+
+
+def mlstm_cache_init(batch: int, heads: int, dk: int, dv: int) -> MLSTMCache:
+    return MLSTMCache(
+        C=jnp.zeros((batch, heads, dk, dv), jnp.float32),
+        n=jnp.zeros((batch, heads, dk), jnp.float32),
+        m=jnp.full((batch, heads), -1e30, jnp.float32),
+    )
+
+
+def slstm_cache_init(batch: int, d: int) -> SLSTMCache:
+    return SLSTMCache(
+        c=jnp.zeros((batch, d), jnp.float32),
+        n=jnp.zeros((batch, d), jnp.float32),
+        h=jnp.zeros((batch, d), jnp.float32),
+        m=jnp.full((batch, d), -1e30, jnp.float32),
+    )

@@ -1,0 +1,150 @@
+"""Mamba-1 selective SSM mixer (Jamba's recurrent layer, arXiv:2403.19887).
+
+Training/prefill uses a **chunked parallel scan**: time is processed in
+chunks of ``chunk`` tokens; within a chunk the recurrence
+``h_t = a_t ⊙ h_{t-1} + b_t`` runs as an associative scan, and the carried
+state crosses chunk boundaries in a ``jax.lax.scan``.  This bounds the
+materialized (B, chunk, d_inner, d_state) tensor — with d_inner sharded
+over the ``model`` axis it stays ~100 MB/device at Jamba scale instead of
+the O(B·T·d_inner·d_state) of a naive associative scan over the full
+sequence.  Decode carries ``MambaCache`` (conv tail + SSM state) — O(1) in
+sequence length, which is why Jamba runs ``long_500k``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import MambaCache
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init, truncated_normal
+
+
+def _dims(cfg: ModelConfig):
+    s = cfg.ssm
+    d_inner = s.expand * cfg.d_model
+    dt_rank = s.dt_rank or max(1, -(-cfg.d_model // 16))  # ceil(d/16)
+    return d_inner, dt_rank, s.d_state, s.d_conv
+
+
+def mamba_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    d = cfg.d_model
+    ks = jax.random.split(key, 6)
+    A = jnp.tile(jnp.arange(1, d_state + 1, dtype=jnp.float32)[None], (d_inner, 1))
+    return {
+        "in_proj": dense_init(ks[0], d, 2 * d_inner, dtype=dtype),
+        "conv_w": truncated_normal(ks[1], (d_conv, d_inner), dtype, (1.0 / d_conv) ** 0.5),
+        "conv_b": jnp.zeros((d_inner,), dtype),
+        "x_proj": dense_init(ks[2], d_inner, dt_rank + 2 * d_state, dtype=dtype),
+        "dt_proj": dense_init(ks[3], dt_rank, d_inner, bias=True, dtype=dtype),
+        "A_log": jnp.log(A),  # fp32 — recurrence numerics
+        "D": jnp.ones((d_inner,), jnp.float32),
+        "out_proj": dense_init(ks[4], d_inner, d, dtype=dtype),
+    }
+
+
+def _ssm_chunk(carry_h, xa_chunk):
+    """One chunk of the selective scan.  carry_h: (B, di, ds) fp32."""
+    a, b = xa_chunk  # each (B, L, di, ds) fp32
+
+    def combine(lhs, rhs):
+        a1, b1 = lhs
+        a2, b2 = rhs
+        return a1 * a2, a2 * b1 + b2
+
+    a_cum, b_cum = jax.lax.associative_scan(combine, (a, b), axis=1)
+    h = a_cum * carry_h[:, None] + b_cum  # (B, L, di, ds)
+    return h[:, -1], h
+
+
+def mamba_apply(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    cache: MambaCache | None = None,
+    chunk: int = 256,
+    **_,
+):
+    """x: (B, T, d) → (y, new_cache)."""
+    d_inner, dt_rank, d_state, d_conv = _dims(cfg)
+    B, T, _ = x.shape
+    cd = x.dtype
+    if cfg.unroll_time_scans:
+        chunk = T  # cost probe: single chunk → no while loop in HLO
+
+    xz = dense(p["in_proj"], x)  # (B, T, 2*di)
+    xs, z = jnp.split(xz, 2, axis=-1)
+
+    # --- depthwise causal conv over time
+    if cache is None:
+        pad = jnp.zeros((B, d_conv - 1, d_inner), cd)
+        conv_tail_next = None
+    else:
+        pad = cache.conv.astype(cd)
+        conv_tail_next = jnp.concatenate([pad, xs], axis=1)[:, -(d_conv - 1):]
+    xpad = jnp.concatenate([pad, xs], axis=1)  # (B, T+dc-1, di)
+    idx = jnp.arange(T)[:, None] + jnp.arange(d_conv)[None, :]  # (T, dc)
+    windows = xpad[:, idx]  # (B, T, dc, di)
+    xc = jnp.einsum("btcd,cd->btd", windows, p["conv_w"].astype(cd)) + p[
+        "conv_b"
+    ].astype(cd)
+    xc = jax.nn.silu(xc)
+
+    # --- input-dependent SSM parameters
+    proj = dense(p["x_proj"], xc)  # (B, T, dtr + 2*ds)
+    dt, Bmat, Cmat = jnp.split(proj, [dt_rank, dt_rank + d_state], axis=-1)
+    dt = jax.nn.softplus(dense(p["dt_proj"], dt)).astype(jnp.float32)  # (B,T,di)
+    A = -jnp.exp(p["A_log"])  # (di, ds) fp32
+    Bf = Bmat.astype(jnp.float32)
+    Cf = Cmat.astype(jnp.float32)
+    xf = xc.astype(jnp.float32)
+
+    a = jnp.exp(dt[..., None] * A[None, None])  # (B, T, di, ds)
+    b = (dt * xf)[..., None] * Bf[:, :, None, :]  # (B, T, di, ds)
+
+    h0 = (
+        jnp.zeros((B, d_inner, d_state), jnp.float32)
+        if cache is None
+        else cache.ssm
+    )
+
+    if T == 1:
+        # decode fast path — single recurrent step
+        h = a[:, 0] * h0 + b[:, 0]  # (B, di, ds)
+        y = jnp.einsum("bds,bs->bd", h, Cf[:, 0])[:, None]  # (B, 1, di)
+        h_last = h
+    else:
+        # chunked parallel scan
+        Lc = min(chunk, T)
+        npad = (-T) % Lc
+        if npad:
+            a = jnp.concatenate(
+                [a, jnp.ones((B, npad, d_inner, d_state), jnp.float32)], axis=1
+            )
+            b = jnp.concatenate(
+                [b, jnp.zeros((B, npad, d_inner, d_state), jnp.float32)], axis=1
+            )
+        nchunks = (T + npad) // Lc
+        if nchunks == 1:
+            h_last, hs = _ssm_chunk(h0, (a, b))
+            hs = hs[:, :T]
+        else:
+            a = a.reshape(B, nchunks, Lc, d_inner, d_state).swapaxes(0, 1)
+            b = b.reshape(B, nchunks, Lc, d_inner, d_state).swapaxes(0, 1)
+            h_last, hs = jax.lax.scan(_ssm_chunk, h0, (a, b))
+            hs = hs.swapaxes(0, 1).reshape(B, nchunks * Lc, d_inner, d_state)[:, :T]
+        y = jnp.einsum("btds,bts->btd", hs, Cf)
+        # the true final state must come from position T-1, not padding
+        h_last = hs[:, -1]
+
+    y = y + p["D"][None, None] * xf
+    y = y.astype(cd) * jax.nn.silu(z)
+    out = dense(p["out_proj"], y)
+
+    new_cache = None
+    if cache is not None:
+        new_cache = MambaCache(conv=conv_tail_next.astype(cache.conv.dtype), ssm=h_last)
+    return out, new_cache

@@ -1,0 +1,136 @@
+"""Multi-head Latent Attention (MLA) — DeepSeek-V2/V3, MiniCPM3.
+
+The KV cache stores only the compressed latent ``c_kv`` (kv_lora_rank) plus
+one shared roped key per position — the MLA memory saving.  Two decode
+paths:
+
+* ``absorb=False`` (paper-faithful): up-project the whole cached latent to
+  per-head K/V every step;
+* ``absorb=True`` (the published inference optimization, used as a §Perf
+  lever): absorb ``W_uk`` into the query and ``W_uv`` into the output so
+  attention runs directly in the latent space — per-step FLOPs drop from
+  O(S·H·d_nope·r) to O(S·(H·d_nope·r / S + r)) per head-dim terms; see
+  EXPERIMENTS.md §Perf.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import MLACache
+from repro.models.config import ModelConfig
+from repro.models.layers import apply_rope, dense, dense_init, rmsnorm, rmsnorm_init
+
+
+def mla_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.mla
+    H = cfg.num_heads
+    ks = jax.random.split(key, 7)
+    return {
+        "w_dq": dense_init(ks[0], cfg.d_model, m.q_lora_rank, dtype=dtype),
+        "q_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "w_uq": dense_init(
+            ks[1], m.q_lora_rank, H * (m.qk_nope_head_dim + m.qk_rope_head_dim), dtype=dtype
+        ),
+        "w_dkv": dense_init(ks[2], cfg.d_model, m.kv_lora_rank, dtype=dtype),
+        "kv_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "w_kr": dense_init(ks[3], cfg.d_model, m.qk_rope_head_dim, dtype=dtype),
+        "w_uk": dense_init(ks[4], m.kv_lora_rank, H * m.qk_nope_head_dim, dtype=dtype),
+        "w_uv": dense_init(ks[5], m.kv_lora_rank, H * m.v_head_dim, dtype=dtype),
+        "w_o": dense_init(ks[6], H * m.v_head_dim, cfg.d_model, dtype=dtype),
+    }
+
+
+def _queries(p, cfg, x, positions):
+    m, H = cfg.mla, cfg.num_heads
+    B, T, _ = x.shape
+    cq = rmsnorm(p["q_norm"], dense(p["w_dq"], x), eps=cfg.rms_eps)
+    q = dense(p["w_uq"], cq).reshape(B, T, H, m.qk_nope_head_dim + m.qk_rope_head_dim)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    return q_nope, q_rope
+
+
+def mla_apply(
+    p,
+    cfg: ModelConfig,
+    x: jnp.ndarray,
+    *,
+    positions: jnp.ndarray,
+    cache: MLACache | None = None,
+    absorb: bool = False,
+    **_,
+):
+    m, H = cfg.mla, cfg.num_heads
+    B, T, _ = x.shape
+    scale = (m.qk_nope_head_dim + m.qk_rope_head_dim) ** -0.5
+
+    q_nope, q_rope = _queries(p, cfg, x, positions)
+    c_kv_new = dense(p["w_dkv"], x)  # (B, T, r) — raw latent, cached
+    k_rope_new = apply_rope(
+        dense(p["w_kr"], x)[:, :, None, :], positions, cfg.rope_theta
+    )[:, :, 0, :]  # (B, T, dr) shared across heads
+
+    if cache is None:
+        c_kv, k_rope = c_kv_new, k_rope_new
+        S = T
+        qpos = jnp.arange(T)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        new_cache = None
+    else:
+        idx = cache.index
+        c_kv = jax.lax.dynamic_update_slice(
+            cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), (0, idx, 0)
+        )
+        k_rope = jax.lax.dynamic_update_slice(
+            cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), (0, idx, 0)
+        )
+        S = cache.c_kv.shape[1]
+        qpos = idx + jnp.arange(T)[:, None]
+        kpos = jnp.arange(S)[None, :]
+        mask = kpos <= qpos
+        new_cache = MLACache(c_kv=c_kv, k_rope=k_rope, index=idx + T)
+
+    ckv_n = rmsnorm(p["kv_norm"], c_kv.astype(x.dtype), eps=cfg.rms_eps)  # (B, S, r)
+
+    # rope-part logits are shared by both paths
+    logits_rope = jnp.einsum(
+        "bthd,bsd->bhts", q_rope, k_rope.astype(x.dtype),
+        preferred_element_type=jnp.float32,
+    )
+
+    if not absorb:
+        # paper-faithful: materialize per-head K/V from the latent
+        k_nope = dense(p["w_uk"], ckv_n).reshape(B, S, H, m.qk_nope_head_dim)
+        v = dense(p["w_uv"], ckv_n).reshape(B, S, H, m.v_head_dim)
+        logits_nope = jnp.einsum(
+            "bthd,bshd->bhts", q_nope, k_nope, preferred_element_type=jnp.float32
+        )
+        logits = (logits_nope + logits_rope) * scale
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        out = jnp.einsum(
+            "bhts,bshd->bthd", probs.astype(v.dtype), v,
+            preferred_element_type=jnp.float32,
+        )  # (B, T, H, dv)
+    else:
+        # absorbed: q_lat = q_nope @ W_uk  → attend in latent space
+        # (fp32 operands: the 3-way bf16→f32 dot is unsupported on the CPU
+        # interpret backend, and fp32 here matches the unabsorbed numerics)
+        w_uk = p["w_uk"]["kernel"].reshape(m.kv_lora_rank, H, m.qk_nope_head_dim)
+        q_lat = jnp.einsum(
+            "bthd,rhd->bthr", q_nope.astype(jnp.float32), w_uk.astype(jnp.float32)
+        )
+        ckv32 = ckv_n.astype(jnp.float32)
+        logits_nope = jnp.einsum("bthr,bsr->bhts", q_lat, ckv32)
+        logits = (logits_nope + logits_rope) * scale
+        logits = jnp.where(mask[None, None], logits, -1e30)
+        probs = jax.nn.softmax(logits, axis=-1)
+        ctx_lat = jnp.einsum("bhts,bsr->bthr", probs, ckv32)  # (B, T, H, r)
+        w_uv = p["w_uv"]["kernel"].reshape(m.kv_lora_rank, H, m.v_head_dim)
+        out = jnp.einsum("bthr,rhd->bthd", ctx_lat, w_uv.astype(jnp.float32))
+
+    y = dense(p["w_o"], out.astype(x.dtype).reshape(B, T, H * m.v_head_dim))
+    return y, new_cache

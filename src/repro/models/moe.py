@@ -1,0 +1,138 @@
+"""Mixture-of-Experts FFN with top-k routing, shared experts, aux loss.
+
+Capacity-based scatter dispatch (Switch-style) chosen for TPU SPMD:
+
+* tokens are ranked within their expert by a **sort-based** position
+  computation (O(M log M) memory-lean; avoids the (M, E) one-hot cumsum
+  which at deepseek-v3 scale would materialize ~0.5 GB per device);
+* tokens beyond ``capacity = cf · M · k / E`` are dropped (gate contribution
+  zero) — standard capacity truncation;
+* the (E, C, d) expert buffer is sharded over the ``model`` axis (expert
+  parallelism): the scatter/gather between token-sharded and expert-sharded
+  layouts is exactly the MoE all-to-all the roofline analysis tracks.
+
+Aux load-balance loss (Switch/DeepSeek form): ``E · Σ_e f_e · P_e`` with
+``f_e`` the dispatch fraction and ``P_e`` the mean router probability.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+from repro.models.layers import dense_init, swiglu, swiglu_init, truncated_normal
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    m = cfg.moe
+    kr, ke, ks = jax.random.split(key, 3)
+    d, f, E = cfg.d_model, m.d_ff_expert, m.num_experts
+    k1, k2, k3 = jax.random.split(ke, 3)
+    std_in, std_out = (1.0 / d) ** 0.5, (1.0 / f) ** 0.5
+    p = {
+        "router": dense_init(kr, d, E, dtype=jnp.float32),  # router kept fp32
+        "experts": {
+            "w_gate": truncated_normal(k1, (E, d, f), dtype, std_in),
+            "w_up": truncated_normal(k2, (E, d, f), dtype, std_in),
+            "w_down": truncated_normal(k3, (E, f, d), dtype, std_out),
+        },
+    }
+    if m.num_shared_experts > 0:
+        p["shared"] = swiglu_init(
+            ks, d, m.d_ff_shared * m.num_shared_experts, dtype=dtype
+        )
+    return p
+
+
+def _positions_in_expert(ids_f: jnp.ndarray, num_experts: int) -> jnp.ndarray:
+    """Rank of each dispatch entry within its expert, via stable sort —
+    O(M) memory instead of the (M, E) cumsum."""
+    M = ids_f.shape[0]
+    order = jnp.argsort(ids_f, stable=True)
+    sorted_ids = ids_f[order]
+    idx = jnp.arange(M, dtype=jnp.int32)
+    is_start = jnp.concatenate(
+        [jnp.ones((1,), bool), sorted_ids[1:] != sorted_ids[:-1]]
+    )
+    run_start = jax.lax.associative_scan(jnp.maximum, jnp.where(is_start, idx, 0))
+    rank_sorted = idx - run_start
+    return jnp.zeros((M,), jnp.int32).at[order].set(rank_sorted)
+
+
+def moe_apply(p, cfg: ModelConfig, x: jnp.ndarray, *, compute_dtype=None):
+    """Returns (y, aux_loss).  x: (B, T, d).
+
+    Dispatch is **grouped per batch row** (group = sequence): positions and
+    capacity are computed within each row, so every intermediate stays
+    sharded (batch → data axis, experts → model axis) and the only
+    resharding is the (B, E, C, d) expert buffer — the MoE all-to-all.
+    A globally-flattened dispatch would force SPMD to replicate the (N·k, d)
+    gather (~68 GB/device at olmoe train scale).  Per-row capacity is the
+    standard group-limited variant (slightly stricter than global capacity).
+    """
+    m = cfg.moe
+    B, T, d = x.shape
+    E, k = m.num_experts, m.top_k
+    cd = compute_dtype or x.dtype
+    C = max(1, int(m.capacity_factor * T * k / E))
+
+    # --- routing (fp32)
+    logits = x.astype(jnp.float32) @ p["router"]["kernel"]  # (B, T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate_vals, expert_ids = jax.lax.top_k(probs, k)  # (B, T, k)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, axis=-1, keepdims=True), 1e-9
+    )
+
+    # --- aux load-balance loss (global over the batch)
+    f_e = jnp.mean(
+        jnp.sum(jax.nn.one_hot(expert_ids, E, dtype=jnp.float32), axis=2),
+        axis=(0, 1),
+    ) / k
+    P_e = jnp.mean(probs, axis=(0, 1))
+    aux = m.aux_loss_coef * E * jnp.sum(f_e * P_e)
+
+    M = T * k
+    tok_f = jnp.repeat(jnp.arange(T, dtype=jnp.int32), k)  # (M,)
+
+    def dispatch_row(xr, ids, gates):
+        """xr (T, d); ids/gates (T, k) → buffer (E, C, d) + combine info."""
+        ids_f = ids.reshape(M)
+        gate_f = gates.reshape(M)
+        pos = _positions_in_expert(ids_f, E)
+        keep = pos < C
+        dest = jnp.where(keep, ids_f * C + pos, E * C)  # overflow → trash
+        buf = jnp.zeros((E * C + 1, d), cd).at[dest].set(xr[tok_f].astype(cd))
+        return buf[: E * C].reshape(E, C, d), dest, keep, gate_f
+
+    xe, dest, keep, gate_f = jax.vmap(dispatch_row)(x, expert_ids, gate_vals)
+    # xe: (B, E, C, d) — resharding to (data, model, ·, ·) is the all-to-all.
+    # Pin the layout explicitly: without the constraint the SPMD partitioner
+    # has been observed to replicate the buffer and re-slice it (an
+    # all-gather of the whole dispatch buffer) instead of emitting the
+    # token-sized all-to-all — see EXPERIMENTS.md §Perf hillclimb A.
+    from repro.sharding.rules import maybe_shard
+
+    xe = maybe_shard(xe, "batch", "model", None, None)
+
+    # --- expert FFN (SwiGLU), batched over experts
+    w = p["experts"]
+    g = jnp.einsum("becd,edf->becf", xe, w["w_gate"].astype(cd))
+    u = jnp.einsum("becd,edf->becf", xe, w["w_up"].astype(cd))
+    h = jnp.einsum("becf,efd->becd", jax.nn.silu(g) * u, w["w_down"].astype(cd))
+    h = maybe_shard(h, "batch", "model", None, None)
+
+    def combine_row(hr, dest_r, keep_r, gate_r):
+        hf = hr.reshape(E * C, d)
+        ent = jnp.where(
+            keep_r[:, None], hf[jnp.minimum(dest_r, E * C - 1)], 0.0
+        ) * gate_r[:, None].astype(cd)
+        return jnp.zeros((T, d), cd).at[tok_f].add(ent)
+
+    y = jax.vmap(combine_row)(h, dest, keep, gate_f)
+
+    if "shared" in p:
+        y = y + swiglu(p["shared"], x, compute_dtype=cd)
+
+    return y.astype(x.dtype), aux

@@ -1,0 +1,244 @@
+"""Whisper-style encoder-decoder backbone (arXiv:2212.04356).
+
+The mel-spectrogram + conv frontend is a STUB per the assignment brief:
+``input_specs()`` provides precomputed frame embeddings (B, S_enc, d) — the
+output the two conv layers would produce.  This module implements the
+transformer backbone: bidirectional encoder, causal decoder with
+cross-attention, learned positions, pre-LN, GELU FFNs (whisper uses
+LayerNorm + GELU, not RMSNorm + SwiGLU).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import KVCache, kv_cache_init
+from repro.models.config import ModelConfig
+from repro.models.layers import (
+    cross_entropy,
+    dense,
+    dense_init,
+    embed,
+    embedding_init,
+    gelu_mlp,
+    gelu_mlp_init,
+    layernorm,
+    layernorm_init,
+    truncated_normal,
+    unembed,
+)
+from repro.sharding.rules import maybe_shard
+
+
+def _mha_init(key, cfg: ModelConfig, dtype):
+    kq, kk, kv, ko = jax.random.split(key, 4)
+    d, h, hd = cfg.d_model, cfg.num_heads, cfg.head_dim
+    return {
+        "wq": dense_init(kq, d, h * hd, bias=True, dtype=dtype),
+        "wk": dense_init(kk, d, h * hd, dtype=dtype),
+        "wv": dense_init(kv, d, h * hd, bias=True, dtype=dtype),
+        "wo": dense_init(ko, h * hd, d, bias=True, dtype=dtype),
+    }
+
+
+def _mha(p, cfg, xq, xkv, mask):
+    B, T, _ = xq.shape
+    S = xkv.shape[1]
+    H, D = cfg.num_heads, cfg.head_dim
+    q = dense(p["wq"], xq).reshape(B, T, H, D)
+    k = dense(p["wk"], xkv).reshape(B, S, H, D)
+    v = dense(p["wv"], xkv).reshape(B, S, H, D)
+    logits = jnp.einsum("bthd,bshd->bhts", q, k, preferred_element_type=jnp.float32)
+    logits = logits * (D ** -0.5)
+    if mask is not None:
+        logits = jnp.where(mask[None, None] if mask.ndim == 2 else mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhts,bshd->bthd", probs.astype(v.dtype), v, preferred_element_type=jnp.float32
+    ).astype(xq.dtype)
+    return dense(p["wo"], out.reshape(B, T, H * D))
+
+
+def _mha_cached(p, cfg, xq, cache: KVCache):
+    """Causal self-attention with KV cache (decode)."""
+    B, T, _ = xq.shape
+    H, D = cfg.num_heads, cfg.head_dim
+    q = dense(p["wq"], xq).reshape(B, T, H, D)
+    k = dense(p["wk"], xq).reshape(B, T, H, D)
+    v = dense(p["wv"], xq).reshape(B, T, H, D)
+    idx = cache.index
+    k_all = jax.lax.dynamic_update_slice(cache.k, k.astype(cache.k.dtype), (0, idx, 0, 0))
+    v_all = jax.lax.dynamic_update_slice(cache.v, v.astype(cache.v.dtype), (0, idx, 0, 0))
+    S = cache.k.shape[1]
+    mask = jnp.arange(S)[None, :] <= (idx + jnp.arange(T)[:, None])
+    logits = jnp.einsum(
+        "bthd,bshd->bhts", q, k_all.astype(q.dtype), preferred_element_type=jnp.float32
+    ) * (D ** -0.5)
+    logits = jnp.where(mask[None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum(
+        "bhts,bshd->bthd", probs.astype(q.dtype), v_all.astype(q.dtype),
+        preferred_element_type=jnp.float32,
+    ).astype(xq.dtype)
+    y = dense(p["wo"], out.reshape(B, T, H * D))
+    return y, KVCache(k=k_all, v=v_all, index=idx + T)
+
+
+def init_params(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 8)
+    d = cfg.d_model
+
+    def enc_layer(k):
+        k1, k2 = jax.random.split(k)
+        return {
+            "ln1": layernorm_init(d, dtype),
+            "attn": _mha_init(k1, cfg, dtype),
+            "ln2": layernorm_init(d, dtype),
+            "mlp": gelu_mlp_init(k2, d, cfg.d_ff, dtype),
+        }
+
+    def dec_layer(k):
+        k1, k2, k3 = jax.random.split(k, 3)
+        return {
+            "ln1": layernorm_init(d, dtype),
+            "self_attn": _mha_init(k1, cfg, dtype),
+            "ln2": layernorm_init(d, dtype),
+            "cross_attn": _mha_init(k2, cfg, dtype),
+            "ln3": layernorm_init(d, dtype),
+            "mlp": gelu_mlp_init(k3, d, cfg.d_ff, dtype),
+        }
+
+    enc = [enc_layer(jax.random.fold_in(ks[0], i)) for i in range(cfg.num_encoder_layers)]
+    dec = [dec_layer(jax.random.fold_in(ks[1], i)) for i in range(cfg.num_layers)]
+    stack = lambda ts: jax.tree.map(lambda *xs: jnp.stack(xs), *ts)
+    return {
+        "enc_pos": truncated_normal(ks[2], (cfg.encoder_seq_len, d), dtype, 0.02),
+        "dec_embed": embedding_init(ks[3], cfg.padded_vocab, d, dtype),
+        "dec_pos": truncated_normal(ks[4], (4096, d), dtype, 0.02),
+        "encoder": stack(enc),
+        "decoder": stack(dec),
+        "enc_ln": layernorm_init(d, dtype),
+        "dec_ln": layernorm_init(d, dtype),
+    }
+
+
+def encode(params, cfg: ModelConfig, frame_embeds: jnp.ndarray):
+    """frame_embeds: (B, S_enc, d) — the stubbed conv-frontend output."""
+    cd = jnp.dtype(cfg.compute_dtype)
+    S = frame_embeds.shape[1]
+    h = frame_embeds.astype(cd) + params["enc_pos"][None, :S].astype(cd)
+    h = maybe_shard(h, "batch", "seq", None)
+
+    def body(h, p):
+        h = h + _mha(p["attn"], cfg, layernorm(p["ln1"], h), layernorm(p["ln1"], h), None)
+        h = h + gelu_mlp(p["mlp"], layernorm(p["ln2"], h))
+        h = maybe_shard(h, "batch", "seq", None)
+        return h, None
+
+    if cfg.scan_layers:
+        h, _ = jax.lax.scan(body, h, params["encoder"])
+    else:  # cost-probe path: unroll so XLA counts every layer
+        for r in range(cfg.num_encoder_layers):
+            h, _ = body(h, jax.tree.map(lambda x: x[r], params["encoder"]))
+    return layernorm(params["enc_ln"], h)
+
+
+def decode(
+    params,
+    cfg: ModelConfig,
+    tokens: jnp.ndarray,
+    memory: jnp.ndarray,
+    *,
+    cache=None,
+    position_offset=0,
+):
+    """Causal decoder over ``tokens`` with cross-attention to ``memory``.
+
+    ``cache``: stacked per-layer KVCache for self-attention (decode mode).
+    """
+    cd = jnp.dtype(cfg.compute_dtype)
+    B, T = tokens.shape
+    h = embed(params["dec_embed"], tokens, compute_dtype=cd)
+    pos = jax.lax.dynamic_slice_in_dim(params["dec_pos"], position_offset, T, 0)
+    h = h + pos[None].astype(cd)
+    h = maybe_shard(h, "batch", "seq", None)
+    mem = memory.astype(cd)
+
+    if cache is None:
+        mask = jnp.tril(jnp.ones((T, T), bool))
+
+        def body(h, p):
+            h = h + _mha(p["self_attn"], cfg, layernorm(p["ln1"], h), layernorm(p["ln1"], h), mask)
+            h = h + _mha(p["cross_attn"], cfg, layernorm(p["ln2"], h), mem, None)
+            h = h + gelu_mlp(p["mlp"], layernorm(p["ln3"], h))
+            h = maybe_shard(h, "batch", "seq", None)
+            return h, None
+
+        if cfg.scan_layers:
+            h, _ = jax.lax.scan(body, h, params["decoder"])
+        else:
+            for r in range(cfg.num_layers):
+                h, _ = body(h, jax.tree.map(lambda x: x[r], params["decoder"]))
+        new_cache = None
+    else:
+
+        def body(h, xs):
+            p, c = xs
+            sa, c_new = _mha_cached(p["self_attn"], cfg, layernorm(p["ln1"], h), c)
+            h = h + sa
+            h = h + _mha(p["cross_attn"], cfg, layernorm(p["ln2"], h), mem, None)
+            h = h + gelu_mlp(p["mlp"], layernorm(p["ln3"], h))
+            return h, c_new
+
+        if cfg.scan_layers:
+            h, new_cache = jax.lax.scan(body, h, (params["decoder"], cache))
+        else:
+            slices = []
+            for r in range(cfg.num_layers):
+                h, c_out = body(
+                    h,
+                    (
+                        jax.tree.map(lambda x: x[r], params["decoder"]),
+                        jax.tree.map(lambda x: x[r], cache),
+                    ),
+                )
+                slices.append(c_out)
+            new_cache = jax.tree.map(lambda *xs: jnp.stack(xs), *slices)
+
+    h = layernorm(params["dec_ln"], h)
+    logits = unembed(params["dec_embed"], h)
+    if cfg.padded_vocab != cfg.vocab_size:
+        pad_mask = jnp.arange(cfg.padded_vocab) < cfg.vocab_size
+        logits = jnp.where(pad_mask, logits, -1e30)
+    logits = maybe_shard(logits, "batch", "seq", "model")
+    return logits, new_cache
+
+
+def init_decoder_cache(cfg: ModelConfig, batch: int, seq: int, dtype, *, index: int = 0):
+    caches = [
+        kv_cache_init(batch, seq, cfg.num_heads, cfg.head_dim, dtype)
+        for _ in range(cfg.num_layers)
+    ]
+    stacked = jax.tree.map(lambda *xs: jnp.stack(xs), *caches)
+    if index:
+        stacked = jax.tree.map(
+            lambda l: jnp.full_like(l, index) if l.dtype == jnp.int32 else l, stacked
+        )
+    return stacked
+
+
+def loss_fn(params, cfg: ModelConfig, batch):
+    """batch: frame_embeds (B, S_enc, d), tokens (B, T), labels (B, T)."""
+    memory = encode(params, cfg, batch["frame_embeds"])
+    logits, _ = decode(params, cfg, batch["tokens"], memory)
+    loss = cross_entropy(logits, batch["labels"], mask=batch.get("loss_mask"))
+    return loss, {"ce": loss}
+
+
+def decode_step(params, cfg: ModelConfig, tokens, memory, cache, *, position):
+    logits, new_cache = decode(
+        params, cfg, tokens, memory, cache=cache, position_offset=position
+    )
+    return logits, new_cache

@@ -1,0 +1,289 @@
+"""xLSTM blocks — sLSTM (scalar memory) + mLSTM (matrix memory).
+
+Follows arXiv:2405.04517.  mLSTM has a parallel (attention-like, with the
+stabilized exponential-gating decay matrix D) form for train/prefill and an
+O(1)-state recurrent form for decode; sLSTM is inherently sequential
+(``lax.scan`` over time; per-head block-diagonal recurrence) and carries a
+4-tuple state.  Both are sub-quadratic in memory at decode time, which is
+why xlstm-125m runs the ``long_500k`` shape.
+
+Simplifications vs. the reference implementation (noted in DESIGN.md): the
+small causal conv preceding q/k in the mLSTM block is omitted; projection
+factors follow the paper (2.0 mLSTM, 4/3 sLSTM).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.cache import MLSTMCache, SLSTMCache
+from repro.models.config import ModelConfig
+from repro.models.layers import dense, dense_init, rmsnorm, rmsnorm_init
+
+
+# ----------------------------------------------------------------------------
+# mLSTM
+# ----------------------------------------------------------------------------
+
+def mlstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    di = int(cfg.xlstm.proj_factor_mlstm * d)
+    di = (di // H) * H  # divisible by heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up_proj": dense_init(ks[0], d, 2 * di, dtype=dtype),
+        "wq": dense_init(ks[1], di, di, dtype=dtype),
+        "wk": dense_init(ks[2], di, di, dtype=dtype),
+        "wv": dense_init(ks[3], di, di, dtype=dtype),
+        "w_i": dense_init(ks[4], di, H, bias=True, dtype=dtype),
+        "w_f": dense_init(ks[5], di, H, bias=True, dtype=dtype),
+        "mh_norm": rmsnorm_init(di, dtype),
+        "down_proj": dense_init(ks[6], di, d, dtype=dtype),
+    }
+
+
+def _mlstm_chunk(state: MLSTMCache, inputs):
+    """One chunk of the chunkwise-parallel mLSTM (the memory-lean train/
+    prefill form — the full (T, T) decay matrix would be O(B·T²·H)).
+
+    Derivation (stabilized): with in-chunk cumulative log-forget
+    ``b_t = Σ_{r≤t} log σ(f_r)`` and running stabilizer
+    ``g_t = max(m_0, max_{s≤t}(i_s − b_s))`` (so ``m_t = b_t + g_t``):
+
+        h_t ∝ Σ_{s≤t} exp(i_s − b_s − g_t)·(q̃_t·k_s)·v_s
+              + exp(m_0 − g_t)·(q̃_t · C_0)
+
+    with the xLSTM max(|den|, exp(−m_t)) normalizer; the end-of-chunk state
+    uses the same weights at t = L.  Memory: O(B·L²·H) per chunk.
+    """
+    q, k, v, i_pre, f_pre = inputs  # (B, L, H, Dh) / (B, L, H)
+    B, L, H, Dh = q.shape
+    C0, n0, m0 = state.C, state.n, state.m  # (B,H,Dk,Dv), (B,H,Dk), (B,H)
+
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))  # (B,L,H)
+    logi = i_pre.astype(jnp.float32)
+    b = jnp.cumsum(logf, axis=1)  # (B,L,H)
+    a = jnp.maximum(jax.lax.cummax(logi - b, axis=1), -1e30)  # (B,L,H)
+    g = jnp.maximum(m0[:, None], a)  # (B,L,H)
+    m = b + g  # (B,L,H) = m_t
+
+    qf = q.astype(jnp.float32) * (Dh ** -0.5)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+
+    # intra-chunk decay weights  D_ts = i_s − b_s − g_t   (s ≤ t)
+    ib = logi - b  # (B,L,H) at s
+    Dmat = ib[:, None, :, :] - g[:, :, None, :]  # (B,T,S,H)
+    tri = (jnp.arange(L)[:, None] >= jnp.arange(L)[None, :])[None, :, :, None]
+    W = jnp.where(tri, jnp.exp(Dmat), 0.0)  # (B,T,S,H)
+
+    S = jnp.einsum("bthd,bshd->btsh", qf, kf)  # scores
+    num_intra = jnp.einsum("btsh,bshd->bthd", W * S, vf)
+    den_intra = jnp.sum(W * S, axis=2)  # (B,T,H)
+
+    # inter-chunk contribution from carried state
+    scale0 = jnp.exp(m0[:, None] - g)  # (B,L,H)
+    num_inter = jnp.einsum("bthd,bhdv->bthv", qf, C0) * scale0[..., None]
+    den_inter = jnp.einsum("bthd,bhd->bth", qf, n0) * scale0
+
+    num = num_intra + num_inter
+    den = den_intra + den_inter
+    h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m))[..., None]
+
+    # end-of-chunk state (t = L)
+    gL = g[:, -1]  # (B,H)
+    wL = jnp.exp(ib - gL[:, None])  # (B,L,H)
+    C_new = jnp.exp(m0 - gL)[..., None, None] * C0 + jnp.einsum(
+        "blh,blhk,blhv->bhkv", wL, kf, vf
+    )
+    n_new = jnp.exp(m0 - gL)[..., None] * n0 + jnp.einsum("blh,blhk->bhk", wL, kf)
+    m_new = b[:, -1] + gL
+    return MLSTMCache(C=C_new, n=n_new, m=m_new), h
+
+
+def _mlstm_parallel(q, k, v, i_pre, f_pre, *, chunk: int = 256):
+    """Chunkwise-parallel mLSTM over the full sequence.
+    q,k,v: (B,T,H,Dh); i,f: (B,T,H).  Scans chunks of ``chunk`` tokens."""
+    B, T, H, Dh = q.shape
+    L = min(chunk, T)
+    pad = (-T) % L
+    if pad:
+        zpad = lambda x: jnp.pad(x, [(0, 0), (0, pad)] + [(0, 0)] * (x.ndim - 2))
+        q, k, v = zpad(q), zpad(k), zpad(v)
+        i_pre = zpad(i_pre)
+        # padded steps must not pollute the state: forget ≈ 1, input ≈ -inf
+        f_pre = jnp.concatenate(
+            [f_pre, jnp.full((B, pad, H), 30.0, f_pre.dtype)], axis=1
+        )
+        i_pre = i_pre.at[:, T:].set(-1e30)
+    nch = (T + pad) // L
+
+    def to_chunks(x):
+        return x.reshape(B, nch, L, *x.shape[2:]).swapaxes(0, 1)
+
+    state0 = MLSTMCache(
+        C=jnp.zeros((B, H, Dh, Dh), jnp.float32),
+        n=jnp.zeros((B, H, Dh), jnp.float32),
+        m=jnp.full((B, H), -1e30, jnp.float32),
+    )
+    if nch == 1:
+        _, h = _mlstm_chunk(state0, (q, k, v, i_pre, f_pre))
+        h = h[:, :T]
+    else:
+        xs = tuple(map(to_chunks, (q, k, v, i_pre, f_pre)))
+        _, hs = jax.lax.scan(_mlstm_chunk, state0, xs)
+        h = hs.swapaxes(0, 1).reshape(B, nch * L, H, Dh)[:, :T]
+    return h.astype(q.dtype)
+
+
+def _mlstm_step(cache: MLSTMCache, q, k, v, i_pre, f_pre):
+    """Recurrent mLSTM step.  q,k,v: (B,H,Dh); i,f: (B,H)."""
+    logf = jax.nn.log_sigmoid(f_pre.astype(jnp.float32))
+    logi = i_pre.astype(jnp.float32)
+    m_new = jnp.maximum(logf + cache.m, logi)  # (B,H)
+    fw = jnp.exp(logf + cache.m - m_new)[..., None]
+    iw = jnp.exp(logi - m_new)[..., None]
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    C = cache.C * fw[..., None] + iw[..., None] * kf[..., None] * vf[..., None, :]
+    n = cache.n * fw + iw * kf
+    qf = q.astype(jnp.float32) * (q.shape[-1] ** -0.5)
+    num = jnp.einsum("bhkv,bhk->bhv", C, qf)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", n, qf)), jnp.exp(-m_new))
+    h = num / den[..., None]
+    return MLSTMCache(C=C, n=n, m=m_new), h.astype(q.dtype)
+
+
+def mlstm_apply(p, cfg: ModelConfig, x, *, cache: MLSTMCache | None = None, **_):
+    B, T, d = x.shape
+    H = cfg.num_heads
+    up = dense(p["up_proj"], x)
+    xi, z = jnp.split(up, 2, axis=-1)  # (B,T,di) each
+    di = xi.shape[-1]
+    Dh = di // H
+    q = dense(p["wq"], xi).reshape(B, T, H, Dh)
+    k = dense(p["wk"], xi).reshape(B, T, H, Dh)
+    v = dense(p["wv"], xi).reshape(B, T, H, Dh)
+    i_pre = dense(p["w_i"], xi)  # (B,T,H)
+    f_pre = dense(p["w_f"], xi)
+
+    if cache is None:
+        chunk = T if cfg.unroll_time_scans else 256
+        h = _mlstm_parallel(q, k, v, i_pre, f_pre, chunk=chunk)  # (B,T,H,Dh)
+        new_cache = None
+    else:
+        assert T == 1, "recurrent mLSTM path is for decode (T==1)"
+        new_cache, h1 = _mlstm_step(
+            cache, q[:, 0], k[:, 0], v[:, 0], i_pre[:, 0], f_pre[:, 0]
+        )
+        h = h1[:, None]
+    h = h.reshape(B, T, di)
+    h = rmsnorm(p["mh_norm"], h, eps=cfg.rms_eps)
+    out = dense(p["down_proj"], h * jax.nn.silu(z))
+    return out, new_cache
+
+
+# ----------------------------------------------------------------------------
+# sLSTM
+# ----------------------------------------------------------------------------
+
+def slstm_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d = cfg.d_model
+    H = cfg.num_heads
+    dh = d // H
+    ks = jax.random.split(key, 10)
+    df = int(cfg.xlstm.proj_factor_slstm * d)
+
+    def rinit(k):  # block-diagonal recurrent weights, stored (H, dh, dh)
+        return (1.0 / dh) ** 0.5 * jax.random.normal(k, (H, dh, dh)).astype(dtype)
+
+    return {
+        "w_z": dense_init(ks[0], d, d, bias=True, dtype=dtype),
+        "w_i": dense_init(ks[1], d, d, bias=True, dtype=dtype),
+        "w_f": dense_init(ks[2], d, d, bias=True, dtype=dtype),
+        "w_o": dense_init(ks[3], d, d, bias=True, dtype=dtype),
+        "r_z": rinit(ks[4]),
+        "r_i": rinit(ks[5]),
+        "r_f": rinit(ks[6]),
+        "r_o": rinit(ks[7]),
+        "group_norm": rmsnorm_init(d, dtype),
+        "ffn_up": dense_init(ks[8], d, 2 * df, dtype=dtype),
+        "ffn_down": dense_init(ks[9], df, d, dtype=dtype),
+    }
+
+
+def _block_recur(r, h, H, dh):
+    """Block-diagonal recurrence: h (B, d) → (B, d)."""
+    B = h.shape[0]
+    hb = h.reshape(B, H, dh)
+    return jnp.einsum("bhk,hkd->bhd", hb, r).reshape(B, H * dh)
+
+
+def _slstm_step(p, cfg, state: SLSTMCache, zifo):
+    """One sLSTM time step; zifo: tuple of (B, d) pre-activations (input part)."""
+    H = cfg.num_heads
+    d = state.h.shape[-1]
+    dh = d // H
+    hz, hi, hf, ho = (
+        _block_recur(p["r_z"].astype(jnp.float32), state.h, H, dh),
+        _block_recur(p["r_i"].astype(jnp.float32), state.h, H, dh),
+        _block_recur(p["r_f"].astype(jnp.float32), state.h, H, dh),
+        _block_recur(p["r_o"].astype(jnp.float32), state.h, H, dh),
+    )
+    xz, xi, xf, xo = zifo
+    z = jnp.tanh(xz + hz)
+    logi = xi + hi  # exponential input gate (log-space)
+    logf = jax.nn.log_sigmoid(xf + hf)
+    o = jax.nn.sigmoid(xo + ho)
+    m_new = jnp.maximum(logf + state.m, logi)
+    fw = jnp.exp(logf + state.m - m_new)
+    iw = jnp.exp(logi - m_new)
+    c = fw * state.c + iw * z
+    n = fw * state.n + iw
+    h = o * c / jnp.maximum(n, 1e-6)
+    return SLSTMCache(c=c, n=n, h=h, m=m_new)
+
+
+def slstm_apply(p, cfg: ModelConfig, x, *, cache: SLSTMCache | None = None, **_):
+    B, T, d = x.shape
+    cd = x.dtype
+    xz = dense(p["w_z"], x).astype(jnp.float32)
+    xi = dense(p["w_i"], x).astype(jnp.float32)
+    xf = dense(p["w_f"], x).astype(jnp.float32)
+    xo = dense(p["w_o"], x).astype(jnp.float32)
+
+    state0 = (
+        cache
+        if cache is not None
+        else SLSTMCache(
+            c=jnp.zeros((B, d), jnp.float32),
+            n=jnp.zeros((B, d), jnp.float32),
+            h=jnp.zeros((B, d), jnp.float32),
+            m=jnp.full((B, d), -1e30, jnp.float32),
+        )
+    )
+
+    def step(state, zifo):
+        new = _slstm_step(p, cfg, state, zifo)
+        return new, new.h
+
+    state_fin, hs = jax.lax.scan(
+        step,
+        state0,
+        (
+            xz.swapaxes(0, 1),
+            xi.swapaxes(0, 1),
+            xf.swapaxes(0, 1),
+            xo.swapaxes(0, 1),
+        ),
+    )
+    h = hs.swapaxes(0, 1).astype(cd)  # (B, T, d)
+    h = rmsnorm(p["group_norm"], h, eps=cfg.rms_eps)
+    # post-up/down GLU FFN (paper's proj factor 4/3)
+    up = dense(p["ffn_up"], h)
+    a, b = jnp.split(up, 2, axis=-1)
+    out = dense(p["ffn_down"], jax.nn.gelu(a) * b)
+    new_cache = state_fin if cache is not None else None
+    return out, new_cache

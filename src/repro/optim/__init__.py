@@ -1,0 +1,19 @@
+from repro.optim.optimizers import (
+    Optimizer,
+    adagrad,
+    adam,
+    clip_by_global_norm,
+    momentum,
+    sgd,
+    warmup_cosine,
+)
+
+__all__ = [
+    "Optimizer",
+    "adagrad",
+    "adam",
+    "clip_by_global_norm",
+    "momentum",
+    "sgd",
+    "warmup_cosine",
+]

@@ -1,0 +1,165 @@
+"""Optimizers (no external deps): SGD, momentum, Adam, Adagrad.
+
+Adagrad is here because the paper's §5 anchors on Dean et al.'s Downpour
+SGD, which "made use of the adaptive learning rate procedure in [19]"
+(Duchi et al.) for robustness under asynchrony — the staleness benchmark
+compares plain SGD vs Adagrad under delay.
+
+API mirrors optax minimally: ``opt.init(params) -> state``;
+``opt.update(grads, state, params) -> (updates, new_state)``; apply with
+``apply_updates``.  All states are pytrees (FSDP-shardable like params).
+The moment dtype is configurable — bf16 moments halve optimizer HBM for
+the 671B-scale dry-runs (see EXPERIMENTS.md §Dry-run).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+PyTree = Any
+
+
+class Optimizer(NamedTuple):
+    init: Callable[[PyTree], Any]
+    update: Callable[[PyTree, Any, PyTree], tuple[PyTree, Any]]
+
+
+def apply_updates(params: PyTree, updates: PyTree) -> PyTree:
+    return jax.tree.map(lambda p, u: (p + u).astype(p.dtype), params, updates)
+
+
+# ----------------------------------------------------------------------------
+
+def sgd(lr: float | Callable[[jnp.ndarray], jnp.ndarray]) -> Optimizer:
+    def init(params):
+        return {"count": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params=None):
+        step = state["count"]
+        eta = lr(step) if callable(lr) else lr
+        updates = jax.tree.map(lambda g: -eta * g, grads)
+        return updates, {"count": step + 1}
+
+    return Optimizer(init, update)
+
+
+def momentum(lr, beta: float = 0.9, nesterov: bool = False) -> Optimizer:
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "mu": jax.tree.map(jnp.zeros_like, params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["count"]
+        eta = lr(step) if callable(lr) else lr
+        mu = jax.tree.map(lambda m, g: beta * m + g, state["mu"], grads)
+        if nesterov:
+            upd = jax.tree.map(lambda m, g: -eta * (beta * m + g), mu, grads)
+        else:
+            upd = jax.tree.map(lambda m: -eta * m, mu)
+        return upd, {"count": step + 1, "mu": mu}
+
+    return Optimizer(init, update)
+
+
+def adam(
+    lr,
+    b1: float = 0.9,
+    b2: float = 0.999,
+    eps: float = 1e-8,
+    weight_decay: float = 0.0,
+    moment_dtype: str | None = None,
+) -> Optimizer:
+    """AdamW.  ``moment_dtype="bfloat16"`` halves optimizer memory."""
+
+    def _cast(x):
+        return x.astype(moment_dtype) if moment_dtype else x
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "m": jax.tree.map(lambda p: _cast(jnp.zeros_like(p, jnp.float32)), params),
+            "v": jax.tree.map(lambda p: _cast(jnp.zeros_like(p, jnp.float32)), params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["count"] + 1
+        eta = lr(step) if callable(lr) else lr
+        m = jax.tree.map(
+            lambda m_, g: _cast(b1 * m_.astype(jnp.float32) + (1 - b1) * g.astype(jnp.float32)),
+            state["m"], grads,
+        )
+        v = jax.tree.map(
+            lambda v_, g: _cast(
+                b2 * v_.astype(jnp.float32) + (1 - b2) * jnp.square(g.astype(jnp.float32))
+            ),
+            state["v"], grads,
+        )
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(m_, v_, p):
+            mhat = m_.astype(jnp.float32) / bc1
+            vhat = v_.astype(jnp.float32) / bc2
+            u = -eta * mhat / (jnp.sqrt(vhat) + eps)
+            if weight_decay:
+                u = u - eta * weight_decay * p.astype(jnp.float32)
+            return u.astype(p.dtype)
+
+        updates = jax.tree.map(upd, m, v, params)
+        return updates, {"count": step, "m": m, "v": v}
+
+    return Optimizer(init, update)
+
+
+def adagrad(lr, eps: float = 1e-10) -> Optimizer:
+    """Duchi et al. [19] — the paper's cited adaptive method."""
+
+    def init(params):
+        return {
+            "count": jnp.zeros((), jnp.int32),
+            "G": jax.tree.map(lambda p: jnp.zeros_like(p, jnp.float32), params),
+        }
+
+    def update(grads, state, params=None):
+        step = state["count"]
+        eta = lr(step) if callable(lr) else lr
+        G = jax.tree.map(
+            lambda a, g: a + jnp.square(g.astype(jnp.float32)), state["G"], grads
+        )
+        updates = jax.tree.map(
+            lambda g, a: (-eta * g.astype(jnp.float32) / (jnp.sqrt(a) + eps)).astype(g.dtype),
+            grads, G,
+        )
+        return updates, {"count": step + 1, "G": G}
+
+    return Optimizer(init, update)
+
+
+# ----------------------------------------------------------------------------
+
+def clip_by_global_norm(opt: Optimizer, max_norm: float) -> Optimizer:
+    def update(grads, state, params=None):
+        norm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-12))
+        grads = jax.tree.map(lambda g: g * scale.astype(g.dtype), grads)
+        return opt.update(grads, state, params)
+
+    return Optimizer(opt.init, update)
+
+
+def warmup_cosine(peak_lr: float, warmup: int, total: int, floor: float = 0.1):
+    def schedule(step):
+        step = step.astype(jnp.float32)
+        warm = peak_lr * step / max(warmup, 1)
+        prog = jnp.clip((step - warmup) / max(total - warmup, 1), 0.0, 1.0)
+        cos = peak_lr * (floor + (1 - floor) * 0.5 * (1 + jnp.cos(jnp.pi * prog)))
+        return jnp.where(step < warmup, warm, cos)
+
+    return schedule

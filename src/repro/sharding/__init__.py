@@ -1,0 +1,15 @@
+from repro.sharding.rules import (
+    MeshContext,
+    current_mesh_context,
+    maybe_shard,
+    partition_params,
+    set_mesh_context,
+)
+
+__all__ = [
+    "MeshContext",
+    "current_mesh_context",
+    "maybe_shard",
+    "partition_params",
+    "set_mesh_context",
+]

@@ -1,0 +1,3 @@
+from repro.telemetry import hlo, roofline
+
+__all__ = ["hlo", "roofline"]

@@ -1,0 +1,178 @@
+"""Trip-count-correct cost extraction via probe lowering.
+
+XLA's ``cost_analysis()`` counts each ``while``-loop body ONCE, so a model
+compiled as scan-over-layers under-reports FLOPs/bytes by ~num_layers and
+its HLO text under-counts collectives the same way.  Rather than parsing
+loop trip counts out of optimized HLO, we lower small *unrolled* probe
+variants and extrapolate:
+
+* segments are unrolled (``cfg.scan_layers=False``) with per-segment
+  repeats overridden to 1 (and 2, one segment at a time) →
+  ``marginal_s = cost(rep_s=2) − cost(all 1)`` isolates one pattern-unit;
+* time-scans (mamba chunks, mLSTM chunks) are collapsed to a single chunk
+  (``cfg.unroll_time_scans=True``) so nothing hides in a loop.  The probes
+  use a reduced batch so the single-chunk form fits host memory;
+* costs are affine in batch (activation terms ∝ B, parameter terms const),
+  so two batch probes (B₁, B₂) give exact linear extrapolation to the full
+  global batch;
+* the sLSTM time recurrence cannot be unrolled (T steps) and is added
+  analytically (8·d·d_h + ~16·d FLOPs and ~12 (B,d) f32 array touches per
+  token per sLSTM layer; no collectives inside the scan).
+
+``full = base + Σ_s R_s·marginal_s`` evaluated at the production batch is
+what feeds the §Roofline three-term model.  Approximation quality is
+tracked by comparing probe totals against the (undercounted) full-compile
+numbers in the dry-run JSON.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+
+from repro.launch import specs as S
+from repro.launch.mesh import data_axis_size
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig
+from repro.sharding.rules import set_mesh_context
+from repro.telemetry import hlo as hlo_lib
+
+
+def _extract_costs(compiled) -> dict:
+    cost = compiled.cost_analysis()
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0]
+    coll = hlo_lib.collective_stats(compiled.as_text())
+    return {
+        "flops": float(cost.get("flops", 0.0)),
+        "bytes": float(cost.get("bytes accessed", 0.0)),
+        "coll": float(coll.get("total_bytes", 0)),
+    }
+
+
+def _lower_probe(cfg: ModelConfig, kind: str, mesh, B: int, S_len: int, *,
+                 mla_absorb: bool, strategy: str = "tp") -> dict:
+    set_mesh_context(S.make_mesh_context_for(mesh, cfg, B, strategy=strategy))
+    try:
+        jitted, args, _ = S.build_jitted(
+            cfg, kind, mesh, B, S_len, mla_absorb=mla_absorb, strategy=strategy
+        )
+        compiled = jitted.lower(*args).compile()
+        return _extract_costs(compiled)
+    finally:
+        set_mesh_context(None)
+
+
+def _probe_variants(cfg: ModelConfig):
+    """[(tag, probe_cfg, repeats_full)] — base (all segments ×1) first, then
+    one variant per segment with that segment at ×2."""
+    base_kw = dict(scan_layers=False, unroll_time_scans=True)
+    if cfg.is_encoder_decoder:
+        enc, dec = cfg.num_encoder_layers, cfg.num_layers
+        variants = [
+            ("base", cfg.replace(num_encoder_layers=1, num_layers=1, **base_kw)),
+            ("enc", cfg.replace(num_encoder_layers=2, num_layers=1, **base_kw)),
+            ("dec", cfg.replace(num_encoder_layers=1, num_layers=2, **base_kw)),
+        ]
+        repeats = [enc, dec]
+        return variants, repeats
+    segs = tf.segments(cfg)
+    n = len(segs)
+    ones = (1,) * n
+    variants = [("base", cfg.replace(segment_repeats=ones, **base_kw))]
+    for i in range(n):
+        reps = tuple(2 if j == i else 1 for j in range(n))
+        variants.append((f"seg{i}", cfg.replace(segment_repeats=reps, **base_kw)))
+    repeats = [seg.repeats for seg in segs]
+    return variants, repeats
+
+
+def _slstm_correction(cfg: ModelConfig, kind: str, B: int, T: int) -> dict:
+    """Analytic cost of the sLSTM per-token recurrence (see module doc)."""
+    if cfg.xlstm is None:
+        return {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    n_slstm = sum(
+        1 for s in tf.layer_specs(cfg) if s.mixer == "slstm"
+    )
+    if n_slstm == 0:
+        return {"flops": 0.0, "bytes": 0.0, "coll": 0.0}
+    d = cfg.d_model
+    dh = d // cfg.num_heads
+    tokens = B * (T if kind != "decode" else 1)
+    flops = tokens * n_slstm * (8.0 * d * dh + 16.0 * d)
+    byts = tokens * n_slstm * (12.0 * d * 4.0)
+    if kind == "train":  # backward ≈ 2× forward for the recurrence
+        flops *= 3.0
+        byts *= 3.0
+    return {"flops": flops, "bytes": byts, "coll": 0.0}
+
+
+def probe_costs(
+    cfg: ModelConfig,
+    kind: str,
+    mesh,
+    B_full: int,
+    S_len: int,
+    *,
+    mla_absorb: bool = False,
+    strategy: str = "tp",
+) -> dict:
+    """Trip-count-corrected per-device {flops, bytes, coll} at (B_full, S_len)."""
+    if strategy in ("dp", "dp_fsdp"):
+        dsize = mesh.size  # batch shards over every axis
+    else:
+        dsize = data_axis_size(mesh)
+    if B_full <= dsize:
+        b_probes = [B_full]  # long_500k etc.: probe the real batch directly
+    else:
+        b1 = dsize
+        b2 = min(2 * dsize, B_full)
+        b_probes = [b1] if b2 == b1 else [b1, b2]
+
+    variants, repeats = _probe_variants(cfg)
+    # measure: costs[tag][bi]
+    costs = {}
+    for tag, pcfg in variants:
+        costs[tag] = [
+            _lower_probe(
+                pcfg, kind, mesh, b, S_len,
+                mla_absorb=mla_absorb, strategy=strategy,
+            )
+            for b in b_probes
+        ]
+
+    def combine(bi: int) -> dict:
+        base = costs["base"][bi]
+        tags = [t for t, _ in variants[1:]]
+        marg = {
+            t: {k: costs[t][bi][k] - base[k] for k in base} for t in tags
+        }
+        out = dict(base)
+        # base already contains one copy of every segment
+        for t, r in zip(tags, repeats):
+            for k in out:
+                out[k] += marg[t][k] * (r - 1)
+        return out
+
+    full_at = [combine(i) for i in range(len(b_probes))]
+    if len(b_probes) == 1:
+        scale = B_full / b_probes[0]
+        result = {k: v * scale for k, v in full_at[0].items()} if b_probes[0] != B_full else full_at[0]
+    else:
+        b1, b2 = b_probes
+        result = {}
+        for k in full_at[0]:
+            slope = (full_at[1][k] - full_at[0][k]) / (b2 - b1)
+            result[k] = full_at[0][k] + slope * (B_full - b1)
+
+    corr = _slstm_correction(cfg, kind, B_full, S_len)
+    # probes report per-device numbers for batch-sharded terms already; the
+    # analytic sLSTM correction is global → divide by data-parallel size
+    result = {
+        "flops": result["flops"] + corr["flops"] / dsize,
+        "bytes": result["bytes"] + corr["bytes"] / dsize,
+        "coll": result["coll"] + corr["coll"] / dsize,
+        "n_probes": len(variants) * len(b_probes),
+    }
+    return result

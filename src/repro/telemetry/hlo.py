@@ -1,0 +1,97 @@
+"""HLO text analysis: collective-byte accounting + op census.
+
+``cost_analysis()`` does not expose collective traffic, so we parse the
+post-SPMD (per-device) HLO text and sum operand bytes of every
+``all-gather`` / ``all-reduce`` / ``reduce-scatter`` / ``all-to-all`` /
+``collective-permute`` op.  Shapes in HLO are per-device after partitioning,
+so the sums are bytes moved per device — multiply by chip count for fleet
+totals (the roofline uses per-device directly).
+"""
+
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1,
+    "s4": 1,
+    "u4": 1,
+    "s8": 1,
+    "u8": 1,
+    "s16": 2,
+    "u16": 2,
+    "bf16": 2,
+    "f16": 2,
+    "s32": 4,
+    "u32": 4,
+    "f32": 4,
+    "s64": 8,
+    "u64": 8,
+    "f64": 8,
+    "c64": 8,
+    "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COLLECTIVES = (
+    "all-gather",
+    "all-reduce",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape literal like ``f32[128,1024]`` (or a tuple)."""
+    total = 0
+    for m in _SHAPE_RE.finditer(shape_str):
+        dt, dims = m.group(1), m.group(2)
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """Per-collective-kind {count, bytes} from (per-device) HLO text."""
+    stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        # [ROOT] result-shape = opname(...) — match " = <shape> <op>(" forms
+        m = re.match(
+            r"^(?:ROOT\s+)?[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", s
+        )
+        if not m:
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-start") or op.startswith(c + "."):
+                base = c
+                break
+        if base is None:
+            continue
+        nbytes = _shape_bytes(shape_str)
+        stats[base]["count"] += 1
+        stats[base]["bytes"] += nbytes
+    out = dict(stats)
+    out["total_bytes"] = sum(v["bytes"] for v in stats.values())
+    out["total_count"] = sum(v["count"] for v in stats.values())
+    return out
+
+
+def op_census(hlo_text: str, ops=("fusion", "dot", "convolution", "custom-call")) -> dict:
+    census = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = re.match(
+            r"^\s*(?:ROOT\s+)?[%\w.\-]+\s*=\s*(\([^)]*\)|\S+)\s+([\w\-]+)", line
+        )
+        if m and m.group(2) in ops:
+            census[m.group(2)] += 1
+    return dict(census)

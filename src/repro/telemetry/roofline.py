@@ -1,0 +1,77 @@
+"""Three-term roofline model for TPU v5e (DESIGN/EXPERIMENTS §Roofline).
+
+    compute    = FLOPs_per_device / peak_FLOPs            [s]
+    memory     = HBM_bytes_per_device / HBM_bw            [s]
+    collective = collective_bytes_per_device / link_bw    [s]
+
+Inputs come from the compiled dry-run artifact: ``cost_analysis()`` gives
+per-device FLOPs and bytes accessed; ``telemetry.hlo.collective_stats``
+gives per-device collective bytes.  The dominant term is the bottleneck;
+MODEL_FLOPS/HLO_FLOPs measures how much compiled compute is "useful"
+(catches remat recompute and dispatch overhead).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, asdict
+
+# TPU v5e hardware constants (per chip)
+PEAK_FLOPS_BF16 = 197e12  # FLOP/s
+HBM_BW = 819e9  # B/s
+ICI_BW = 50e9  # B/s per link
+
+
+@dataclass
+class Roofline:
+    compute_s: float
+    memory_s: float
+    collective_s: float
+    dominant: str
+    flops_per_device: float
+    bytes_per_device: float
+    collective_bytes_per_device: float
+    model_flops: float
+    useful_ratio: float  # MODEL_FLOPS / (HLO_FLOPs × chips)
+    chips: int
+
+    def to_dict(self):
+        return asdict(self)
+
+
+def roofline(
+    *,
+    flops_per_device: float,
+    bytes_per_device: float,
+    collective_bytes_per_device: float,
+    chips: int,
+    model_flops: float = 0.0,
+) -> Roofline:
+    compute = flops_per_device / PEAK_FLOPS_BF16
+    memory = bytes_per_device / HBM_BW
+    coll = collective_bytes_per_device / ICI_BW
+    terms = {"compute": compute, "memory": memory, "collective": coll}
+    dominant = max(terms, key=terms.get)
+    total_flops = flops_per_device * chips
+    useful = model_flops / total_flops if (model_flops and total_flops) else 0.0
+    return Roofline(
+        compute_s=compute,
+        memory_s=memory,
+        collective_s=coll,
+        dominant=dominant,
+        flops_per_device=flops_per_device,
+        bytes_per_device=bytes_per_device,
+        collective_bytes_per_device=collective_bytes_per_device,
+        model_flops=model_flops,
+        useful_ratio=useful,
+        chips=chips,
+    )
+
+
+def model_flops_train(n_params_active: float, tokens: float) -> float:
+    """6·N·D — the standard dense training FLOP count (fwd+bwd)."""
+    return 6.0 * n_params_active * tokens
+
+
+def model_flops_decode(n_params_active: float, tokens: float) -> float:
+    """2·N per generated token (forward only)."""
+    return 2.0 * n_params_active * tokens

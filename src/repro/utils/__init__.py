@@ -1,0 +1,29 @@
+from repro.utils import tree
+from repro.utils.tree import (
+    tree_add,
+    tree_sub,
+    tree_scale,
+    tree_axpy,
+    tree_zeros_like,
+    tree_dot,
+    tree_norm,
+    tree_size,
+    tree_bytes,
+    tree_allclose,
+    tree_cast,
+)
+
+__all__ = [
+    "tree",
+    "tree_add",
+    "tree_sub",
+    "tree_scale",
+    "tree_axpy",
+    "tree_zeros_like",
+    "tree_dot",
+    "tree_norm",
+    "tree_size",
+    "tree_bytes",
+    "tree_allclose",
+    "tree_cast",
+]

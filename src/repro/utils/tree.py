@@ -1,0 +1,62 @@
+"""Pytree arithmetic helpers used across the framework.
+
+Every distributed-learning primitive in ``repro.core`` treats model
+parameters as an arbitrary pytree; these helpers provide the small vector
+algebra needed (axpy, dot, norms) without pulling in an optimizer library.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def tree_add(a, b):
+    return jax.tree.map(jnp.add, a, b)
+
+
+def tree_sub(a, b):
+    return jax.tree.map(jnp.subtract, a, b)
+
+
+def tree_scale(s, a):
+    return jax.tree.map(lambda x: s * x, a)
+
+
+def tree_axpy(alpha, x, y):
+    """alpha * x + y, elementwise over matching pytrees."""
+    return jax.tree.map(lambda xi, yi: alpha * xi + yi, x, y)
+
+
+def tree_zeros_like(a):
+    return jax.tree.map(jnp.zeros_like, a)
+
+
+def tree_dot(a, b):
+    leaves = jax.tree.map(lambda x, y: jnp.vdot(x, y), a, b)
+    return jax.tree.reduce(jnp.add, leaves, jnp.asarray(0.0))
+
+
+def tree_norm(a):
+    return jnp.sqrt(tree_dot(a, a))
+
+
+def tree_size(a) -> int:
+    """Total number of scalar elements in the pytree (static)."""
+    return sum(int(x.size) for x in jax.tree.leaves(a))
+
+
+def tree_bytes(a) -> int:
+    """Total bytes of the pytree's leaves (static)."""
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(a))
+
+
+def tree_allclose(a, b, rtol=1e-5, atol=1e-6) -> bool:
+    oks = jax.tree.map(
+        lambda x, y: bool(jnp.allclose(x, y, rtol=rtol, atol=atol)), a, b
+    )
+    return all(jax.tree.leaves(oks))
+
+
+def tree_cast(a, dtype):
+    return jax.tree.map(lambda x: x.astype(dtype), a)

@@ -1,0 +1,117 @@
+"""Distributed clustering (paper §4.1)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ml import clustering
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(13)
+    centers = np.asarray([(-5.0, -5.0), (0.0, 5.0), (5.0, -2.0)])
+    X = np.concatenate([rng.normal(size=(60, 2)) * 0.7 + c for c in centers])
+    return jnp.asarray(X), jnp.asarray(centers)
+
+
+def _init(X, K, seed=0):
+    import jax
+
+    return clustering.kmeans_pp_init(jax.random.key(seed), X, K)
+
+
+def test_kmeans_recovers_centers(blobs):
+    X, centers = blobs
+    res = clustering.kmeans(X, _init(X, 3), num_clusters=3, iters=30)
+    found = np.sort(np.asarray(res.centroids), axis=0)
+    np.testing.assert_allclose(found, np.sort(np.asarray(centers), 0), atol=0.5)
+
+
+def test_distributed_kmeans_identical_to_centralized(blobs):
+    """Sufficient-statistics Allreduce ⇒ exactly the centralized trajectory."""
+    X, _ = blobs
+    C0 = _init(X, 3)
+    res_c = clustering.kmeans(X, C0, num_clusters=3, metric="l2sq", iters=25)
+    Xs = X.reshape(3, 60, 2)
+    res_d = clustering.distributed_kmeans(Xs, C0, num_clusters=3, iters=25)
+    np.testing.assert_allclose(res_c.centroids, res_d.centroids, atol=1e-5)
+    np.testing.assert_allclose(float(res_c.inertia), float(res_d.inertia), rtol=1e-5)
+
+
+@pytest.mark.parametrize("metric", ["l1", "l2", "linf"])
+def test_metrics_all_separate_blobs(blobs, metric):
+    X, centers = blobs
+    res = clustering.kmeans(X, _init(X, 3), num_clusters=3, metric=metric, iters=30)
+    found = np.sort(np.asarray(res.centroids), axis=0)
+    np.testing.assert_allclose(found, np.sort(np.asarray(centers), 0), atol=0.7)
+
+
+def test_l1_mstep_is_median():
+    X = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [10.0, 0.0]])
+    C, counts = clustering._m_step(X, jnp.zeros(3, dtype=jnp.int32), 1, "l1")
+    assert float(C[0, 0]) == 1.0  # median, not mean (≈3.67)
+
+
+def test_linf_mstep_is_midrange():
+    X = jnp.asarray([[0.0, 0.0], [1.0, 0.0], [10.0, 0.0]])
+    C, counts = clustering._m_step(X, jnp.zeros(3, dtype=jnp.int32), 1, "linf")
+    assert float(C[0, 0]) == 5.0  # (min+max)/2
+
+
+def test_consensus_kmeans_homogeneous(blobs):
+    """[21] assumes homogeneous node data (paper §4.1: 'Since the model is
+    the same in each agent when dealing with homogenous data, ADMM can also
+    be used') — shards are i.i.d. shuffles here."""
+    X, centers = blobs
+    rng = np.random.default_rng(3)
+    Xsh = jnp.asarray(np.asarray(X)[rng.permutation(X.shape[0])])
+    Xs = Xsh.reshape(3, 60, 2)
+    C, res = clustering.consensus_kmeans(Xs, _init(X, 3), iters=40)
+    found = np.sort(np.asarray(C), axis=0)
+    np.testing.assert_allclose(found, np.sort(np.asarray(centers), 0), atol=0.8)
+
+
+def test_consensus_kmeans_heterogeneous_with_alignment(blobs):
+    """BEYOND-PAPER: [21] assumes homogeneous shards; with the greedy
+    slot-alignment step our consensus k-means survives maximally
+    heterogeneous shards (node k = blob k) within ~20% of centralized
+    inertia.  Without alignment this collapses (slot-permutation mixing)."""
+    X, centers = blobs
+    Xs = X.reshape(3, 60, 2)  # node k = blob k (maximally heterogeneous)
+    C, _ = clustering.consensus_kmeans(Xs, _init(X, 3), iters=40)
+    inertia_het = float(
+        jnp.sum(jnp.min(clustering.pdist(X, C, metric="l2sq"), axis=1))
+    )
+    res_central = clustering.kmeans(X, _init(X, 3), num_clusters=3, iters=30)
+    assert inertia_het < 1.2 * float(res_central.inertia)
+
+
+def test_summarize_representatives(blobs):
+    X, _ = blobs
+    reps, mask = clustering.summarize_representatives(
+        X, eps=1.0, min_pts=5, max_reps=30
+    )
+    n = int(jnp.sum(mask))
+    assert 3 <= n <= 30
+    # every representative's eps-ball holds >= min_pts points
+    d = clustering.pdist(X, reps[mask > 0], metric="l2")
+    assert bool(jnp.all(jnp.sum(d <= 1.0, axis=0) >= 5))
+
+
+def test_radius_t_clustering(blobs):
+    X, centers = blobs
+    C, counts, mask = clustering.radius_t_clustering(X, T=2.5, max_clusters=20)
+    n = int(jnp.sum(mask))
+    assert 3 <= n <= 8  # roughly one cluster per blob
+    assert float(jnp.sum(counts)) == X.shape[0]
+
+
+def test_merge_centroids():
+    C = jnp.asarray([[0.0, 0.0], [0.2, 0.0], [5.0, 5.0]])
+    counts = jnp.asarray([10.0, 30.0, 5.0])
+    mask = jnp.ones(3)
+    C2, counts2, mask2 = clustering.merge_centroids(C, counts, mask, T=1.0)
+    assert int(jnp.sum(mask2)) == 2
+    # merged centroid is the count-weighted mean
+    np.testing.assert_allclose(C2[0], jnp.asarray([0.15, 0.0]), atol=1e-6)

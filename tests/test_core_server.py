@@ -1,0 +1,124 @@
+"""Tests for the paper's §5 central-information-server algorithm."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import schedules, server
+
+
+def _make_problem(K=4, Nk=10, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    lr = 0.05
+
+    def F(k, theta):
+        Xk, yk = X[k], y[k]
+        g = Xk.T @ (Xk @ theta - yk) / Nk
+        return theta - lr * g
+
+    return F, w, n
+
+
+class TestRoundRobinEquivalence:
+    """Paper §5: round-robin composition ≡ serial mini-batch gradient
+    descent over the union of shards."""
+
+    def test_matches_serial_composition(self):
+        F, w, n = _make_problem()
+        sched = schedules.round_robin(4, 5)
+        final, traj = server.run_protocol(jnp.zeros(n), F, sched)
+        theta = jnp.zeros(n)
+        for t in range(len(sched)):
+            theta = F(int(sched[t]), theta)
+        np.testing.assert_allclose(final.theta, theta, rtol=1e-5, atol=1e-6)
+
+    def test_converges_to_truth(self):
+        F, w, n = _make_problem()
+        sched = schedules.round_robin(4, 100)
+        final, _ = server.run_protocol(jnp.zeros(n), F, sched)
+        assert float(jnp.linalg.norm(final.theta - w)) < 1e-2
+
+    def test_trajectory_shape(self):
+        F, w, n = _make_problem()
+        sched = schedules.round_robin(4, 3)
+        _, traj = server.run_protocol(jnp.zeros(n), F, sched)
+        assert traj.shape == (12, n)
+
+
+class TestStaleHandoff:
+    """The literal θ_{t-1} protocol: still converges (one-step staleness)."""
+
+    def test_stale_converges_near_truth(self):
+        F, w, n = _make_problem()
+        sched = schedules.round_robin(4, 150)
+        final, _ = server.run_protocol(jnp.zeros(n), F, sched, handoff="stale")
+        assert float(jnp.linalg.norm(final.theta - w)) < 0.05
+
+    def test_stale_differs_from_sequential(self):
+        F, w, n = _make_problem()
+        sched = schedules.round_robin(4, 2)
+        seq, _ = server.run_protocol(jnp.zeros(n), F, sched)
+        sta, _ = server.run_protocol(jnp.zeros(n), F, sched, handoff="stale")
+        assert not jnp.allclose(seq.theta, sta.theta)
+
+    def test_unknown_handoff_raises(self):
+        st = server.init_server(jnp.zeros(3))
+        with pytest.raises(ValueError):
+            server.contact(st, jnp.ones(3), handoff="bogus")
+
+
+class TestAsyncSchedule:
+    """Paper §5: S_t ~ S with p(S=i) > 0 ∀i ⇒ convergence preserved."""
+
+    def test_async_converges(self):
+        F, w, n = _make_problem()
+        sched = schedules.asynchronous(jax.random.key(0), 4, 600)
+        final, _ = server.run_protocol(jnp.zeros(n), F, sched)
+        assert float(jnp.linalg.norm(final.theta - w)) < 2e-2
+
+    def test_every_node_contacts(self):
+        sched = schedules.asynchronous(jax.random.key(1), 8, 400)
+        assert float(schedules.coverage(sched, 8)) == 1.0
+
+    def test_zero_prob_rejected(self):
+        probs = jnp.asarray([0.5, 0.5, 0.0, 0.0])
+        with pytest.raises(ValueError):
+            schedules.asynchronous(jax.random.key(0), 4, 10, probs=probs)
+
+    def test_work_proportional(self):
+        p = schedules.work_proportional_probs(jnp.asarray([10.0, 20.0, 40.0]))
+        np.testing.assert_allclose(jnp.sum(p), 1.0, rtol=1e-6)
+        assert p[0] > p[1] > p[2]  # smaller shard → contacts more often
+
+    def test_nonuniform_distribution_respected(self):
+        probs = jnp.asarray([0.7, 0.1, 0.1, 0.1])
+        sched = schedules.asynchronous(jax.random.key(2), 4, 4000, probs=probs)
+        frac0 = float(jnp.mean((sched == 0).astype(jnp.float32)))
+        assert abs(frac0 - 0.7) < 0.05
+
+
+class TestServerState:
+    def test_contact_records_and_hands_back(self):
+        st = server.init_server(jnp.zeros(2))
+        st, rec = server.contact(st, jnp.ones(2))
+        assert int(st.t) == 1
+        np.testing.assert_array_equal(st.theta, jnp.ones(2))
+        np.testing.assert_array_equal(st.theta_prev, jnp.zeros(2))
+        np.testing.assert_array_equal(rec, jnp.ones(2))  # sequential
+
+    def test_pull_returns_current(self):
+        st = server.init_server(jnp.full((2,), 3.0))
+        np.testing.assert_array_equal(server.pull(st), jnp.full((2,), 3.0))
+
+    def test_pytree_thetas(self):
+        theta = {"w": jnp.zeros((2, 2)), "b": jnp.zeros(2)}
+
+        def F(k, th):
+            return jax.tree.map(lambda x: x + 1.0, th)
+
+        final, _ = server.run_protocol(theta, F, schedules.round_robin(2, 3))
+        np.testing.assert_allclose(final.theta["b"], jnp.full((2,), 6.0))

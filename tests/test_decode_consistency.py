@@ -1,0 +1,129 @@
+"""Decode-with-cache must reproduce the full forward pass exactly for every
+mixer family — the core serving-correctness invariant."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.models import transformer as tf, whisper
+from repro.models.config import (
+    MLAConfig,
+    MoEConfig,
+    ModelConfig,
+    SSMConfig,
+    XLSTMConfig,
+)
+
+CASES = {
+    "dense_gqa": ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=128, head_dim=16,
+    ),
+    "sliding_window": ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=128, head_dim=16, sliding_window=6,
+    ),
+    "mla": ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=128, mixer="mla",
+        mla=MLAConfig(q_lora_rank=32, kv_lora_rank=16, qk_nope_head_dim=16,
+                      qk_rope_head_dim=8, v_head_dim=16),
+    ),
+    "moe": ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=128, head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                      num_shared_experts=1, d_ff_shared=64, capacity_factor=2.0),
+    ),
+    "mamba": ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=128, head_dim=16, ssm=SSMConfig(), hybrid_pattern=("mamba",),
+    ),
+    "hybrid": ModelConfig(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=128, head_dim=16, ssm=SSMConfig(),
+        hybrid_pattern=("mamba", "attn"),
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64,
+                      layer_mode="every_other", capacity_factor=2.0),
+    ),
+    "xlstm": ModelConfig(
+        num_layers=4, d_model=64, num_heads=4, num_kv_heads=4, d_ff=0,
+        vocab_size=128, xlstm=XLSTMConfig(slstm_at=(1, 3)),
+    ),
+}
+
+
+@pytest.mark.parametrize("name", sorted(CASES))
+def test_decode_matches_full_forward(name):
+    cfg = CASES[name]
+    T, B = 12, 2
+    params = tf.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
+    full, _, _ = tf.forward(params, cfg, toks)
+    cache = tf.init_cache(cfg, B, T, jnp.float32)
+    outs = []
+    for t in range(T):
+        lg, cache = tf.decode_step(params, cfg, toks[:, t : t + 1], cache)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full - dec)))
+    assert err < 2e-3, f"{name}: decode diverges from forward by {err}"
+
+
+def test_mla_absorb_matches_unabsorbed():
+    """The absorbed (latent-space) MLA decode is a pure refactoring: same
+    math, fewer per-step FLOPs — outputs must match (fp32 compute so the
+    comparison is not dominated by bf16 rounding)."""
+    cfg = CASES["mla"].replace(compute_dtype="float32")
+    B, T = 2, 8
+    params = tf.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
+    c1 = tf.init_cache(cfg, B, T, jnp.float32)
+    c2 = tf.init_cache(cfg, B, T, jnp.float32)
+    for t in range(T):
+        lg1, c1 = tf.decode_step(params, cfg, toks[:, t : t + 1], c1)
+        lg2, c2 = tf.decode_step(
+            params, cfg, toks[:, t : t + 1], c2, mla_absorb=True
+        )
+        assert float(jnp.max(jnp.abs(lg1 - lg2))) < 2e-3
+
+
+def test_whisper_decode_matches_full():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4, d_ff=128,
+        vocab_size=128, head_dim=16, is_encoder_decoder=True,
+        num_encoder_layers=2, encoder_seq_len=8,
+    )
+    B, T = 2, 8
+    wp = whisper.init_params(jax.random.key(0), cfg)
+    frames = jax.random.normal(jax.random.key(2), (B, 8, 64))
+    toks = jax.random.randint(jax.random.key(3), (B, T), 0, 128)
+    mem = whisper.encode(wp, cfg, frames)
+    full, _ = whisper.decode(wp, cfg, toks, mem)
+    cache = whisper.init_decoder_cache(cfg, B, T, jnp.float32)
+    outs = []
+    for t in range(T):
+        lg, cache = whisper.decode_step(wp, cfg, toks[:, t : t + 1], mem, cache, position=t)
+        outs.append(lg[:, 0])
+    err = float(jnp.max(jnp.abs(full - jnp.stack(outs, 1))))
+    assert err < 2e-3
+
+
+def test_prefill_then_decode_consistency():
+    """Multi-token cache prefill (attention archs) == token-by-token."""
+    cfg = CASES["dense_gqa"]
+    B, T = 2, 12
+    params = tf.init_params(jax.random.key(0), cfg)
+    toks = jax.random.randint(jax.random.key(1), (B, T), 0, cfg.vocab_size)
+    # prefill 8 tokens at once, then decode 4
+    cache = tf.init_cache(cfg, B, T, jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(8), (B, 8))
+    lg, _, cache = tf.forward(params, cfg, toks[:, :8], positions=pos, cache=cache)
+    outs = [lg[:, -1]]
+    for t in range(8, T):
+        lg1, cache = tf.decode_step(params, cfg, toks[:, t : t + 1], cache)
+        outs.append(lg1[:, 0])
+    full, _, _ = tf.forward(params, cfg, toks)
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full[:, 7:] - dec)))
+    assert err < 2e-3

@@ -1,0 +1,128 @@
+"""Distributed Gaussian Processes (paper §3.3)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ml import gp
+
+
+@pytest.fixture(scope="module")
+def sine_data():
+    rng = np.random.default_rng(11)
+    X = np.linspace(-3, 3, 64)[:, None]
+    y = np.sin(X[:, 0]) + 0.05 * rng.normal(size=64)
+    Xq = np.linspace(-2.5, 2.5, 12)[:, None]
+    return jnp.asarray(X), jnp.asarray(y), jnp.asarray(Xq)
+
+
+def test_exact_gp_fits_sine(sine_data):
+    X, y, Xq = sine_data
+    hyp = gp.fit_hypers(X, y, steps=120)
+    mu, var = gp.gp_posterior(hyp, X, y, Xq)
+    rmse = float(jnp.sqrt(jnp.mean((mu - jnp.sin(Xq[:, 0])) ** 2)))
+    assert rmse < 0.1
+    assert bool(jnp.all(var > 0))
+
+
+def test_fit_improves_likelihood(sine_data):
+    X, y, _ = sine_data
+    h0 = gp.default_hypers()
+    h1 = gp.fit_hypers(X, y, steps=100)
+    assert float(gp.log_marginal_likelihood(h1, X, y)) > float(
+        gp.log_marginal_likelihood(h0, X, y)
+    )
+
+
+def test_single_expert_reduces_to_exact(sine_data):
+    """With K=1 expert every combination rule must equal the exact GP."""
+    X, y, Xq = sine_data
+    hyp = gp.fit_hypers(X, y, steps=60)
+    preds = gp.expert_predictions(hyp, X[None], y[None], Xq)
+    mu_full, var_full = gp.gp_posterior(hyp, X, y, Xq)
+    pv = gp.prior_variance(hyp, Xq)
+    for rule in (
+        gp.poe,
+        lambda p: gp.bcm(p, pv),
+        lambda p: gp.gbcm(p, pv, beta=jnp.ones(1)),  # β=1 ⇒ exact identity
+        lambda p: gp.gpoe(p, beta=jnp.ones(1)),
+    ):
+        mu, var = rule(preds)
+        np.testing.assert_allclose(mu, mu_full, rtol=1e-3, atol=1e-4)
+        np.testing.assert_allclose(var, var_full, rtol=1e-3, atol=1e-5)
+
+
+def test_expert_combinations_close_to_full(sine_data):
+    X, y, Xq = sine_data
+    hyp = gp.fit_hypers(X, y, steps=100)
+    Xs = X.reshape(4, 16, 1)
+    ys = y.reshape(4, 16)
+    preds = gp.expert_predictions(hyp, Xs, ys, Xq)
+    mu_full, _ = gp.gp_posterior(hyp, X, y, Xq)
+    pv = gp.prior_variance(hyp, Xq)
+    for name, (mu, _) in {
+        "poe": gp.poe(preds),
+        "gpoe": gp.gpoe(preds),
+        "bcm": gp.bcm(preds, pv),
+        "gbcm": gp.gbcm(preds, pv),
+    }.items():
+        rmse = float(jnp.sqrt(jnp.mean((mu - mu_full) ** 2)))
+        assert rmse < 0.12, name
+
+
+def test_gpoe_falls_back_to_prior_far_away(sine_data):
+    """Σβ = 1 ⇒ predictive variance → prior variance outside the data
+    (the paper's stated property of the gPoE/central-server coordination)."""
+    X, y, _ = sine_data
+    hyp = gp.fit_hypers(X, y, steps=60)
+    far = jnp.asarray([[40.0]])
+    Xs = X.reshape(4, 16, 1)
+    ys = y.reshape(4, 16)
+    preds = gp.expert_predictions(hyp, Xs, ys, far)
+    _, var = gp.gpoe(preds)  # default β = 1/K sums to 1
+    pv = gp.prior_variance(hyp, far)
+    np.testing.assert_allclose(var, pv, rtol=0.05)
+
+
+def test_poe_overconfident_far_away(sine_data):
+    """PoE's known failure (paper: 'tend to be overconfident'): far from
+    data its variance is K× too small vs the prior."""
+    X, y, _ = sine_data
+    hyp = gp.fit_hypers(X, y, steps=60)
+    far = jnp.asarray([[40.0]])
+    preds = gp.expert_predictions(hyp, X.reshape(4, 16, 1), y.reshape(4, 16), far)
+    _, var_poe = gp.poe(preds)
+    pv = gp.prior_variance(hyp, far)
+    assert float(var_poe[0]) < 0.5 * float(pv[0])
+
+
+def test_distributed_hyper_training(sine_data):
+    X, y, _ = sine_data
+    Xs = X.reshape(4, 16, 1)
+    ys = y.reshape(4, 16)
+    hyp = gp.fit_hypers_distributed(Xs, ys, steps=100)
+    lls = sum(
+        float(gp.log_marginal_likelihood(hyp, Xs[k], ys[k])) for k in range(4)
+    )
+    lls0 = sum(
+        float(gp.log_marginal_likelihood(gp.default_hypers(), Xs[k], ys[k]))
+        for k in range(4)
+    )
+    assert lls > lls0
+
+
+def test_moe_map_assignment():
+    means = jnp.asarray([[0.0, 0.0], [5.0, 5.0]])
+    V = jnp.ones(2)
+    X = jnp.asarray([[0.1, -0.2], [4.9, 5.3], [0.4, 0.1]])
+    z = gp.moe_map_assign(X, means, V)
+    np.testing.assert_array_equal(z, jnp.asarray([0, 1, 0]))
+
+
+def test_moe_predict(sine_data):
+    X, y, Xq = sine_data
+    hyp = gp.fit_hypers(X, y, steps=60)
+    means = jnp.asarray([[-1.5], [1.5]])
+    mu, var = gp.moe_predict(hyp, X, y, Xq, means, jnp.ones(1))
+    rmse = float(jnp.sqrt(jnp.mean((mu - jnp.sin(Xq[:, 0])) ** 2)))
+    assert rmse < 0.25

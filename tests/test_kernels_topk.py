@@ -1,0 +1,40 @@
+"""Top-k compression Pallas kernel vs exact oracle."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.topk_compress import ops, ref
+
+CASES = [((4096,), 100), ((128, 300), 500), ((10000,), 1), ((8192,), 8191), ((513,), 64)]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_topk_exact(case):
+    shape, k = case
+    x = jax.random.normal(jax.random.key(k), shape)
+    out = ops.topk_sparsify(x, k)
+    exp = ref.topk_sparsify_ref(x, k)
+    assert int(jnp.sum(out != 0)) == k
+    assert bool(jnp.allclose(out, exp))
+
+
+def test_values_preserved():
+    x = jax.random.normal(jax.random.key(2), (2048,))
+    out = ops.topk_sparsify(x, 50)
+    nz = out != 0
+    assert bool(jnp.all(out[nz] == x[nz]))
+
+
+def test_kept_dominate_dropped():
+    x = jax.random.normal(jax.random.key(3), (2048,))
+    out = ops.topk_sparsify(x, 64)
+    kept_min = jnp.min(jnp.abs(out[out != 0]))
+    dropped_max = jnp.max(jnp.abs(jnp.where(out == 0, x, 0.0)))
+    assert float(kept_min) >= float(dropped_max)
+
+
+def test_k_larger_than_size():
+    x = jax.random.normal(jax.random.key(4), (100,))
+    out = ops.topk_sparsify(x, 1000)
+    assert bool(jnp.allclose(out, x))

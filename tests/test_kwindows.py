@@ -1,0 +1,104 @@
+"""K-windows (paper §4.2) — three phases + distributed variant."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ml import kwindows
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(17)
+    centers = np.asarray([(-5.0, -5.0), (0.0, 5.0), (5.0, -2.0)])
+    X = np.concatenate([rng.normal(size=(60, 2)) * 0.6 + c for c in centers])
+    return jnp.asarray(X), centers
+
+
+def test_phase1_moves_windows_onto_blobs(blobs):
+    X, centers = blobs
+    win = kwindows.init_windows(jax.random.key(0), X, 6, r=1.5)
+    win = kwindows.phase1_movements(X, win, iters=25)
+    # every window center must sit near SOME blob center
+    d = np.min(
+        np.linalg.norm(
+            np.asarray(win.centers)[:, None, :] - centers[None], axis=-1
+        ),
+        axis=1,
+    )
+    assert np.all(d < 1.5)
+
+
+def test_phase2_enlargement_grows_capture(blobs):
+    X, _ = blobs
+    win = kwindows.init_windows(jax.random.key(0), X, 6, r=0.8)
+    win = kwindows.phase1_movements(X, win)
+    before = float(jnp.sum(jnp.sum(kwindows.window_membership(X, win), axis=1) > 0))
+    win2 = kwindows.phase2_enlargement(X, win, rounds=6)
+    after = float(jnp.sum(jnp.sum(kwindows.window_membership(X, win2), axis=1) > 0))
+    assert after >= before
+    assert bool(jnp.all(win2.halfwidths >= win.halfwidths - 1e-6))
+
+
+def test_phase3_merging_reduces_window_count(blobs):
+    X, _ = blobs
+    win = kwindows.kwindows(jax.random.key(1), X, num_windows=9, r=1.5)
+    assert int(jnp.sum(win.alive)) <= 6  # started with 9, blobs are 3
+    assert int(jnp.sum(win.alive)) >= 3
+
+
+def test_full_kwindows_high_precision(blobs):
+    """Paper: 'the precision is high (due to the enlargement of windows
+    procedure)' — captured points belong to the right blob."""
+    X, centers = blobs
+    win = kwindows.kwindows(jax.random.key(2), X, num_windows=9, r=1.2)
+    assign = kwindows.assign_points(X, win)
+    true_label = np.repeat(np.arange(3), 60)
+    correct = 0
+    total = 0
+    for w in range(win.centers.shape[0]):
+        pts = np.asarray(assign) == w
+        if pts.sum() == 0:
+            continue
+        majority = np.bincount(true_label[pts]).max()
+        correct += majority
+        total += pts.sum()
+    assert total > 0.65 * X.shape[0]  # recall is allowed to be lower
+    assert correct / total > 0.95  # precision is high
+
+
+def test_distributed_naive_merges_at_least_as_much(blobs):
+    """[60]'s naive rule (merge on ANY overlap) over-merges vs. the
+    count-gated centralized phase 3 — the paper's criticism."""
+    X, _ = blobs
+    Xs = X.reshape(3, 60, 2)
+    win_c = kwindows.kwindows(jax.random.key(3), X, num_windows=6, r=1.2)
+    win_d = kwindows.distributed_kwindows(
+        jax.random.key(3), Xs, num_windows=6, r=1.2
+    )
+    # distributed starts with 3×6 windows; naive overlap-merge collapses
+    assert int(jnp.sum(win_d.alive)) <= 3 * int(jnp.sum(win_c.alive))
+
+
+def test_window_membership_box_semantics():
+    X = jnp.asarray([[0.0, 0.0], [0.5, 0.5], [2.0, 0.0]])
+    win = kwindows.KWindows(
+        centers=jnp.asarray([[0.0, 0.0]]),
+        halfwidths=jnp.asarray([[1.0, 1.0]]),
+        alive=jnp.ones(1),
+        counts=jnp.zeros(1),
+    )
+    m = kwindows.window_membership(X, win)
+    np.testing.assert_array_equal(np.asarray(m[:, 0]), [True, True, False])
+
+
+def test_boxes_overlap():
+    win = kwindows.KWindows(
+        centers=jnp.asarray([[0.0, 0.0], [1.5, 0.0], [9.0, 9.0]]),
+        halfwidths=jnp.ones((3, 2)),
+        alive=jnp.ones(3),
+        counts=jnp.zeros(3),
+    )
+    ov = kwindows.boxes_overlap(win)
+    assert bool(ov[0, 1]) and not bool(ov[0, 2])

@@ -1,0 +1,112 @@
+"""Per-architecture smoke tests: REDUCED variant of each assigned family,
+one forward/train step on CPU, asserting shapes + no NaNs (deliverable f)."""
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.configs import ARCHS, get_config
+from repro.models import transformer as tf, whisper
+
+
+@pytest.fixture(scope="module")
+def key():
+    return jax.random.key(0)
+
+
+def _lm_batch(cfg, key, B=2, T=16):
+    toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "vlm":
+        Tv = 4
+        batch["vision_embeds"] = jax.random.normal(
+            key, (B, Tv, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+        )
+        pos = jnp.broadcast_to(jnp.arange(T), (B, T))
+        batch["mrope_positions"] = jnp.stack([pos, pos // 2, pos // 2])
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_train_step(arch, key):
+    cfg = get_config(arch).reduced()
+    B, T = 2, 16
+    if cfg.is_encoder_decoder:
+        params = whisper.init_params(key, cfg)
+        batch = {
+            "frame_embeds": jax.random.normal(
+                key, (B, cfg.encoder_seq_len, cfg.d_model)
+            ),
+            "tokens": jax.random.randint(key, (B, T), 0, cfg.vocab_size),
+        }
+        batch["labels"] = jnp.roll(batch["tokens"], -1, axis=1)
+        loss_fn = lambda p: whisper.loss_fn(p, cfg, batch)[0]
+    else:
+        params = tf.init_params(key, cfg)
+        batch = _lm_batch(cfg, key, B, T)
+        loss_fn = lambda p: tf.loss_fn(p, cfg, batch)[0]
+
+    loss, grads = jax.value_and_grad(loss_fn)(params)
+    assert jnp.isfinite(loss), f"{arch}: non-finite loss"
+    gnorm = jnp.sqrt(
+        sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+    )
+    assert jnp.isfinite(gnorm) and float(gnorm) > 0, f"{arch}: bad grads"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_forward_shapes(arch, key):
+    cfg = get_config(arch).reduced()
+    B, T = 2, 16
+    if cfg.is_encoder_decoder:
+        params = whisper.init_params(key, cfg)
+        frames = jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model))
+        toks = jax.random.randint(key, (B, T), 0, cfg.vocab_size)
+        memory = whisper.encode(params, cfg, frames)
+        assert memory.shape == (B, cfg.encoder_seq_len, cfg.d_model)
+        logits, _ = whisper.decode(params, cfg, toks, memory)
+        assert logits.shape == (B, T, cfg.padded_vocab)
+    else:
+        params = tf.init_params(key, cfg)
+        batch = _lm_batch(cfg, key, B, T)
+        logits, aux, _ = tf.forward(
+            params,
+            cfg,
+            batch["tokens"],
+            mrope_positions=batch.get("mrope_positions"),
+            vision_embeds=batch.get("vision_embeds"),
+        )
+        assert logits.shape == (B, T, cfg.padded_vocab)
+        assert jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size]))
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_reduced_decode_step(arch, key):
+    cfg = get_config(arch).reduced()
+    B, S = 2, 24
+    if cfg.is_encoder_decoder:
+        params = whisper.init_params(key, cfg)
+        frames = jax.random.normal(key, (B, cfg.encoder_seq_len, cfg.d_model))
+        memory = whisper.encode(params, cfg, frames)
+        cache = whisper.init_decoder_cache(cfg, B, S, jnp.float32)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        logits, cache2 = whisper.decode_step(
+            params, cfg, tok, memory, cache, position=0
+        )
+    else:
+        params = tf.init_params(key, cfg)
+        cache = tf.init_cache(cfg, B, S, jnp.float32, index=4)
+        tok = jax.random.randint(key, (B, 1), 0, cfg.vocab_size)
+        logits, cache2 = tf.decode_step(params, cfg, tok, cache)
+    assert logits.shape[:2] == (B, 1)
+    assert jnp.all(jnp.isfinite(logits[..., : cfg.vocab_size]))
+
+
+def test_reduced_configs_satisfy_brief():
+    for arch in ARCHS:
+        cfg = get_config(arch).reduced()
+        pat = len(cfg.hybrid_pattern) if cfg.hybrid_pattern else 2
+        assert cfg.num_layers <= max(2, pat)
+        assert cfg.d_model <= 512
+        if cfg.moe is not None:
+            assert cfg.moe.num_experts <= 4

@@ -1,0 +1,77 @@
+"""Optimizers."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.optim import adam, adagrad, clip_by_global_norm, momentum, sgd, warmup_cosine
+from repro.optim.optimizers import apply_updates
+
+
+def _quad(theta):
+    return 0.5 * jnp.sum(theta ** 2)
+
+
+def _run(opt, steps=200, n=4):
+    params = jnp.full((n,), 5.0)
+    state = opt.init(params)
+    for _ in range(steps):
+        g = jax.grad(_quad)(params)
+        upd, state = opt.update(g, state, params)
+        params = apply_updates(params, upd)
+    return params
+
+
+def test_all_optimizers_minimize_quadratic():
+    for name, opt in [
+        ("sgd", sgd(0.1)),
+        ("momentum", momentum(0.05)),
+        ("adam", adam(0.1)),
+        ("adagrad", adagrad(1.0)),
+    ]:
+        final = _run(opt)
+        assert float(jnp.max(jnp.abs(final))) < 0.1, name
+
+
+def test_adam_first_step_formula():
+    opt = adam(0.1, b1=0.9, b2=0.999, eps=1e-8)
+    p = {"w": jnp.asarray([1.0])}
+    st = opt.init(p)
+    g = {"w": jnp.asarray([0.5])}
+    upd, st = opt.update(g, st, p)
+    # bias-corrected first step = -lr * g/|g| = -lr (up to eps)
+    np.testing.assert_allclose(upd["w"], [-0.1], rtol=1e-4)
+
+
+def test_clip_caps_global_norm():
+    opt = clip_by_global_norm(sgd(1.0), 1.0)
+    p = jnp.zeros(4)
+    st = opt.init(p)
+    g = jnp.full((4,), 100.0)
+    upd, _ = opt.update(g, st, p)
+    np.testing.assert_allclose(jnp.linalg.norm(upd), 1.0, rtol=1e-5)
+
+
+def test_bf16_moments():
+    opt = adam(0.1, moment_dtype="bfloat16")
+    p = {"w": jnp.ones((8,))}
+    st = opt.init(p)
+    assert st["m"]["w"].dtype == jnp.bfloat16
+    upd, st = opt.update({"w": jnp.ones((8,))}, st, p)
+    assert jnp.all(jnp.isfinite(upd["w"]))
+
+
+def test_warmup_cosine_schedule():
+    sched = warmup_cosine(1.0, warmup=10, total=100, floor=0.1)
+    assert float(sched(jnp.asarray(0))) == 0.0
+    np.testing.assert_allclose(float(sched(jnp.asarray(10))), 1.0, rtol=1e-5)
+    assert float(sched(jnp.asarray(100))) < 0.15
+    assert float(sched(jnp.asarray(100))) >= 0.099
+
+
+def test_weight_decay():
+    opt = adam(0.1, weight_decay=0.1)
+    p = {"w": jnp.asarray([10.0])}
+    st = opt.init(p)
+    upd, _ = opt.update({"w": jnp.asarray([0.0])}, st, p)
+    assert float(upd["w"][0]) < 0  # decays toward zero even with zero grad

@@ -1,0 +1,136 @@
+"""Hypothesis property-based tests on the system's invariants."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import schedules, server
+from repro.core.compression import topk_compress
+from repro.ml.clustering import kmeans, pdist
+from repro.telemetry.roofline import roofline
+from repro.utils.tree import tree_axpy, tree_dot, tree_norm, tree_sub
+
+SETTINGS = dict(max_examples=15, deadline=None)
+
+
+# ----------------------------------------------------------------------------
+# §5 protocol invariants
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    K=st.integers(2, 6),
+    rounds=st.integers(1, 4),
+    seed=st.integers(0, 100),
+)
+def test_protocol_is_exact_function_composition(K, rounds, seed):
+    """For ANY per-node affine update, the sequential-handoff protocol equals
+    plain function composition in schedule order (the §5 equivalence)."""
+    rng = np.random.default_rng(seed)
+    A = jnp.asarray(rng.normal(size=(K, 3, 3)) * 0.2 + np.eye(3) * 0.5)
+    b = jnp.asarray(rng.normal(size=(K, 3)))
+
+    def F(k, theta):
+        return A[k] @ theta + b[k]
+
+    sched = schedules.round_robin(K, rounds)
+    final, _ = server.run_protocol(jnp.zeros(3), F, sched)
+    theta = jnp.zeros(3)
+    for t in range(len(sched)):
+        theta = F(int(sched[t]), theta)
+    np.testing.assert_allclose(final.theta, theta, rtol=1e-4, atol=1e-5)
+
+
+@settings(**SETTINGS)
+@given(K=st.integers(1, 8), n=st.integers(10, 200), seed=st.integers(0, 50))
+def test_async_schedule_support(K, n, seed):
+    sched = schedules.asynchronous(jax.random.key(seed), K, n)
+    assert sched.shape == (n,)
+    assert int(jnp.min(sched)) >= 0 and int(jnp.max(sched)) < K
+
+
+# ----------------------------------------------------------------------------
+# compression invariants
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(4, 200),
+    frac=st.floats(0.05, 1.0),
+    seed=st.integers(0, 100),
+)
+def test_topk_idempotent_and_contractive(n, frac, seed):
+    x = jax.random.normal(jax.random.key(seed), (n,))
+    c1 = topk_compress({"x": x}, frac).tree["x"]
+    c2 = topk_compress({"x": c1}, frac).tree["x"]
+    k = max(1, int(round(frac * n)))
+    assert 1 <= int(jnp.sum(c1 != 0)) <= k
+    np.testing.assert_allclose(c1, c2)  # idempotent
+    assert float(jnp.linalg.norm(c1)) <= float(jnp.linalg.norm(x)) + 1e-6
+
+
+# ----------------------------------------------------------------------------
+# clustering invariants
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(12, 60),
+    k=st.integers(1, 4),
+    seed=st.integers(0, 100),
+)
+def test_kmeans_inertia_no_worse_than_init(n, k, seed):
+    X = jax.random.normal(jax.random.key(seed), (n, 3))
+    C0 = X[:k]
+    res = kmeans(X, C0, num_clusters=k, iters=10)
+    inertia0 = float(jnp.sum(jnp.min(pdist(X, C0, metric="l2sq"), axis=1)))
+    assert float(res.inertia) <= inertia0 + 1e-4
+
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100), metric=st.sampled_from(["l1", "l2", "linf"]))
+def test_pdist_metric_axioms(seed, metric):
+    X = jax.random.normal(jax.random.key(seed), (10, 4))
+    D = pdist(X, X, metric=metric)
+    assert bool(jnp.all(D >= -1e-6))
+    np.testing.assert_allclose(jnp.diag(D), 0.0, atol=1e-5)
+    np.testing.assert_allclose(D, D.T, atol=1e-5)
+
+
+# ----------------------------------------------------------------------------
+# tree algebra + roofline
+# ----------------------------------------------------------------------------
+
+@settings(**SETTINGS)
+@given(seed=st.integers(0, 100), alpha=st.floats(-2.0, 2.0))
+def test_tree_axpy_dot_identities(seed, alpha):
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    x = {"a": jax.random.normal(k1, (5,)), "b": jax.random.normal(k2, (2, 3))}
+    y = jax.tree.map(lambda v: v * 2.0, x)
+    z = tree_axpy(alpha, x, y)
+    # <z, z> = a²<x,x> + 2a<x,y> + <y,y>
+    lhs = float(tree_dot(z, z))
+    rhs = (
+        alpha ** 2 * float(tree_dot(x, x))
+        + 2 * alpha * float(tree_dot(x, y))
+        + float(tree_dot(y, y))
+    )
+    np.testing.assert_allclose(lhs, rhs, rtol=1e-4)
+    assert float(tree_norm(tree_sub(x, x))) == 0.0
+
+
+@settings(**SETTINGS)
+@given(
+    f=st.floats(1e6, 1e15),
+    b=st.floats(1e3, 1e12),
+    c=st.floats(0.0, 1e12),
+)
+def test_roofline_dominant_is_max(f, b, c):
+    r = roofline(
+        flops_per_device=f, bytes_per_device=b,
+        collective_bytes_per_device=c, chips=256,
+    )
+    terms = {"compute": r.compute_s, "memory": r.memory_s, "collective": r.collective_s}
+    assert r.dominant == max(terms, key=terms.get)
+    assert all(v >= 0 for v in terms.values())

@@ -1,0 +1,86 @@
+"""Sharding rules + mesh context."""
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+from repro.models import transformer as tf
+from repro.models.config import ModelConfig, MoEConfig
+from repro.sharding.rules import (
+    MeshContext,
+    maybe_shard,
+    partition_params,
+    set_mesh_context,
+)
+
+
+def _params():
+    cfg = ModelConfig(
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2, d_ff=128,
+        vocab_size=512, head_dim=16,
+        moe=MoEConfig(num_experts=4, top_k=2, d_ff_expert=64),
+    )
+    return cfg, tf.init_params(jax.random.key(0), cfg)
+
+
+def _get(tree, *path):
+    for k in path:
+        tree = tree[k]
+    return tree
+
+
+def test_param_specs_tp_only():
+    cfg, params = _params()
+    specs = partition_params(params, model_axis="model", fsdp_axis=None)
+    # embedding: vocab over model
+    assert _get(specs, "embed", "embedding") == P("model", None)
+    # attention projections carry a leading scan dim (None) then (fsdp, model)
+    assert _get(specs, "seg0", "l0", "mixer", "wq", "kernel") == P(None, None, "model")
+    assert _get(specs, "seg0", "l0", "mixer", "wo", "kernel") == P(None, "model", None)
+    # experts: expert dim over model
+    assert _get(specs, "seg0", "l0", "ffn", "experts", "w_gate") == P(
+        None, "model", None, None
+    )
+    # norms replicated
+    assert _get(specs, "final_norm", "scale") == P()
+
+
+def test_param_specs_fsdp():
+    cfg, params = _params()
+    specs = partition_params(params, model_axis="model", fsdp_axis="data")
+    assert _get(specs, "seg0", "l0", "mixer", "wq", "kernel") == P(None, "data", "model")
+    assert _get(specs, "seg0", "l0", "ffn", "experts", "w_gate") == P(
+        None, "model", "data", None
+    )
+
+
+def test_maybe_shard_noop_without_context():
+    set_mesh_context(None)
+    x = jnp.ones((4, 4))
+    y = maybe_shard(x, "batch", None)
+    assert y is x
+
+
+def test_maybe_shard_with_context():
+    mesh = jax.make_mesh((1, 1), ("data", "model"))
+    set_mesh_context(MeshContext(mesh=mesh, logical={"batch": "data", "model": "model"}))
+    try:
+        x = jnp.ones((4, 4))
+        y = jax.jit(lambda v: maybe_shard(v, "batch", "model"))(x)
+        assert y.shape == x.shape
+    finally:
+        set_mesh_context(None)
+
+
+def test_cache_specs_structure():
+    from repro.launch.mesh import make_host_mesh
+    from repro.launch import specs as S
+
+    cfg, params = _params()
+    mesh = make_host_mesh()
+    cspecs = S.cache_specs(cfg, mesh, B=4)
+    cache = tf.init_cache(cfg, 4, 16, jnp.float32)
+    # structures must match so jit in_shardings line up
+    assert jax.tree.structure(
+        jax.tree.map(lambda _: 0, cspecs, is_leaf=lambda s: isinstance(s, P))
+    ) == jax.tree.structure(jax.tree.map(lambda _: 0, cache))

@@ -1,0 +1,111 @@
+"""Sparse GP ([66]/[23], §3.3) and distributed MPLE ([38], §3.4)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ml import gp, graphical
+
+
+@pytest.fixture(scope="module")
+def sine():
+    rng = np.random.default_rng(5)
+    N = 120
+    X = jnp.asarray(np.sort(rng.uniform(-3, 3, size=(N, 1)), 0))
+    y = jnp.asarray(np.sin(2 * np.asarray(X)[:, 0]) + 0.05 * rng.normal(size=N))
+    Xq = jnp.asarray(np.linspace(-2.5, 2.5, 15)[:, None])
+    hyp = gp.fit_hypers(X, y, steps=120)
+    return X, y, Xq, hyp
+
+
+def test_sgpr_stats_additive(sine):
+    """The [23] decomposition: shard statistics sum to the full-data stats."""
+    X, y, Xq, hyp = sine
+    Z = jnp.asarray(np.linspace(-3, 3, 12)[:, None])
+    full = gp.sgpr_local_stats(hyp, Z, X, y)
+    parts = jax.vmap(
+        lambda Xk, yk: gp.sgpr_local_stats(hyp, Z, Xk, yk)
+    )(X.reshape(4, 30, 1), y.reshape(4, 30))
+    agg = gp.sgpr_aggregate(parts)
+    np.testing.assert_allclose(agg.A, full.A, rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(agg.b, full.b, rtol=1e-4, atol=1e-4)
+    assert float(agg.n) == float(full.n)
+
+
+def test_distributed_sgpr_matches_centralized(sine):
+    X, y, Xq, hyp = sine
+    Z = jnp.asarray(np.linspace(-3, 3, 16)[:, None])
+    stats = gp.sgpr_local_stats(hyp, Z, X, y)
+    mu_c, var_c = gp.sgpr_posterior(hyp, Z, stats, Xq)
+    mu_d, var_d, wire = gp.distributed_sgpr(
+        hyp, Z, X.reshape(4, 30, 1), y.reshape(4, 30), Xq
+    )
+    np.testing.assert_allclose(mu_d, mu_c, atol=5e-2)
+    # communication is O(M²), independent of N
+    assert wire == (16 * 16 + 16 + 2) * 4
+
+
+def test_sgpr_approaches_exact_gp(sine):
+    X, y, Xq, hyp = sine
+    Z = jnp.asarray(np.linspace(-3, 3, 16)[:, None])
+    mu_e, _ = gp.gp_posterior(hyp, X, y, Xq)
+    mu_s, var_s = gp.sgpr_posterior(
+        hyp, Z, gp.sgpr_local_stats(hyp, Z, X, y), Xq
+    )
+    assert float(jnp.sqrt(jnp.mean((mu_s - mu_e) ** 2))) < 0.05
+    assert bool(jnp.all(var_s > 0))
+
+
+def test_sgpr_more_inducing_is_better(sine):
+    X, y, Xq, hyp = sine
+    mu_e, _ = gp.gp_posterior(hyp, X, y, Xq)
+
+    def rmse(M):
+        Z = jnp.asarray(np.linspace(-3, 3, M)[:, None])
+        mu, _ = gp.sgpr_posterior(hyp, Z, gp.sgpr_local_stats(hyp, Z, X, y), Xq)
+        return float(jnp.sqrt(jnp.mean((mu - mu_e) ** 2)))
+
+    assert rmse(16) <= rmse(4) + 1e-6
+
+
+# ----------------------------------------------------------------------------
+# §3.4 Gaussian-MRF MPLE
+# ----------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def chain_gmrf():
+    d = 6
+    Theta = jnp.eye(d) * 1.5
+    for i in range(d - 1):
+        Theta = Theta.at[i, i + 1].set(0.5).at[i + 1, i].set(0.5)
+    X = graphical.sample_gmrf(jax.random.key(0), Theta, 2000)
+    return Theta, X
+
+
+def test_mple_recovers_chain_support(chain_gmrf):
+    Theta, X = chain_gmrf
+    Th = graphical.mple_centralized(X, iters=800)
+    assert float(graphical.support_f1(Th, Theta)) > 0.95
+
+
+def test_consensus_mple_matches_centralized(chain_gmrf):
+    """[38]: the ADMM consensus MPLE agrees with the centralized solver."""
+    Theta, X = chain_gmrf
+    Th_c = graphical.mple_centralized(X, iters=800)
+    Th_d, res = graphical.mple_consensus(
+        X.reshape(4, 500, 6), iters=50, inner_iters=50
+    )
+    assert float(graphical.support_f1(Th_d, Theta)) > 0.95
+    np.testing.assert_allclose(Th_d, Th_c, atol=5e-2)
+    hist = np.asarray(res.history)
+    assert hist[-1, 0] < hist[2, 0]  # primal residual shrinks
+
+
+def test_pseudo_loglik_convex_descent(chain_gmrf):
+    Theta, X = chain_gmrf
+    th0 = graphical.flatten_sym(jnp.eye(6))
+    l0 = float(graphical.neg_pseudo_loglik(th0, X))
+    th_star = graphical.flatten_sym(graphical.mple_centralized(X, iters=400))
+    l1 = float(graphical.neg_pseudo_loglik(th_star, X))
+    assert l1 < l0

@@ -1,0 +1,78 @@
+"""Bounded-staleness delay line (the §5 algorithm on TPU, DESIGN.md §2)."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.staleness import (
+    delay_init,
+    delay_push_pop,
+    make_stale_update,
+    staleness_bound_lr,
+)
+from repro.optim import sgd
+
+
+def test_delay_line_fifo_order():
+    params = jnp.zeros(3)
+    d = delay_init(params, 2)
+    d, g = delay_push_pop(d, jnp.full(3, 1.0))
+    np.testing.assert_array_equal(g, jnp.zeros(3))  # warm-up
+    d, g = delay_push_pop(d, jnp.full(3, 2.0))
+    np.testing.assert_array_equal(g, jnp.zeros(3))
+    d, g = delay_push_pop(d, jnp.full(3, 3.0))
+    np.testing.assert_array_equal(g, jnp.full(3, 1.0))  # D=2 behind
+    d, g = delay_push_pop(d, jnp.full(3, 4.0))
+    np.testing.assert_array_equal(g, jnp.full(3, 2.0))
+
+
+def test_depth_zero_rejected():
+    import pytest
+
+    with pytest.raises(ValueError):
+        delay_init(jnp.zeros(2), 0)
+
+
+def _quadratic_grads(theta, A, b):
+    return A @ theta - b
+
+
+def test_staleness_zero_is_synchronous():
+    A = jnp.eye(4) * 2.0
+    b = jnp.ones(4)
+    opt = sgd(0.1)
+
+    def opt_update(grads, state, params):
+        upd, state = opt.update(grads, state, params)
+        return jax.tree.map(jnp.add, params, upd), state
+
+    init, update = make_stale_update(opt_update, staleness=0)
+    st = init(jnp.zeros(4), opt.init(jnp.zeros(4)))
+    theta_ref = jnp.zeros(4)
+    for _ in range(20):
+        g = _quadratic_grads(st.params, A, b)
+        st = update(st, g)
+        theta_ref = theta_ref - 0.1 * _quadratic_grads(theta_ref, A, b)
+    np.testing.assert_allclose(st.params, theta_ref, rtol=1e-6)
+
+
+def test_stale_gradients_still_converge():
+    A = jnp.eye(4) * 2.0
+    b = jnp.ones(4)
+    opt = sgd(staleness_bound_lr(0.2, 3))
+
+    def opt_update(grads, state, params):
+        upd, state = opt.update(grads, state, params)
+        return jax.tree.map(jnp.add, params, upd), state
+
+    init, update = make_stale_update(opt_update, staleness=3)
+    st = init(jnp.zeros(4), opt.init(jnp.zeros(4)))
+    for _ in range(300):
+        g = _quadratic_grads(st.params, A, b)
+        st = update(st, g)
+    np.testing.assert_allclose(st.params, jnp.linalg.solve(A, b), atol=1e-3)
+
+
+def test_staleness_bound_lr():
+    assert staleness_bound_lr(1.0, 0) == 1.0
+    assert staleness_bound_lr(1.0, 4) == 0.2

@@ -1,0 +1,94 @@
+"""Distributed SVMs (paper §3.2)."""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.ml import svm
+
+
+@pytest.fixture(scope="module")
+def blobs():
+    rng = np.random.default_rng(5)
+    K, Nk, n = 4, 30, 2
+    Xp = rng.normal(size=(K * Nk // 2, n)) + np.array([2.0, 2.0])
+    Xm = rng.normal(size=(K * Nk // 2, n)) - np.array([2.0, 2.0])
+    X = np.concatenate([Xp, Xm])
+    y = np.concatenate([np.ones(len(Xp)), -np.ones(len(Xm))])
+    perm = rng.permutation(len(X))
+    X, y = X[perm], y[perm]
+    return (
+        jnp.asarray(X.reshape(K, Nk, n)),
+        jnp.asarray(y.reshape(K, Nk)),
+        jnp.asarray(X),
+        jnp.asarray(y),
+    )
+
+
+def test_dual_svm_separates(blobs):
+    _, _, X, y = blobs
+    model = svm.dual_svm(X, y, C=1.0)
+    acc = float(jnp.mean(jnp.sign(svm.decision_function(model, X)) == y))
+    assert acc > 0.97
+
+
+def test_dual_svm_sparse_alphas(blobs):
+    _, _, X, y = blobs
+    model = svm.dual_svm(X, y, C=1.0)
+    assert int(jnp.sum(model.sv_mask)) < 0.3 * X.shape[0]
+
+
+def test_decision_uses_only_svs(blobs):
+    _, _, X, y = blobs
+    model = svm.dual_svm(X, y, C=1.0)
+    # zero out all non-SV alphas: decision must be unchanged
+    alpha_masked = model.alpha * model.sv_mask
+    model2 = svm.SVMModel(alpha_masked, model.X, model.y, model.sv_mask)
+    np.testing.assert_allclose(
+        svm.decision_function(model, X),
+        svm.decision_function(model2, X),
+        rtol=1e-4, atol=1e-5,
+    )
+
+
+def test_cascade_svm_accuracy_and_stability(blobs):
+    Xs, ys, X, y = blobs
+    res = svm.cascade_svm(Xs, ys, C=1.0, max_rounds=6)
+    acc = float(jnp.mean(jnp.sign(svm.decision_function(res.model, X)) == y))
+    assert acc > 0.97
+    assert res.sv_counts[-1] == res.sv_counts[-2]  # SV set stabilized
+    assert res.rounds <= 6
+
+
+def test_cascade_cheaper_than_raw_data(blobs):
+    Xs, ys, X, y = blobs
+    res = svm.cascade_svm(Xs, ys, C=1.0, max_rounds=6)
+    raw = X.size * 4 + y.size * 4
+    assert res.ledger.total_bytes < raw  # only SVs crossed the network
+
+
+def test_consensus_svm(blobs):
+    Xs, ys, X, y = blobs
+    res = svm.consensus_svm(Xs, ys, iters=60)
+    acc = float(jnp.mean(jnp.sign(X @ res.z) == y))
+    assert acc > 0.97
+
+
+def test_weighted_dual_consensus(blobs):
+    Xs, ys, X, y = blobs
+    _, decide = svm.weighted_dual_consensus(Xs, ys)
+    acc = float(jnp.mean(jnp.sign(decide(X)) == y))
+    assert acc > 0.95
+
+
+def test_rbf_kernel_nonlinear():
+    rng = np.random.default_rng(7)
+    # circle-in-circle: not linearly separable
+    r1 = rng.normal(size=(60, 2)) * 0.3
+    theta = rng.uniform(0, 2 * np.pi, size=60)
+    r2 = np.stack([3 * np.cos(theta), 3 * np.sin(theta)], 1) + 0.1 * rng.normal(size=(60, 2))
+    X = jnp.asarray(np.concatenate([r1, r2]))
+    y = jnp.asarray(np.concatenate([np.ones(60), -np.ones(60)]))
+    model = svm.dual_svm(X, y, C=5.0, kernel=lambda a, b: svm.rbf_kernel(a, b, 0.5), iters=800)
+    dec = svm.decision_function(model, X, kernel=lambda a, b: svm.rbf_kernel(a, b, 0.5))
+    assert float(jnp.mean(jnp.sign(dec) == y)) > 0.95

@@ -1,0 +1,79 @@
+"""HLO collective parsing + roofline model."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.telemetry.hlo import _shape_bytes, collective_stats
+from repro.telemetry.roofline import (
+    HBM_BW,
+    ICI_BW,
+    PEAK_FLOPS_BF16,
+    model_flops_train,
+    roofline,
+)
+
+
+def test_shape_bytes():
+    assert _shape_bytes("f32[128,1024]") == 128 * 1024 * 4
+    assert _shape_bytes("bf16[2,3]") == 12
+    assert _shape_bytes("(f32[4], s32[2])") == 16 + 8
+    assert _shape_bytes("pred[8]") == 8
+
+
+def test_collective_stats_detects_psum():
+    mesh = jax.make_mesh((jax.device_count(),), ("x",))
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    @jax.jit
+    def f(v):
+        return jax.lax.with_sharding_constraint(
+            v, NamedSharding(mesh, P())
+        ) + 0.0
+
+    # force an all-reduce via shard_map psum
+    from jax.experimental.shard_map import shard_map
+
+    g = shard_map(
+        lambda v: jax.lax.psum(v, "x"),
+        mesh=mesh,
+        in_specs=P("x"),
+        out_specs=P(),
+    )
+    txt = jax.jit(g).lower(jnp.ones((jax.device_count() * 4,))).compile().as_text()
+    stats = collective_stats(txt)
+    assert stats.get("all-reduce", {}).get("count", 0) >= 1
+    assert stats["total_bytes"] > 0
+
+
+def test_roofline_terms():
+    r = roofline(
+        flops_per_device=PEAK_FLOPS_BF16,  # exactly 1 second of compute
+        bytes_per_device=HBM_BW * 2.0,  # 2 seconds of HBM
+        collective_bytes_per_device=ICI_BW * 0.5,
+        chips=256,
+        model_flops=PEAK_FLOPS_BF16 * 256 * 0.5,
+    )
+    np.testing.assert_allclose(r.compute_s, 1.0)
+    np.testing.assert_allclose(r.memory_s, 2.0)
+    np.testing.assert_allclose(r.collective_s, 0.5)
+    assert r.dominant == "memory"
+    np.testing.assert_allclose(r.useful_ratio, 0.5)
+
+
+def test_model_flops():
+    assert model_flops_train(1e9, 1e6) == 6e15
+
+
+def test_costprobe_segment_math():
+    """combine(): full = base + Σ (R_s − 1)·marginal_s."""
+    from repro.telemetry import costprobe
+
+    # emulate the probe result combination with synthetic numbers
+    base = {"flops": 10.0, "bytes": 100.0, "coll": 1.0}
+    seg_plus = {"flops": 14.0, "bytes": 130.0, "coll": 1.5}  # marginal = 4/30/0.5
+    R = 10
+    expect_flops = 10.0 + (R - 1) * 4.0
+    got = base["flops"] + (seg_plus["flops"] - base["flops"]) * (R - 1)
+    assert got == expect_flops
