@@ -2,7 +2,9 @@
 at the same rate as the synchronous (round-robin ≡ mini-batch) algorithm.
 
 Benchmarked on (a) distributed logistic regression (the paper's running
-example class) and (b) a reduced LM — loss after equal numbers of contacts.
+example class) and (b) a reduced LM — loss after equal numbers of
+contacts.  Both run through the unified ``repro.api.fit`` entry point;
+the schedule/handoff variants are pure transport choices on one strategy.
 """
 
 from __future__ import annotations
@@ -12,8 +14,9 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api
 from repro.configs import get_config
-from repro.core import schedules, server
+from repro.core import schedules
 from repro.data import make_feature_shards, synthetic_lm_batch
 from repro.ml.linear import logistic_loss
 from repro.models import transformer as tf
@@ -33,26 +36,29 @@ def logistic_case(rows):
             jnp.mean(jax.vmap(logistic_loss, in_axes=(None, 0, 0))(theta, Xs, ys))
         )
 
+    strategy = api.FunctionStrategy(F, num_nodes=K)
     contacts = 200
-    for name, sched, handoff in [
-        ("sync_round_robin", schedules.round_robin(K, contacts // K), "sequential"),
-        ("stale_round_robin", schedules.round_robin(K, contacts // K), "stale"),
-        ("async_uniform", schedules.asynchronous(jax.random.key(0), K, contacts), "sequential"),
+    for name, sched, transport in [
+        ("sync_round_robin", schedules.round_robin(K, contacts // K), "sequential_server"),
+        ("stale_round_robin", schedules.round_robin(K, contacts // K), "stale_server"),
+        ("async_uniform", schedules.asynchronous(jax.random.key(0), K, contacts), "sequential_server"),
         (
             "async_work_proportional",
             schedules.asynchronous(
                 jax.random.key(0), K, contacts,
                 probs=schedules.work_proportional_probs(jnp.arange(1, K + 1) * 10.0),
             ),
-            "sequential",
+            "sequential_server",
         ),
     ]:
         t0 = time.perf_counter()
-        final, _ = server.run_protocol(jnp.zeros(n), F, sched, handoff=handoff)
-        jax.block_until_ready(final.theta)
+        res = api.fit(
+            strategy, transport=transport, schedule=sched, theta0=jnp.zeros(n)
+        )
+        jax.block_until_ready(res.theta)
         dt = (time.perf_counter() - t0) * 1e6
         rows.append(
-            ("async_vs_sync_logistic/" + name, dt / contacts, f"{mean_loss(final.theta):.4f}")
+            ("async_vs_sync_logistic/" + name, dt / contacts, f"{mean_loss(res.theta):.4f}")
         )
 
 
@@ -75,17 +81,20 @@ def lm_case(rows):
 
         return float(np.mean([float(loss_fn(theta, b)) for b in batches]))
 
+    strategy = api.FunctionStrategy(F, num_nodes=K)
     contacts = 24
     for name, sched in [
         ("sync", schedules.round_robin(K, contacts // K)),
         ("async", schedules.asynchronous(jax.random.key(7), K, contacts)),
     ]:
         t0 = time.perf_counter()
-        final, _ = server.run_protocol(params, F, sched)
-        jax.block_until_ready(jax.tree.leaves(final.theta)[0])
+        res = api.fit(
+            strategy, transport="sequential_server", schedule=sched, theta0=params
+        )
+        jax.block_until_ready(jax.tree.leaves(res.theta)[0])
         dt = (time.perf_counter() - t0) * 1e6
         rows.append(
-            ("async_vs_sync_lm/" + name, dt / contacts, f"{mean_loss(final.theta):.4f}")
+            ("async_vs_sync_lm/" + name, dt / contacts, f"{mean_loss(res.theta):.4f}")
         )
 
 

@@ -20,8 +20,8 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import schedules, server
-from repro.core.allreduce import CommLedger
+from repro import api
+from repro.core import schedules
 from repro.data import make_feature_shards
 from repro.ml import linear
 
@@ -51,13 +51,19 @@ print(f"   ‖θ − w*‖ = {err:.4f};  wire = {ledger.total_bytes} bytes "
       f"({ledger.total_bytes/raw_bytes:.1%} of raw)\n")
 
 # ---- 2. consensus LASSO: sparse, interpretable, distributed ----------------
-res = linear.admm_lasso(Xp, yp, lam=3.0, iters=150)
+res = api.fit(
+    api.ProxStrategy(linear.lasso_prox_builder),
+    (Xp, yp),
+    transport="admm_consensus",
+    steps=150,
+    g="l1",
+    g_lam=3.0,
+)
 support_true = np.abs(w_true) > 1e-9
-support_found = np.abs(np.asarray(res.z)) > 1e-2
+support_found = np.abs(np.asarray(res.theta)) > 1e-2
 agree = (support_true == support_found).mean()
-comm = 150 * 2 * 2 * K * DIM * 4
 print("2. consensus LASSO via ADMM (§3.1)")
-print(f"   support recovery: {agree:.1%};  wire = {comm} bytes\n")
+print(f"   support recovery: {agree:.1%};  wire = {res.ledger.total_bytes} bytes\n")
 
 # ---- 3. asynchronous central server, work-proportional contacts (§5) -------
 probs = schedules.work_proportional_probs(jnp.asarray(sizes, jnp.float32))
@@ -72,11 +78,13 @@ def F(k, theta):
     return theta - lr * g
 
 sched = schedules.asynchronous(jax.random.key(1), K, 400, probs=probs)
-final, _ = server.run_protocol(jnp.zeros(DIM), F, sched)
-err = float(jnp.linalg.norm(final.theta - jnp.asarray(w_true)))
-led = CommLedger()
-for _ in range(len(sched)):
-    led.record_push(final.theta, "theta")
-    led.record_pull(final.theta, "theta")
+res = api.fit(
+    api.FunctionStrategy(F, num_nodes=K),
+    transport="sequential_server",
+    schedule=sched,
+    theta0=jnp.zeros(DIM),
+)
+err = float(jnp.linalg.norm(res.theta - jnp.asarray(w_true)))
+led = res.ledger  # push + handoff accounting comes from the engine now
 print(f"   after {len(sched)} contacts: ‖θ − w*‖ = {err:.4f}; "
       f"wire = {led.total_bytes} bytes ({led.total_bytes/raw_bytes:.1%} of raw)")

@@ -1,7 +1,8 @@
-"""Quickstart: the paper's §5 central-information-server algorithm in 30
-lines — four "nodes" cooperatively train a logistic-regression model by
-pushing local updates to the server and receiving the handed-back
-parameter, synchronously (round-robin) and asynchronously.
+"""Quickstart: the paper's §5 central-information-server algorithm through
+the unified ``repro.api`` — four "nodes" cooperatively train a
+logistic-regression model.  The per-node learner is ONE function; the
+synchronous, asynchronous and stale variants are just transport/schedule
+choices on ``api.fit``, and byte accounting comes for free.
 
   PYTHONPATH=src python examples/quickstart.py
 """
@@ -9,7 +10,8 @@ parameter, synchronously (round-robin) and asynchronously.
 import jax
 import jax.numpy as jnp
 
-from repro.core import schedules, server
+from repro import api
+from repro.core import schedules
 from repro.data import make_feature_shards
 from repro.ml.linear import logistic_loss
 
@@ -29,19 +31,39 @@ def accuracy(theta):
     return float(jnp.mean(pred == ys.reshape(-1)))
 
 
+strategy = api.FunctionStrategy(F, num_nodes=K)
 theta0 = jnp.zeros(DIM)
 print(f"init accuracy: {accuracy(theta0):.3f}")
 
 # --- synchronous: round-robin ≡ mini-batch gradient descent (paper §5)
 sched = schedules.round_robin(K, num_rounds=50)
-final, _ = server.run_protocol(theta0, F, sched)
-print(f"round-robin  ({len(sched)} contacts): accuracy {accuracy(final.theta):.3f}")
+res = api.fit(strategy, transport="sequential_server", schedule=sched, theta0=theta0)
+print(
+    f"round-robin  ({len(sched)} contacts): accuracy {accuracy(res.theta):.3f}  "
+    f"wire {res.ledger.total_bytes} B"
+)
 
 # --- asynchronous: random contacts, p(S=i) > 0 for every node
 sched = schedules.asynchronous(jax.random.key(0), K, num_contacts=200)
-final, _ = server.run_protocol(theta0, F, sched)
-print(f"asynchronous ({len(sched)} contacts): accuracy {accuracy(final.theta):.3f}")
+res = api.fit(strategy, transport="sequential_server", schedule=sched, theta0=theta0)
+print(
+    f"asynchronous ({len(sched)} contacts): accuracy {accuracy(res.theta):.3f}  "
+    f"wire {res.ledger.total_bytes} B"
+)
 
 # --- the literal θ_{t-1} handoff (one-step-stale pipelined variant)
-final, _ = server.run_protocol(theta0, F, sched, handoff="stale")
-print(f"stale handoff({len(sched)} contacts): accuracy {accuracy(final.theta):.3f}")
+res = api.fit(strategy, transport="stale_server", schedule=sched, theta0=theta0)
+print(
+    f"stale handoff({len(sched)} contacts): accuracy {accuracy(res.theta):.3f}  "
+    f"wire {res.ledger.total_bytes} B"
+)
+
+# --- same learner, compressed pushes: top-25% delta + error feedback
+res = api.fit(
+    strategy, transport="stale_server", wire="topk:0.25+ef",
+    schedule=sched, theta0=theta0,
+)
+print(
+    f"topk+ef wire ({len(sched)} contacts): accuracy {accuracy(res.theta):.3f}  "
+    f"wire {res.ledger.total_bytes} B (uplink {res.ledger.uplink_bytes} B)"
+)

@@ -1,0 +1,64 @@
+"""Unified distributed-training facade (the paper's §5 thesis as an API).
+
+One client-server protocol — push θ, receive a (possibly stale) handoff —
+subsumes sync mini-batch GD, async SGD, and consensus methods.  This
+package factors that observation into three orthogonal protocols:
+
+* ``Strategy``  — the per-node learner F^(k) (``repro.api.strategy``);
+* ``Transport`` — who talks to whom and when (``repro.api.transport``):
+  ``sequential_server`` · ``stale_server`` · ``delay_line`` ·
+  ``allreduce`` · ``admm_consensus``;
+* ``Wire``      — what crosses the network and what it costs
+  (``repro.api.wire``): dense · top-k · int8, each ± error feedback.
+
+The single entry point::
+
+    from repro import api
+    result = api.fit(strategy, data, transport="stale_server",
+                     wire="topk:0.1+ef", schedule=sched)
+    result.theta, result.trajectory, result.ledger, result.metrics
+
+runs any (strategy × transport × wire) combination in one jit/scan-able
+engine.  See ``docs/API.md`` for the protocol table and the migration
+guide from the historical per-algorithm entry points.
+"""
+
+from repro.api.engine import FitResult, fit
+from repro.api.strategy import (
+    FunctionStrategy,
+    GradientDescent,
+    LBFGS,
+    OptimizerStrategy,
+    ProxStrategy,
+    Strategy,
+)
+from repro.api.transport import (
+    TRANSPORTS,
+    AdmmTransport,
+    ServerTransport,
+    Transport,
+    UpdateTransport,
+    make_transport,
+)
+from repro.api.wire import CompressedWire, DenseWire, Wire, make_wire
+
+__all__ = [
+    "fit",
+    "FitResult",
+    "Strategy",
+    "FunctionStrategy",
+    "GradientDescent",
+    "LBFGS",
+    "ProxStrategy",
+    "OptimizerStrategy",
+    "Transport",
+    "ServerTransport",
+    "UpdateTransport",
+    "AdmmTransport",
+    "TRANSPORTS",
+    "make_transport",
+    "Wire",
+    "DenseWire",
+    "CompressedWire",
+    "make_wire",
+]

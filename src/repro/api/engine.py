@@ -1,0 +1,114 @@
+"""``repro.api.fit`` — one entry point for every distributed trainer.
+
+    fit(strategy, data, transport=..., wire=..., schedule=...)
+
+runs any (strategy × transport × wire) combination inside one
+jit/scan-able engine and returns a uniform ``FitResult``.  The engine
+owns what every historical entry point used to reimplement by hand:
+the scan loop (via the transport), message encoding (via the wire), and
+``CommLedger`` byte accounting (materialized here from the per-round
+byte counts the transport/wire emitted).
+
+``FitResult`` fields:
+
+* ``theta``       — the final parameter (or model pytree, for strategies
+  whose ``finalize`` builds one);
+* ``trajectory``  — per-round trace: the handed-back θ for server
+  transports, the strategy's ``round_metric`` for update transports, the
+  residual history for admm_consensus;
+* ``ledger``      — byte-accurate ``CommLedger`` under the paper's strict
+  client-server cost model;
+* ``metrics``     — the strategy's summary dict, plus engine extras:
+  ``uplink_bytes_per_round`` / ``downlink_bytes_per_round`` (numpy),
+  transport extras (e.g. the full ``ADMMResult``), and ``carry`` — an
+  opaque resume token accepted by a later ``fit(..., carry=...)``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+from repro.core.allreduce import CommLedger
+from repro.api.strategy import Strategy
+from repro.api.transport import Transport, make_transport
+from repro.api.wire import Wire, make_wire
+
+PyTree = Any
+
+
+class FitResult(NamedTuple):
+    theta: PyTree
+    trajectory: PyTree
+    ledger: CommLedger
+    metrics: dict
+
+
+def fit(
+    strategy: Strategy,
+    data: PyTree = None,
+    *,
+    transport: str | Transport = "sequential_server",
+    wire: str | Wire = "dense",
+    schedule=None,
+    steps: int | None = None,
+    stream: PyTree = None,
+    theta0: PyTree = None,
+    carry=None,
+    tag: str = "fit",
+    **transport_options,
+) -> FitResult:
+    """Train ``strategy`` on ``data`` under a transport and a wire.
+
+    Args:
+      strategy: the per-node learner F^(k) (see ``repro.api.strategy``).
+      data: fixed sharded data (leading node axis), or None for stream- or
+        closure-based strategies.
+      transport: one of ``sequential_server`` / ``stale_server`` /
+        ``delay_line`` / ``allreduce`` / ``admm_consensus``, or a
+        ``Transport`` instance.
+      wire: ``"dense"``, ``"topk:<f>[+ef]"``, ``"int8[+ef]"`` or a ``Wire``.
+      schedule: int32 contact schedule (server transports; see
+        ``repro.core.schedules``).
+      steps: number of rounds (update/consensus transports).
+      stream: optional pytree with a leading time axis scanned as the
+        per-round batch (update transports).
+      theta0: initial parameter; defaults to ``strategy.init_theta(data)``.
+      carry: resume token from a previous ``FitResult.metrics["carry"]``.
+      transport_options: transport-specific (``staleness=...`` for
+        delay_line; ``rho``/``g``/``g_lam`` for admm_consensus).
+    """
+    w = make_wire(wire)
+    tr = make_transport(transport, **transport_options)
+    raw = tr.run(
+        strategy, data,
+        wire=w, schedule=schedule, steps=steps, stream=stream,
+        theta0=theta0, carry=carry,
+    )
+
+    ledger = CommLedger()
+    if strategy.init_rounds and carry is None:
+        K = strategy.num_nodes(data)
+        theta_like = raw.theta if theta0 is None else theta0
+        for _ in range(strategy.init_rounds):
+            ledger.record_allreduce(theta_like, K, tag=f"{tag}/init")
+    ups = np.asarray(raw.uplink)
+    downs = np.asarray(raw.downlink)
+    for t in range(ups.shape[0]):
+        up, down = int(ups[t]), int(downs[t])
+        ledger.uplink_bytes += up
+        ledger.downlink_bytes += down
+        ledger.rounds += raw.rounds_per_step
+        ledger.events.append((raw.event_kind, f"{tag}[{t}]", up + down))
+
+    metrics = dict(strategy.summary(raw.theta, data))
+    metrics.update(raw.extras)
+    metrics["uplink_bytes_per_round"] = ups
+    metrics["downlink_bytes_per_round"] = downs
+    metrics["transport"] = tr.name
+    metrics["wire"] = w.name
+    metrics["carry"] = raw.carry
+    return FitResult(
+        theta=raw.theta, trajectory=raw.trajectory, ledger=ledger, metrics=metrics
+    )

@@ -1,0 +1,385 @@
+"""Strategy layer — the per-node learner F^(k).
+
+The paper's §5 observation is that ANY local learning method F^(k) can sit
+behind the client-server protocol; a ``Strategy`` is exactly that method,
+written once and runnable under every transport.  Three method families,
+one per transport family:
+
+* server family (``local_step``)       — F^(k): θ → θ', used by the
+  ``sequential_server`` / ``stale_server`` transports;
+* update family (``local_updates`` / ``aggregate`` / ``apply_update``) —
+  per-node messages + one aggregation + a global apply, used by the
+  ``allreduce`` / ``delay_line`` transports;
+* consensus family (``make_local_prox``) — the per-node proximity operator
+  of consensus ADMM, used by the ``admm_consensus`` transport.
+
+A strategy implements the families that make sense for it and raises a
+clear error otherwise.  Generic strategies live here; algorithm-specific
+ones (cascade SVM, k-windows) live next to their algorithms in ``ml/``
+and plug into the same engine.
+"""
+
+from __future__ import annotations
+
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.allreduce import server_allreduce
+
+PyTree = Any
+
+
+class Strategy:
+    """Base strategy.  Subclasses override the families they support."""
+
+    #: messages from ``local_updates`` carry a leading node axis
+    stacked_msgs: bool = True
+    #: communication rounds charged before the loop (e.g. an initial
+    #: gradient Allreduce) — the engine adds them to the ledger
+    init_rounds: int = 0
+
+    # -- setup ---------------------------------------------------------------
+    def init_theta(self, data) -> PyTree:
+        raise NotImplementedError(
+            f"{type(self).__name__} cannot derive θ_0 from data; pass theta0="
+        )
+
+    def init_state(self, theta: PyTree, data):
+        return ()
+
+    def num_nodes(self, data) -> int:
+        if data is None:
+            raise ValueError(
+                f"{type(self).__name__}.num_nodes needs data with a leading "
+                "node axis (or override num_nodes)"
+            )
+        return jax.tree.leaves(data)[0].shape[0]
+
+    # -- server family -------------------------------------------------------
+    def local_step(self, k, theta: PyTree, state, data):
+        """F^(k): one local run on node ``k``'s shard.  Returns (θ', state)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support server transports"
+        )
+
+    # -- update family -------------------------------------------------------
+    def local_updates(self, theta: PyTree, state, data, batch):
+        """All nodes' messages for this round (stacked on axis 0 when
+        ``stacked_msgs``).  ``batch`` is the per-round stream element, or
+        None for fixed shard data.  Returns (msgs, state)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support update transports"
+        )
+
+    def aggregate(self, msgs: PyTree) -> PyTree:
+        return server_allreduce(msgs, op="sum")
+
+    def apply_update(self, theta: PyTree, agg: PyTree, state, data):
+        """Apply the aggregated message.  Returns (θ', state)."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support update transports"
+        )
+
+    # -- consensus family ----------------------------------------------------
+    def make_local_prox(self, data) -> Callable:
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support the admm_consensus "
+            "transport"
+        )
+
+    def dim(self, data) -> int:
+        """Consensus-variable dimension for admm_consensus."""
+        raise NotImplementedError
+
+    # -- diagnostics & wire-cost hooks ---------------------------------------
+    def round_metric(self, theta: PyTree, state, data):
+        """Per-round scalar (or small pytree) stacked into the trajectory
+        by update transports."""
+        return jnp.zeros(())
+
+    def summary(self, theta: PyTree, data) -> dict:
+        """Final metrics dict merged into ``FitResult.metrics``."""
+        return {}
+
+    def finalize(self, theta: PyTree, state, data) -> PyTree:
+        return theta
+
+    def uplink_bytes(self, msgs_hat: PyTree, data):
+        """Override to report semantic (data-dependent) push cost; None →
+        the wire layer's measurement is used."""
+        return None
+
+    def downlink_bytes(self, theta: PyTree, data):
+        """Override the broadcast cost; None → K dense copies of θ."""
+        return None
+
+
+# ----------------------------------------------------------------------------
+# Generic strategies
+# ----------------------------------------------------------------------------
+
+
+class FunctionStrategy(Strategy):
+    """Wrap a bare update function ``F(k, θ) -> θ'`` (the paper's notation)
+    as a server-family strategy — the 3-line path from ``run_protocol``."""
+
+    def __init__(self, F: Callable, *, num_nodes: int, metric: Callable | None = None):
+        self._F = F
+        self._num_nodes = num_nodes
+        self._metric = metric
+
+    def num_nodes(self, data) -> int:
+        return self._num_nodes
+
+    def local_step(self, k, theta, state, data):
+        return self._F(k, theta), state
+
+    def round_metric(self, theta, state, data):
+        if self._metric is None:
+            return jnp.zeros(())
+        return self._metric(theta)
+
+    def summary(self, theta, data) -> dict:
+        if self._metric is None:
+            return {}
+        return {"final_metric": self._metric(theta)}
+
+
+class GradientDescent(Strategy):
+    """Full-batch distributed GD on sharded ``data = (Xs, ys)``.
+
+    Under ``allreduce`` this is the [47]/[5] pattern (push local gradient,
+    receive the global aggregate) — bit-identical to the historical
+    ``ml.linear.distributed_gd``.  Under the server transports each contact
+    is one local gradient step (the §5 quickstart learner).
+    """
+
+    def __init__(
+        self,
+        loss: Callable,
+        *,
+        lr: float = 0.1,
+        l2: float = 0.0,
+    ):
+        self.loss = loss
+        self.lr = lr
+        self.l2 = l2
+        self._grad_local = jax.vmap(jax.grad(loss), in_axes=(None, 0, 0))
+
+    def init_theta(self, data):
+        Xs, _ = data
+        return jnp.zeros((Xs.shape[-1],))
+
+    def _weights(self, data):
+        Xs, _ = data
+        K, Nk = Xs.shape[0], Xs.shape[1]
+        return jnp.full((K,), Nk / (K * Nk))
+
+    def local_step(self, k, theta, state, data):
+        Xs, ys = data
+        g = jax.grad(self.loss)(theta, Xs[k], ys[k])
+        return theta - self.lr * (g + self.l2 * theta), state
+
+    def local_updates(self, theta, state, data, batch):
+        Xs, ys = data
+        gs = self._grad_local(theta, Xs, ys)
+        return gs * self._weights(data)[:, None], state
+
+    def apply_update(self, theta, agg, state, data):
+        g = agg + self.l2 * theta
+        return theta - self.lr * g, state
+
+    def round_metric(self, theta, state, data):
+        Xs, ys = data
+        return jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+
+    def summary(self, theta, data) -> dict:
+        return {"loss": self.round_metric(theta, (), data)}
+
+
+class _LBFGSState(NamedTuple):
+    g: jnp.ndarray
+    S: jnp.ndarray
+    Y: jnp.ndarray
+    rho: jnp.ndarray
+    valid: jnp.ndarray
+    it: jnp.ndarray
+    theta_prop: jnp.ndarray
+
+
+def _two_loop(g, S, Y, rho, valid):
+    """Standard L-BFGS two-loop recursion with a validity mask."""
+
+    def bwd(carry, inp):
+        (q,) = carry
+        s, yv, r, v = inp
+        alpha = jnp.where(v > 0, r * jnp.dot(s, q), 0.0)
+        q = q - alpha * yv * jnp.where(v > 0, 1.0, 0.0)
+        return (q,), alpha
+
+    (q,), alphas = jax.lax.scan(
+        bwd, (g,), (S[::-1], Y[::-1], rho[::-1], valid[::-1])
+    )
+    num = jnp.sum(S * Y, axis=1)
+    den = jnp.sum(Y * Y, axis=1)
+    gamma = jnp.where(
+        jnp.any(valid > 0),
+        jnp.sum(jnp.where(valid > 0, num, 0.0))
+        / jnp.maximum(jnp.sum(jnp.where(valid > 0, den, 0.0)), 1e-12),
+        1.0,
+    )
+    r_vec = gamma * q
+
+    def fwd(carry, inp):
+        (r_v,) = carry
+        s, yv, r, v, alpha = inp
+        beta = jnp.where(v > 0, r * jnp.dot(yv, r_v), 0.0)
+        r_v = r_v + (alpha - beta) * s * jnp.where(v > 0, 1.0, 0.0)
+        return (r_v,), None
+
+    (r_vec,), _ = jax.lax.scan(fwd, (r_vec,), (S, Y, rho, valid, alphas[::-1]))
+    return r_vec
+
+
+class LBFGS(Strategy):
+    """[5]'s distributed L-BFGS: ONE gradient Allreduce per iteration; the
+    (s, y) rank-1 history and the two-loop recursion run locally — and
+    deterministically identically — on every node."""
+
+    init_rounds = 1  # the initial global gradient
+
+    def __init__(
+        self,
+        loss: Callable,
+        *,
+        history: int = 8,
+        lr: float = 1.0,
+        l2: float = 1e-4,
+    ):
+        self.loss = loss
+        self.history = history
+        self.lr = lr
+        self.l2 = l2
+        self._grad_local = jax.vmap(jax.grad(loss), in_axes=(None, 0, 0))
+
+    def init_theta(self, data):
+        Xs, _ = data
+        return jnp.zeros((Xs.shape[-1],))
+
+    def init_state(self, theta, data):
+        Xs, ys = data
+        n, m = theta.shape[0], self.history
+        g0 = server_allreduce(
+            self._grad_local(theta, Xs, ys), op="mean"
+        ) + self.l2 * theta
+        return _LBFGSState(
+            g=g0,
+            S=jnp.zeros((m, n)),
+            Y=jnp.zeros((m, n)),
+            rho=jnp.zeros((m,)),
+            valid=jnp.zeros((m,)),
+            it=jnp.asarray(0),
+            theta_prop=theta,
+        )
+
+    def local_updates(self, theta, state, data, batch):
+        Xs, ys = data
+        d = -_two_loop(state.g, state.S, state.Y, state.rho, state.valid)
+        theta_prop = theta + self.lr * d
+        msgs = self._grad_local(theta_prop, Xs, ys)
+        return msgs, state._replace(theta_prop=theta_prop)
+
+    def aggregate(self, msgs):
+        return server_allreduce(msgs, op="mean")
+
+    def apply_update(self, theta, agg, state, data):
+        theta_new = state.theta_prop
+        g_new = agg + self.l2 * theta_new
+        s = theta_new - theta
+        yv = g_new - state.g
+        sy = jnp.dot(s, yv)
+        ok = sy > 1e-10  # curvature condition
+        S = jnp.where(ok, jnp.roll(state.S, -1, axis=0).at[-1].set(s), state.S)
+        Y = jnp.where(ok, jnp.roll(state.Y, -1, axis=0).at[-1].set(yv), state.Y)
+        rho = jnp.where(
+            ok,
+            jnp.roll(state.rho, -1).at[-1].set(1.0 / jnp.maximum(sy, 1e-12)),
+            state.rho,
+        )
+        valid = jnp.where(ok, jnp.roll(state.valid, -1).at[-1].set(1.0), state.valid)
+        new_state = _LBFGSState(
+            g=g_new, S=S, Y=Y, rho=rho, valid=valid,
+            it=state.it + 1, theta_prop=state.theta_prop,
+        )
+        return theta_new, new_state
+
+    def round_metric(self, theta, state, data):
+        Xs, ys = data
+        return jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+
+    def summary(self, theta, data) -> dict:
+        return {"loss": self.round_metric(theta, (), data)}
+
+
+class ProxStrategy(Strategy):
+    """Consensus-family strategy: per-node proximity operators for the
+    ``admm_consensus`` transport (the paper's Douglas-Rachford three-stage
+    algorithm).  ``make_prox(data)`` builds the vectorized local prox
+    ``(v, u, rho) -> (K, n)`` — closed form or inner gradient loop."""
+
+    def __init__(self, make_prox: Callable, *, dim: int | None = None):
+        self._make_prox = make_prox
+        self._dim = dim
+
+    def make_local_prox(self, data):
+        return self._make_prox(data)
+
+    def dim(self, data) -> int:
+        if self._dim is not None:
+            return self._dim
+        Xs = data[0] if isinstance(data, tuple) else data
+        return Xs.shape[-1]
+
+
+class OptimizerStrategy(Strategy):
+    """Single-stream optimizer training (the ``launch/train.py`` workload):
+    one logical push per step whose message is the gradient of ``loss_fn``
+    on the per-round batch, applied through a ``repro.optim`` optimizer.
+    Compose with ``delay_line`` for §5 bounded staleness and a compressed
+    wire for the low-communication push."""
+
+    stacked_msgs = False
+
+    def __init__(self, loss_fn: Callable, optimizer, *, has_aux: bool = False):
+        self.loss_fn = loss_fn
+        self.optimizer = optimizer
+        self.has_aux = has_aux
+
+    def num_nodes(self, data) -> int:
+        return 1
+
+    def init_state(self, theta, data):
+        return (self.optimizer.init(theta), jnp.zeros(()))
+
+    def local_updates(self, theta, state, data, batch):
+        if self.has_aux:
+            (l, _), grads = jax.value_and_grad(self.loss_fn, has_aux=True)(
+                theta, batch
+            )
+        else:
+            l, grads = jax.value_and_grad(self.loss_fn)(theta, batch)
+        return grads, (state[0], l)
+
+    def aggregate(self, msgs):
+        return msgs  # one logical node — nothing to reduce
+
+    def apply_update(self, theta, agg, state, data):
+        from repro.optim.optimizers import apply_updates
+
+        updates, opt_state = self.optimizer.update(agg, state[0], theta)
+        return apply_updates(theta, updates), (opt_state, state[1])
+
+    def round_metric(self, theta, state, data):
+        return state[1]  # loss on the round's batch (pre-update)

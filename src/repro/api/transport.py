@@ -1,0 +1,303 @@
+"""Transport layer — WHO talks to whom, and when.
+
+Each transport is one client-server topology from the paper, wrapping the
+corresponding ``repro.core`` primitive:
+
+* ``sequential_server`` — the §5 central information server with the
+  sequential handoff (round-robin ≡ mini-batch GD equivalence); wraps
+  ``core.server``.
+* ``stale_server``      — the literal §5 protocol text: the pusher
+  receives θ_{t-1}; wraps ``core.server``.
+* ``allreduce``         — the two-phase central-server Allreduce of §3.1
+  ([47]/[5]); wraps ``core.allreduce``.
+* ``delay_line``        — the §5 algorithm mapped to SPMD: the aggregated
+  update is applied D steps late; wraps ``core.staleness``.
+* ``admm_consensus``    — global-variable-consensus ADMM (three-stage
+  Douglas-Rachford, two Allreduces per iteration); wraps ``core.admm``.
+
+A transport's ``run`` owns the jit/scan-able loop; it calls back into the
+strategy for local computation and into the wire for message encoding and
+byte metering, and returns a ``RawRun`` that the engine turns into a
+``FitResult``.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.api.strategy import Strategy
+from repro.core.admm import consensus_admm
+from repro.core.server import contact, init_server
+from repro.core.staleness import delay_init, delay_push_pop
+
+PyTree = Any
+
+
+class RawRun(NamedTuple):
+    theta: PyTree
+    state: Any
+    trajectory: PyTree
+    uplink: jnp.ndarray  # (T,) per-round uplink bytes
+    downlink: jnp.ndarray  # (T,) per-round downlink bytes
+    rounds_per_step: int  # ledger rounds charged per loop step
+    event_kind: str  # ledger event tag ("contact" / "allreduce" / ...)
+    extras: dict
+    carry: Any  # opaque resume state
+
+
+class Transport:
+    name = "transport"
+
+    def run(
+        self, strategy, data, *, wire, schedule, steps, stream, theta0, carry
+    ) -> RawRun:
+        raise NotImplementedError
+
+
+def _resolve_theta0(strategy, data, theta0):
+    return strategy.init_theta(data) if theta0 is None else theta0
+
+
+class ServerTransport(Transport):
+    """The §5 central information server under a contact schedule."""
+
+    def __init__(self, handoff: str):
+        if handoff not in ("sequential", "stale"):
+            raise ValueError(f"unknown handoff {handoff!r}")
+        self.handoff = handoff
+        self.name = (
+            "sequential_server" if handoff == "sequential" else "stale_server"
+        )
+
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+        if schedule is None:
+            raise ValueError(
+                f"transport {self.name!r} needs a contact schedule= "
+                "(see repro.core.schedules)"
+            )
+        if carry is None:
+            theta0 = _resolve_theta0(strategy, data, theta0)
+            K = strategy.num_nodes(data)
+            carry = (
+                init_server(theta0),
+                strategy.init_state(theta0, data),
+                wire.init_state(theta0, K, stacked=True),
+            )
+        theta_template = carry[0].theta
+        handoff = self.handoff
+        down_const = wire.measure(theta_template)  # dense θ handed back
+        static_up = wire.push_bytes(theta_template)
+
+        def step(c, k):
+            server, sstate, wstate = c
+            theta_start = (
+                server.theta if handoff == "sequential" else server.theta_prev
+            )
+            theta_new, sstate = strategy.local_step(k, theta_start, sstate, data)
+            wstate, theta_push, up = wire.encode_push(
+                wstate, k, theta_start, theta_new
+            )
+            server, received = contact(server, theta_push, handoff=handoff)
+            return (server, sstate, wstate), (received, up)
+
+        (server, sstate, wstate), (traj, ups) = jax.lax.scan(
+            step, carry, schedule
+        )
+        theta = strategy.finalize(server.theta, sstate, data)
+        T = len(schedule)
+        if static_up is not None:
+            # exact integer accounting — large models overflow f32 mantissas
+            ups = np.full((T,), static_up, dtype=np.int64)
+        return RawRun(
+            theta=theta,
+            state=sstate,
+            trajectory=traj,
+            uplink=ups,
+            downlink=np.full((T,), down_const, dtype=np.int64),
+            rounds_per_step=1,
+            event_kind="contact",
+            extras={"server_state": server},
+            carry=(server, sstate, wstate),
+        )
+
+
+class UpdateTransport(Transport):
+    """Synchronous Allreduce (staleness=0) or the bounded-staleness delay
+    line (staleness=D>0): every round all nodes push an update message;
+    the aggregate is applied — possibly D rounds late."""
+
+    def __init__(self, staleness: int = 0):
+        if staleness < 0:
+            raise ValueError("staleness must be >= 0")
+        self.staleness = staleness
+        self.name = "allreduce" if staleness == 0 else "delay_line"
+
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+        K = strategy.num_nodes(data)
+        if stream is not None:
+            T = jax.tree.leaves(stream)[0].shape[0]
+        elif steps is not None:
+            T = steps
+        else:
+            raise ValueError(
+                f"transport {self.name!r} needs steps= or a stream= with a "
+                "leading time axis"
+            )
+        if carry is None:
+            theta0 = _resolve_theta0(strategy, data, theta0)
+            delay = (
+                delay_init(jax.tree.map(jnp.zeros_like, theta0), self.staleness)
+                if self.staleness > 0
+                else ()
+            )
+            carry = (
+                theta0,
+                strategy.init_state(theta0, data),
+                wire.init_state(theta0, K, stacked=strategy.stacked_msgs),
+                delay,
+            )
+        theta_template = carry[0]
+        D = self.staleness
+        # static byte accounting where possible (see Wire.push_bytes)
+        up_is_static = (
+            type(strategy).uplink_bytes is Strategy.uplink_bytes
+            and wire.push_bytes(theta_template) is not None
+        )
+        down_is_static = type(strategy).downlink_bytes is Strategy.downlink_bytes
+
+        def step(c, xt):
+            theta, sstate, wstate, delay = c
+            msgs, sstate = strategy.local_updates(theta, sstate, data, xt)
+            wstate, msgs_hat, up = wire.encode_updates(
+                wstate, msgs, stacked=strategy.stacked_msgs
+            )
+            up_override = strategy.uplink_bytes(msgs_hat, data)
+            if up_override is not None:
+                up = up_override
+            agg = strategy.aggregate(msgs_hat)
+            if D > 0:
+                delay, agg = delay_push_pop(delay, agg)
+            theta_new, sstate = strategy.apply_update(theta, agg, sstate, data)
+            down = strategy.downlink_bytes(theta_new, data)
+            if down is None:
+                down = jnp.asarray(float(K * wire.measure(theta_new)))
+            m = strategy.round_metric(theta_new, sstate, data)
+            return (theta_new, sstate, wstate, delay), (m, up, down)
+
+        xs = stream if stream is not None else None
+        carry, (traj, ups, downs) = jax.lax.scan(step, carry, xs, length=T)
+        theta, sstate = carry[0], carry[1]
+        theta = strategy.finalize(theta, sstate, data)
+        if up_is_static:
+            per_round = wire.push_bytes(theta_template) * (
+                K if strategy.stacked_msgs else 1
+            )
+            ups = np.full((T,), per_round, dtype=np.int64)
+        if down_is_static:
+            downs = np.full(
+                (T,), K * wire.measure(theta_template), dtype=np.int64
+            )
+        return RawRun(
+            theta=theta,
+            state=sstate,
+            trajectory=traj,
+            uplink=ups,
+            downlink=downs,
+            rounds_per_step=1,
+            event_kind="allreduce",
+            extras={},
+            carry=carry,
+        )
+
+
+class AdmmTransport(Transport):
+    """Global-variable-consensus ADMM: the strategy supplies the per-node
+    prox; every iteration costs two Allreduces of the consensus variable
+    (z-update mean + residual norms), which is what the ledger charges."""
+
+    name = "admm_consensus"
+
+    def __init__(self, *, rho: float = 1.0, g: str = "none", g_lam: float = 0.0):
+        self.rho = rho
+        self.g = g
+        self.g_lam = g_lam
+
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+        if steps is None:
+            raise ValueError("transport 'admm_consensus' needs steps= (iterations)")
+        if theta0 is not None or carry is not None:
+            raise ValueError(
+                "admm_consensus runs are one-shot: warm-start (theta0=) and "
+                "resume (carry=) are not supported — rerun with more steps"
+            )
+        if type(wire).__name__ != "DenseWire" and wire.name != "dense":
+            raise ValueError(
+                "admm_consensus supports only the dense wire — compressing "
+                "the consensus pushes would change the algorithm"
+            )
+        local_prox = strategy.make_local_prox(data)
+        K = strategy.num_nodes(data)
+        dim = strategy.dim(data)
+        res = consensus_admm(
+            local_prox, K, dim,
+            rho=self.rho, g=self.g, g_lam=self.g_lam, iters=steps,
+        )
+        # two Allreduces of the (dim,) consensus variable per iteration
+        per_iter = 2 * K * wire.measure(res.z)
+        ups = np.full((steps,), per_iter, dtype=np.int64)
+        return RawRun(
+            theta=res.z,
+            state=res.state,
+            trajectory=res.history,
+            uplink=ups,
+            downlink=ups,
+            rounds_per_step=2,
+            event_kind="allreduce",
+            extras={"admm": res},
+            carry=res.state,
+        )
+
+
+TRANSPORTS = (
+    "sequential_server",
+    "stale_server",
+    "delay_line",
+    "allreduce",
+    "admm_consensus",
+)
+
+
+def make_transport(spec: str | Transport, **options) -> Transport:
+    """Resolve a transport spec; ``options`` are transport-specific
+    (``staleness`` for delay_line; ``rho``/``g``/``g_lam`` for
+    admm_consensus)."""
+    if isinstance(spec, Transport):
+        if options:
+            raise ValueError("transport options only apply to string specs")
+        return spec
+    if spec == "sequential_server":
+        _expect(options, ())
+        return ServerTransport("sequential")
+    if spec == "stale_server":
+        _expect(options, ())
+        return ServerTransport("stale")
+    if spec == "allreduce":
+        _expect(options, ())
+        return UpdateTransport(staleness=0)
+    if spec == "delay_line":
+        _expect(options, ("staleness",))
+        return UpdateTransport(staleness=options.get("staleness", 1))
+    if spec == "admm_consensus":
+        _expect(options, ("rho", "g", "g_lam"))
+        return AdmmTransport(**options)
+    raise ValueError(f"unknown transport {spec!r} — one of {TRANSPORTS}")
+
+
+def _expect(options: dict, allowed: tuple):
+    unknown = set(options) - set(allowed)
+    if unknown:
+        raise TypeError(f"unexpected transport options: {sorted(unknown)}")

@@ -1,0 +1,174 @@
+"""Wire layer — WHAT crosses the network and what it costs.
+
+The paper's recurring evaluation axis is communication overhead; its §5
+cites Li et al.'s parameter server [37] whose key mechanism is *filtering*
+pushed updates.  In the unified API the wire is an orthogonal protocol:
+a ``Wire`` decides how a push is encoded (dense, top-k sparsified, int8
+quantized, each optionally wrapped in error feedback) and reports the
+byte cost of every message, so ``CommLedger`` accounting no longer has to
+be threaded by hand at each call site — the engine collects the per-round
+byte counts emitted here and materializes the ledger.
+
+Two encode entry points, one per transport family:
+
+* ``encode_push`` — server transports (§5 protocol).  The node pushes the
+  *delta* it computed on top of the handed-off parameter; the server
+  reconstructs θ_push = θ_start + decode(Δ).  The dense wire passes the
+  new θ through untouched (bit-exact with ``core.server.run_protocol``).
+* ``encode_updates`` — update transports (allreduce / delay line).  The
+  per-node messages (gradients, statistics) are encoded before
+  aggregation; error-feedback residuals are carried per node.
+
+Compressed wires assume messages are shaped like θ (true for gradient and
+delta pushes); strategies with semantic compression (e.g. the cascade
+SVM's SVs-only push) override the byte accounting hooks instead.
+"""
+
+from __future__ import annotations
+
+from functools import partial
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.compression import Compressed, int8_compress, topk_compress
+from repro.utils.tree import tree_add, tree_bytes, tree_sub
+
+PyTree = Any
+
+
+class Wire:
+    """Base wire: dense — push exactly what the strategy produced."""
+
+    name = "dense"
+
+    def init_state(self, theta: PyTree, num_nodes: int, *, stacked: bool = True):
+        """Per-run wire state (e.g. error-feedback residuals); () if none."""
+        return ()
+
+    def measure(self, tree: PyTree) -> int:
+        """Dense byte size of ``tree`` — the cost of an uncompressed copy."""
+        return tree_bytes(tree)
+
+    def push_bytes(self, theta: PyTree) -> int | None:
+        """Static per-push byte cost for θ-shaped messages, or None when the
+        cost is value-dependent.  Transports use a static cost to keep byte
+        counters out of the (float32) scan so the ledger stays exact for
+        arbitrarily large models."""
+        return self.measure(theta)
+
+    def encode_push(self, wstate, k, theta_start: PyTree, theta_new: PyTree):
+        """Encode one §5 contact push.  Returns (wstate, θ_push, up_bytes)."""
+        return wstate, theta_new, jnp.asarray(float(self.measure(theta_new)))
+
+    def encode_updates(self, wstate, msgs: PyTree, *, stacked: bool = True):
+        """Encode the per-round update messages.  Returns
+        (wstate, msgs_hat, up_bytes) where ``up_bytes`` sums all nodes."""
+        return wstate, msgs, jnp.asarray(float(tree_bytes(msgs)))
+
+
+class DenseWire(Wire):
+    pass
+
+
+class CompressedWire(Wire):
+    """Compression stack from ``core.compression`` + optional error feedback.
+
+    ``compressor`` maps a pytree to a ``Compressed`` (decoded tree + wire
+    bytes).  With ``error_feedback`` the residual of whatever the
+    compressor dropped is carried per node and added to the next push —
+    the EF-SGD construction that preserves the non-distributed rate.
+    """
+
+    def __init__(
+        self,
+        compressor: Callable[[PyTree], Compressed],
+        *,
+        error_feedback: bool = False,
+        name: str = "compressed",
+    ):
+        self.compressor = compressor
+        self.error_feedback = error_feedback
+        self.name = name
+
+    def init_state(self, theta: PyTree, num_nodes: int, *, stacked: bool = True):
+        if not self.error_feedback:
+            return ()
+        if stacked:
+            return jax.tree.map(
+                lambda p: jnp.zeros((num_nodes,) + p.shape, dtype=p.dtype), theta
+            )
+        return jax.tree.map(jnp.zeros_like, theta)
+
+    def push_bytes(self, theta: PyTree) -> int | None:
+        # Both built-in codecs (top-k fraction, int8) price a push from
+        # shapes alone, so one eager evaluation on zeros gives the exact
+        # static cost.
+        zeros = jax.tree.map(jnp.zeros_like, theta)
+        return int(float(self.compressor(zeros).wire_bytes))
+
+    def encode_push(self, wstate, k, theta_start, theta_new):
+        delta = tree_sub(theta_new, theta_start)
+        if self.error_feedback:
+            r_k = jax.tree.map(lambda b: b[k], wstate)
+            corrected = tree_add(delta, r_k)
+            comp = self.compressor(corrected)
+            wstate = jax.tree.map(
+                lambda b, c, d: b.at[k].set(c - d), wstate, corrected, comp.tree
+            )
+        else:
+            comp = self.compressor(delta)
+        theta_push = tree_add(theta_start, comp.tree)
+        return wstate, theta_push, comp.wire_bytes
+
+    def encode_updates(self, wstate, msgs, *, stacked: bool = True):
+        if not stacked:
+            if self.error_feedback:
+                corrected = tree_add(msgs, wstate)
+                comp = self.compressor(corrected)
+                return tree_sub(corrected, comp.tree), comp.tree, comp.wire_bytes
+            comp = self.compressor(msgs)
+            return wstate, comp.tree, comp.wire_bytes
+        if self.error_feedback:
+
+            def one(r, m):
+                corrected = tree_add(m, r)
+                comp = self.compressor(corrected)
+                return tree_sub(corrected, comp.tree), comp.tree, comp.wire_bytes
+
+            new_res, msgs_hat, nb = jax.vmap(one)(wstate, msgs)
+            return new_res, msgs_hat, jnp.sum(nb)
+        comp = jax.vmap(self.compressor)(msgs)
+        return wstate, comp.tree, jnp.sum(comp.wire_bytes)
+
+
+def make_wire(spec: str | Wire | None) -> Wire:
+    """Resolve a wire spec.
+
+    Accepts a ``Wire`` instance, ``None``/"dense", or a string of the form
+    ``"<codec>[+ef]"`` with codecs ``topk:<fraction>`` and ``int8`` — e.g.
+    ``"topk:0.05+ef"`` is top-5% magnitude sparsification with error
+    feedback.
+    """
+    if spec is None:
+        return DenseWire()
+    if isinstance(spec, Wire):
+        return spec
+    if not isinstance(spec, str):
+        raise TypeError(f"wire spec must be a Wire or str, got {type(spec)!r}")
+    if spec == "dense":
+        return DenseWire()
+    ef = spec.endswith("+ef")
+    base = spec[:-3] if ef else spec
+    if base.startswith("topk:"):
+        fraction = float(base.split(":", 1)[1])
+        compressor = partial(topk_compress, fraction=fraction)
+    elif base == "int8":
+        compressor = int8_compress
+    else:
+        raise ValueError(
+            f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]' "
+            "or 'int8[+ef]'"
+        )
+    return CompressedWire(compressor, error_feedback=ef, name=spec)

@@ -87,6 +87,13 @@ class CommLedger:
         self.downlink_bytes += nbytes
         self.events.append(("pull", tag, nbytes))
 
+    def merge(self, other: "CommLedger") -> None:
+        """Fold another ledger's accounting into this one."""
+        self.uplink_bytes += other.uplink_bytes
+        self.downlink_bytes += other.downlink_bytes
+        self.rounds += other.rounds
+        self.events.extend(other.events)
+
     @property
     def total_bytes(self) -> int:
         return self.uplink_bytes + self.downlink_bytes

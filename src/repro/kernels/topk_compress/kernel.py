@@ -24,6 +24,9 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+# jax < 0.5 ships this as TPUCompilerParams; newer releases renamed it.
+_CompilerParams = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+
 BLOCK = 1024
 ROWS = 8
 NCAND = 128
@@ -84,7 +87,7 @@ def count_ge(x: jnp.ndarray, thresholds: jnp.ndarray, *, interpret: bool = True)
         out_specs=pl.BlockSpec((1, NCAND), lambda i: (0, 0)),
         out_shape=jax.ShapeDtypeStruct((1, NCAND), jnp.float32),
         scratch_shapes=[pltpu.VMEM((1, NCAND), jnp.float32)],
-        compiler_params=pltpu.CompilerParams(
+        compiler_params=_CompilerParams(
             dimension_semantics=("arbitrary",)
         ),
         interpret=interpret,

@@ -1,14 +1,19 @@
 """Training launcher — end-to-end driver usable on CPU (reduced configs)
 and, unchanged, on a real mesh (full configs).
 
-Integrates the paper's §5 machinery as first-class training options:
+The per-step update pipeline is the unified ``repro.api`` engine:
 
-* ``--staleness D``   — bounded-staleness delay-line (D=0 synchronous; D=1
-  the paper's literal one-step-stale protocol);
-* ``--compress-topk f`` — top-k sparsified gradient push with error
-  feedback (the low-communication-overhead motif);
-* gradient aggregation over the data axes is the Allreduce the paper
-  simulates with its central server.
+* strategy  — ``OptimizerStrategy`` (gradient of the LM loss through a
+  ``repro.optim`` optimizer);
+* transport — ``delay_line`` (``--staleness D``: D=0 synchronous; D=1 the
+  paper's literal one-step-stale protocol);
+* wire      — ``--compress-topk f`` selects ``topk:f+ef`` (top-k
+  sparsified push with error feedback), otherwise dense.
+
+The driver calls ``api.fit`` in chunks aligned to the logging /
+checkpoint cadence, resuming each chunk from the previous
+``FitResult.metrics["carry"]`` so the delay line, error-feedback
+residuals and optimizer state flow through unchanged.
 
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -24,38 +29,21 @@ import time
 import jax
 import jax.numpy as jnp
 
+from repro import api
+from repro.api.strategy import OptimizerStrategy
 from repro.checkpoint import save
 from repro.configs import get_config
-from repro.core.compression import ef_compress, ef_init, topk_compress
-from repro.core.staleness import delay_init, delay_push_pop
 from repro.data import synthetic_lm_batches
-from repro.models import transformer as tf, whisper
+from repro.models import transformer as tf
 from repro.optim import adam, clip_by_global_norm, warmup_cosine
-from repro.optim.optimizers import apply_updates
 
 
-def make_step(cfg, optimizer, *, staleness: int, compress: float):
-    loss_fn = whisper.loss_fn if cfg.is_encoder_decoder else tf.loss_fn
-
-    def step(state, batch):
-        params, opt_state, delay, ef = state
-        (l, metrics), grads = jax.value_and_grad(
-            lambda p: loss_fn(p, cfg, batch), has_aux=True
-        )(params)
-        wire = jnp.zeros(())
-        if compress > 0:
-            ef, comp = ef_compress(
-                ef, grads, lambda t: topk_compress(t, compress)
-            )
-            grads = comp.tree
-            wire = comp.wire_bytes
-        if staleness > 0:
-            delay, grads = delay_push_pop(delay, grads)
-        updates, opt_state = optimizer.update(grads, opt_state, params)
-        params = apply_updates(params, updates)
-        return (params, opt_state, delay, ef), dict(metrics, loss=l, wire=wire)
-
-    return jax.jit(step, donate_argnums=(0,))
+def _chunk_end(done: int, steps: int, log_every: int, ckpt_every: int) -> int:
+    """Next boundary where the driver needs control back."""
+    targets = [steps, (done // log_every + 1) * log_every]
+    if ckpt_every:
+        targets.append((done // ckpt_every + 1) * ckpt_every)
+    return min(t for t in targets if t > done)
 
 
 def main(argv=None):
@@ -86,34 +74,59 @@ def main(argv=None):
     optimizer = clip_by_global_norm(
         adam(warmup_cosine(args.lr, args.steps // 10 + 1, args.steps)), 1.0
     )
-    opt_state = optimizer.init(params)
-    delay = delay_init(params, args.staleness) if args.staleness > 0 else None
-    ef = ef_init(params) if args.compress_topk > 0 else None
-    step = make_step(
-        cfg, optimizer, staleness=args.staleness, compress=args.compress_topk
+    strategy = OptimizerStrategy(
+        lambda p, batch: tf.loss_fn(p, cfg, batch), optimizer, has_aux=True
     )
+    wire = f"topk:{args.compress_topk}+ef" if args.compress_topk > 0 else "dense"
 
     data = synthetic_lm_batches(args.seed, args.batch, args.seq, cfg.vocab_size)
-    state = (params, opt_state, delay, ef)
     print(
         f"training {cfg.name} ({n_params/1e6:.1f}M params, "
-        f"staleness={args.staleness}, topk={args.compress_topk})"
+        f"staleness={args.staleness}, wire={wire})"
     )
     t0 = time.time()
     history = []
-    for i in range(args.steps):
-        batch = next(data)
-        state, metrics = step(state, batch)
-        if (i + 1) % args.log_every == 0 or i == 0:
-            l = float(metrics["loss"])
-            history.append({"step": i + 1, "loss": l})
+    theta, carry, done = params, None, 0
+    wire_bytes = 0
+    while done < args.steps:
+        end = _chunk_end(done, args.steps, args.log_every, args.ckpt_every)
+        batches = [next(data) for _ in range(end - done)]
+        stream = jax.tree.map(lambda *xs: jnp.stack(xs), *batches)
+        res = api.fit(
+            strategy,
+            None,
+            transport="delay_line",
+            staleness=args.staleness,
+            wire=wire,
+            stream=stream,
+            theta0=theta,
+            carry=carry,
+            tag="train",
+        )
+        theta, carry = res.theta, res.metrics["carry"]
+        wire_bytes += res.ledger.uplink_bytes
+        if done == 0:
+            history.append({"step": 1, "loss": float(res.trajectory[0])})
+        done = end
+        if done % args.log_every == 0 or done == args.steps:
+            l = float(res.trajectory[-1])
+            if history[-1]["step"] != done:
+                history.append({"step": done, "loss": l})
             print(
-                f"step {i+1:5d}  loss {l:.4f}  "
-                f"({(time.time()-t0)/(i+1):.2f}s/step)"
+                f"step {done:5d}  loss {l:.4f}  "
+                f"({(time.time()-t0)/done:.2f}s/step)"
             )
-        if args.ckpt_dir and args.ckpt_every and (i + 1) % args.ckpt_every == 0:
-            save(args.ckpt_dir, i + 1, state[0])
-    print(json.dumps({"final_loss": history[-1]["loss"], "history": history}))
+        if args.ckpt_dir and args.ckpt_every and done % args.ckpt_every == 0:
+            save(args.ckpt_dir, done, theta)
+    print(
+        json.dumps(
+            {
+                "final_loss": history[-1]["loss"],
+                "uplink_bytes": wire_bytes,
+                "history": history,
+            }
+        )
+    )
     return history
 
 

@@ -115,13 +115,16 @@ def fit_hypers(
 
 
 def fit_hypers_distributed(
-    Xs, ys, *, steps: int = 100, lr: float = 0.1, hyp0: GPHypers | None = None
+    Xs, ys, *, steps: int = 100, lr: float = 0.1, hyp0: GPHypers | None = None,
+    ledger=None,
 ) -> GPHypers:
     """PoE-factorized training: maximize Σ_k log p(y_k | X_k, θ).
 
     Each node computes the gradient of its local marginal-likelihood term;
     one Allreduce (here: the vmap+sum) aggregates — K separable objectives,
-    exactly the paper's factorized-likelihood training.
+    exactly the paper's factorized-likelihood training.  Pass a
+    ``CommLedger`` as ``ledger`` to account the per-step hyper-gradient
+    Allreduce (one push + pull of the 3-scalar hyper vector per node).
     """
     hyp = default_hypers() if hyp0 is None else hyp0
     N = Xs.shape[0] * Xs.shape[1]
@@ -130,7 +133,11 @@ def fit_hypers_distributed(
         lls = jax.vmap(lambda X, y: log_marginal_likelihood(h, X, y))(Xs, ys)
         return -jnp.sum(lls) / N
 
-    return _adagrad_ascent(neg_total, hyp, steps, lr)
+    hyp = _adagrad_ascent(neg_total, hyp, steps, lr)
+    if ledger is not None:
+        for _ in range(steps):
+            ledger.record_allreduce(hyp, Xs.shape[0], tag="gp-hyper-grad")
+    return hyp
 
 
 # ----------------------------------------------------------------------------
@@ -288,15 +295,25 @@ def distributed_sgpr(
     Xs: jnp.ndarray,  # (K, Nk, d) shards
     ys: jnp.ndarray,
     Xq: jnp.ndarray,
+    *,
+    ledger=None,
 ):
     """[23]'s construction end-to-end: local stats per node (vmap = the K
     workers), central aggregation, posterior from the aggregate.  Returns
-    (mu, var, per-node-stats-bytes)."""
+    (mu, var, per-node-stats-bytes), with the byte cost measured by the
+    ``repro.api`` Wire layer ((M²+M+2)·4 — independent of N, the paper's
+    point).  Pass a ``CommLedger`` as ``ledger`` to record the K stat
+    pushes."""
+    from repro.api.wire import DenseWire
+
     stats = jax.vmap(lambda X, y: sgpr_local_stats(hyp, Z, X, y))(Xs, ys)
     agg = sgpr_aggregate(stats)
     mu, var = sgpr_posterior(hyp, Z, agg, Xq)
-    M = Z.shape[0]
-    wire = (M * M + M + 2) * 4  # one SGPRStats push per node
+    per_node = jax.tree.map(lambda s: s[0], stats)  # one SGPRStats push
+    wire = DenseWire().measure(per_node)
+    if ledger is not None:
+        for k in range(Xs.shape[0]):
+            ledger.record_push(per_node, tag=f"sgpr-stats-node{k}")
     return mu, var, wire
 
 

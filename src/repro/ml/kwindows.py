@@ -30,11 +30,14 @@ clusters) is reproduced in ``benchmarks/bench_clustering.py``.
 
 from __future__ import annotations
 
+import warnings
 from functools import partial
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+
+from repro.api.strategy import Strategy
 
 
 class KWindows(NamedTuple):
@@ -236,12 +239,97 @@ def boxes_overlap(win: KWindows) -> jnp.ndarray:
     )
 
 
+def merge_overlapping_windows(win: KWindows, *, sweeps: int = 3) -> KWindows:
+    """[60]'s naive server-side rule: merge every geometrically overlapping
+    pair, regardless of shared capture counts.  Multiple sweeps collapse
+    chained overlaps."""
+    K = win.centers.shape[0]
+    carry = (win.centers, win.halfwidths, win.alive, win.counts)
+    for _ in range(sweeps):
+        ov = boxes_overlap(KWindows(*carry))
+
+        def body(carry, i, ov=ov):
+            centers, half, alive, counts = carry
+            row = ov[i] & (alive > 0) & (jnp.arange(K) > i)
+            j = jnp.argmax(row)
+            do = jnp.any(row) & (alive[i] > 0)
+            tot = counts[i] + counts[j]
+            c = (centers[i] * counts[i] + centers[j] * counts[j]) / jnp.maximum(tot, 1.0)
+            lo = jnp.minimum(centers[i] - half[i], centers[j] - half[j])
+            hi = jnp.maximum(centers[i] + half[i], centers[j] + half[j])
+            centers = jnp.where(do, centers.at[i].set(c), centers)
+            half = jnp.where(do, half.at[i].set(jnp.maximum((hi - lo) / 2.0, 1e-12)), half)
+            counts = jnp.where(do, counts.at[i].set(tot).at[j].set(0.0), counts)
+            alive = jnp.where(do, alive.at[j].set(0.0), alive)
+            return (centers, half, alive, counts), None
+
+        carry, _ = jax.lax.scan(body, carry, jnp.arange(K))
+    return KWindows(*carry)
+
+
+class KWindowsStrategy(Strategy):
+    """[60]'s distributed k-windows as a Strategy on the unified engine.
+
+    θ is the pooled window set (K·W slots, one block per node).  Each §5
+    contact runs the full three-phase local k-windows on the node's shard
+    and pushes its windows into its slot block; ``finalize`` is the naive
+    server merge of ALL overlapping windows.  One round-robin pass
+    (``schedules.round_robin(K, 1)``) reproduces the historical
+    ``distributed_kwindows`` exactly, and the engine's Wire metering gives
+    the algorithm the byte accounting it never had.
+    """
+
+    def __init__(self, key: jax.Array, *, num_windows: int, r: float, **kw):
+        self.key = key
+        self.num_windows = num_windows
+        self.r = r
+        self.kw = kw
+
+    def num_nodes(self, data):
+        return data.shape[0]
+
+    def init_theta(self, data):
+        Knodes, _, d = data.shape
+        pool = Knodes * self.num_windows
+        return KWindows(
+            centers=jnp.zeros((pool, d)),
+            halfwidths=jnp.zeros((pool, d)),
+            alive=jnp.zeros((pool,)),
+            counts=jnp.zeros((pool,)),
+        )
+
+    def init_state(self, theta, data):
+        return jax.random.split(self.key, data.shape[0])
+
+    def local_step(self, k, theta, state, data):
+        win = kwindows(
+            state[k], data[k], num_windows=self.num_windows, r=self.r, **self.kw
+        )
+        start = k * self.num_windows
+        pool = KWindows(
+            centers=jax.lax.dynamic_update_slice(theta.centers, win.centers, (start, 0)),
+            halfwidths=jax.lax.dynamic_update_slice(
+                theta.halfwidths, win.halfwidths, (start, 0)
+            ),
+            alive=jax.lax.dynamic_update_slice(theta.alive, win.alive, (start,)),
+            counts=jax.lax.dynamic_update_slice(theta.counts, win.counts, (start,)),
+        )
+        return pool, state
+
+    def round_metric(self, theta, state, data):
+        return jnp.sum(theta.alive)
+
+    def finalize(self, theta, state, data):
+        return merge_overlapping_windows(theta)
+
+
 def distributed_kwindows(
     key: jax.Array,
     Xs: jnp.ndarray,  # (Knodes, Nk, d)
     *,
     num_windows: int,
     r: float,
+    ledger=None,
     **kw,
 ) -> KWindows:
     """[60]'s naive distributed k-windows: local runs, then the server merges
@@ -249,41 +337,29 @@ def distributed_kwindows(
 
     The paper criticizes exactly this ("often leads to merging of
     neighboring clusters") — reproduced in the clustering benchmark.
+
+    Deprecation shim → ``api.fit(KWindowsStrategy(...),
+    transport="sequential_server")``.  Pass a ``CommLedger`` as ``ledger``
+    to collect the protocol's byte accounting (push + handoff of the
+    pooled window set per contact).
     """
-    Knodes = Xs.shape[0]
-    keys = jax.random.split(key, Knodes)
-    locals_ = [
-        kwindows(keys[k], Xs[k], num_windows=num_windows, r=r, **kw)
-        for k in range(Knodes)
-    ]
-    centers = jnp.concatenate([w.centers for w in locals_], axis=0)
-    half = jnp.concatenate([w.halfwidths for w in locals_], axis=0)
-    alive = jnp.concatenate([w.alive for w in locals_], axis=0)
-    counts = jnp.concatenate([w.counts for w in locals_], axis=0)
-    win = KWindows(centers, half, alive, counts)
+    warnings.warn(
+        "repro.ml.kwindows.distributed_kwindows is a deprecation shim; use "
+        'repro.api.fit(KWindowsStrategy(...), Xs, transport="sequential_server")',
+        DeprecationWarning,
+        stacklevel=2,
+    )
+    from repro.api import fit
+    from repro.core.schedules import round_robin
 
-    # server: merge every overlapping pair (no count test — the naive rule)
-    K = centers.shape[0]
-    ov = boxes_overlap(win)
-
-    def body(carry, i):
-        centers, half, alive, counts = carry
-        row = ov[i] & (alive > 0) & (jnp.arange(K) > i)
-        j = jnp.argmax(row)
-        do = jnp.any(row) & (alive[i] > 0)
-        tot = counts[i] + counts[j]
-        c = (centers[i] * counts[i] + centers[j] * counts[j]) / jnp.maximum(tot, 1.0)
-        lo = jnp.minimum(centers[i] - half[i], centers[j] - half[j])
-        hi = jnp.maximum(centers[i] + half[i], centers[j] + half[j])
-        centers = jnp.where(do, centers.at[i].set(c), centers)
-        half = jnp.where(do, half.at[i].set(jnp.maximum((hi - lo) / 2.0, 1e-12)), half)
-        counts = jnp.where(do, counts.at[i].set(tot).at[j].set(0.0), counts)
-        alive = jnp.where(do, alive.at[j].set(0.0), alive)
-        return (centers, half, alive, counts), None
-
-    carry = (centers, half, alive, counts)
-    # a few sweeps so chained overlaps collapse
-    for _ in range(3):
-        ov = boxes_overlap(KWindows(*carry))
-        (carry), _ = jax.lax.scan(body, carry, jnp.arange(K))
-    return KWindows(*carry)
+    strategy = KWindowsStrategy(key, num_windows=num_windows, r=r, **kw)
+    res = fit(
+        strategy,
+        Xs,
+        transport="sequential_server",
+        schedule=round_robin(Xs.shape[0], 1),
+        tag="kwindows",
+    )
+    if ledger is not None:
+        ledger.merge(res.ledger)
+    return res.theta

@@ -1,33 +1,42 @@
 """Distributed linear & logistic regression (paper §3.1).
 
-Implements every §3.1 technique the paper surveys, all under the strict
-client-server model with byte-accurate communication accounting:
+All §3.1 techniques, now expressed on the unified ``repro.api`` engine:
 
-* ``distributed_gd``          — full-batch GD with one Allreduce per step
-                                (the [47]/[5] pattern: push local gradient,
-                                receive global aggregate).
-* ``admm_lasso``              — consensus LASSO via Douglas-Rachford/ADMM,
-                                closed-form local prox (ridge subproblem).
-* ``distributed_lbfgs``       — [5]'s design: ONE Allreduce per iteration
-                                (the global gradient); the L-BFGS two-loop
-                                recursion and rank-1 history live locally and
-                                identically on every node.
-* ``private_second_order``    — [6]'s privacy scheme: nodes transmit only the
-                                empirical second-order statistics
-                                W^(k)=X^(k)ᵀX^(k), V^(k)=X^(k)ᵀY^(k);
-                                θ = (ΣW^(k))⁻¹ ΣV^(k) without any raw data
-                                leaving a node.
+* ``distributed_gd``          — deprecation shim →
+  ``api.fit(GradientDescent(...), transport="allreduce")``;
+* ``admm_lasso``              — deprecation shim →
+  ``api.fit(ProxStrategy(...), transport="admm_consensus", g="l1")``;
+* ``distributed_lbfgs``       — deprecation shim →
+  ``api.fit(LBFGS(...), transport="allreduce")`` ([5]: ONE Allreduce per
+  iteration; history + two-loop live in ``repro.api.strategy.LBFGS``);
+* ``private_second_order``    — [6]'s privacy scheme: nodes transmit only
+  W^(k)=X^(k)ᵀX^(k), V^(k)=X^(k)ᵀY^(k); byte cost metered by the Wire
+  layer.
+
+The shims keep the historical signatures and result types; new code
+should call ``repro.api.fit`` directly (see docs/API.md).
 """
 
 from __future__ import annotations
 
+import warnings
 from typing import Callable, NamedTuple
 
 import jax
 import jax.numpy as jnp
 
-from repro.core.admm import consensus_admm, ADMMResult
+from repro.api import fit
+from repro.api.strategy import GradientDescent, LBFGS, ProxStrategy
+from repro.core.admm import ADMMResult
 from repro.core.allreduce import CommLedger, server_allreduce
+
+
+def _deprecated(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.ml.linear.{old} is a deprecation shim; use {new}",
+        DeprecationWarning,
+        stacklevel=3,
+    )
 
 
 # ----------------------------------------------------------------------------
@@ -47,7 +56,7 @@ def logistic_loss(theta: jnp.ndarray, X: jnp.ndarray, y: jnp.ndarray) -> jnp.nda
 
 
 # ----------------------------------------------------------------------------
-# Allreduce gradient descent ([47], [5])
+# Allreduce gradient descent ([47], [5]) — shim over the unified engine
 # ----------------------------------------------------------------------------
 
 class GDResult(NamedTuple):
@@ -66,38 +75,40 @@ def distributed_gd(
     l2: float = 0.0,
     theta0: jnp.ndarray | None = None,
 ) -> GDResult:
-    """Synchronous distributed GD: one Allreduce of the gradient per step.
-
-    Per-node gradients are computed in parallel (vmap = the K workers), then
-    aggregated by the simulated central server — exactly the two-phase
-    Allreduce of the paper's §3.1.
-    """
-    K, Nk, n = Xs.shape
-    theta = jnp.zeros((n,)) if theta0 is None else theta0
-
-    total = K * Nk
-    weights = jnp.full((K,), Nk / total)  # equal shards here
-
-    grad_local = jax.vmap(jax.grad(loss), in_axes=(None, 0, 0))
-
-    def step(theta, _):
-        gs = grad_local(theta, Xs, ys)  # (K, n) — parallel at nodes
-        g = server_allreduce(gs * weights[:, None], op="sum") + l2 * theta
-        theta_new = theta - lr * g
-        cur = jnp.mean(jax.vmap(loss, in_axes=(None, 0, 0))(theta_new, Xs, ys))
-        return theta_new, cur
-
-    theta, losses = jax.lax.scan(step, theta, None, length=steps)
-
-    ledger = CommLedger()
-    for _ in range(steps):
-        ledger.record_allreduce(theta, K, tag="grad")
-    return GDResult(theta=theta, losses=losses, ledger=ledger)
+    """Synchronous distributed GD: one Allreduce of the gradient per step."""
+    _deprecated(
+        "distributed_gd",
+        'repro.api.fit(GradientDescent(loss), data, transport="allreduce")',
+    )
+    res = fit(
+        GradientDescent(loss, lr=lr, l2=l2),
+        (Xs, ys),
+        transport="allreduce",
+        steps=steps,
+        theta0=theta0,
+        tag="gd",
+    )
+    return GDResult(theta=res.theta, losses=res.trajectory, ledger=res.ledger)
 
 
 # ----------------------------------------------------------------------------
 # Consensus LASSO via ADMM (Douglas-Rachford splitting, §3.1)
 # ----------------------------------------------------------------------------
+
+def lasso_prox_builder(data):
+    """Closed-form ridge subproblem prox, factor data precomputed per node."""
+    Xs, ys = data
+    n = Xs.shape[-1]
+    XtX = jnp.einsum("kni,knj->kij", Xs, Xs)  # (K, n, n)
+    Xty = jnp.einsum("kni,kn->ki", Xs, ys)  # (K, n)
+
+    def local_prox(v, u, rho_):
+        A = XtX + rho_ * jnp.eye(n)[None]
+        b = Xty + rho_ * v
+        return jax.vmap(jnp.linalg.solve)(A, b)
+
+    return local_prox
+
 
 def admm_lasso(
     Xs: jnp.ndarray,
@@ -110,22 +121,24 @@ def admm_lasso(
     """Distributed LASSO: min Σ_k 0.5‖y_k − X_k θ‖² + λ‖θ‖₁.
 
     The local prox is the ridge-regularized least-squares closed form
-    ``(X_kᵀX_k + ρI)⁻¹ (X_kᵀy_k + ρ v)`` — cached factorizations, carried
-    "in parallel at each node"; the z-update soft-threshold is the global
-    regularizer's prox at the server.
+    ``(X_kᵀX_k + ρI)⁻¹ (X_kᵀy_k + ρ v)``; the z-update soft-threshold is
+    the global regularizer's prox at the server.
     """
-    K, Nk, n = Xs.shape
-    XtX = jnp.einsum("kni,knj->kij", Xs, Xs)  # (K, n, n)
-    Xty = jnp.einsum("kni,kn->ki", Xs, ys)  # (K, n)
-
-    def local_prox(v, u, rho_):
-        A = XtX + rho_ * jnp.eye(n)[None]
-        b = Xty + rho_ * v
-        return jax.vmap(jnp.linalg.solve)(A, b)
-
-    return consensus_admm(
-        local_prox, K, n, rho=rho, g="l1", g_lam=lam, iters=iters
+    _deprecated(
+        "admm_lasso",
+        'repro.api.fit(ProxStrategy(...), data, transport="admm_consensus", g="l1")',
     )
+    res = fit(
+        ProxStrategy(lasso_prox_builder),
+        (Xs, ys),
+        transport="admm_consensus",
+        steps=iters,
+        rho=rho,
+        g="l1",
+        g_lam=lam,
+        tag="lasso",
+    )
+    return res.metrics["admm"]
 
 
 def centralized_lasso_objective(theta, X, y, lam):
@@ -148,7 +161,7 @@ def ista_lasso(X, y, lam, iters=2000):
 
 
 # ----------------------------------------------------------------------------
-# Distributed L-BFGS ([5]: one Allreduce per iteration)
+# Distributed L-BFGS ([5]: one Allreduce per iteration) — shim
 # ----------------------------------------------------------------------------
 
 class LBFGSResult(NamedTuple):
@@ -167,91 +180,19 @@ def distributed_lbfgs(
     lr: float = 1.0,
     l2: float = 1e-4,
 ) -> LBFGSResult:
-    """L-BFGS where only the GRADIENT crosses the network.
-
-    Every node evaluates the gradient on its shard; one Allreduce forms the
-    global gradient.  The (s, y) rank-1 history and the two-loop recursion
-    are maintained locally — and deterministically identically — on every
-    node, so no further synchronization is needed (the [5] construction).
-    """
-    K, Nk, n = Xs.shape
-    m = history
-
-    grad_local = jax.vmap(jax.grad(loss), in_axes=(None, 0, 0))
-
-    def global_grad(theta):
-        gs = grad_local(theta, Xs, ys)  # parallel at nodes
-        return server_allreduce(gs, op="mean") + l2 * theta  # Allreduce
-
-    def two_loop(g, S, Y, rho, valid):
-        """Standard L-BFGS two-loop recursion with a validity mask."""
-
-        def bwd(carry, inp):
-            q, = carry
-            s, yv, r, v = inp
-            alpha = jnp.where(v > 0, r * jnp.dot(s, q), 0.0)
-            q = q - alpha * yv * jnp.where(v > 0, 1.0, 0.0)
-            return (q,), alpha
-
-        (q,), alphas = jax.lax.scan(
-            bwd, (g,), (S[::-1], Y[::-1], rho[::-1], valid[::-1])
-        )
-        # initial Hessian scaling γ = sᵀy / yᵀy of most recent valid pair
-        num = jnp.sum(S * Y, axis=1)
-        den = jnp.sum(Y * Y, axis=1)
-        gamma = jnp.where(
-            jnp.any(valid > 0),
-            jnp.sum(jnp.where(valid > 0, num, 0.0))
-            / jnp.maximum(jnp.sum(jnp.where(valid > 0, den, 0.0)), 1e-12),
-            1.0,
-        )
-        r_vec = gamma * q
-
-        def fwd(carry, inp):
-            (r_v,) = carry
-            s, yv, r, v, alpha = inp
-            beta = jnp.where(v > 0, r * jnp.dot(yv, r_v), 0.0)
-            r_v = r_v + (alpha - beta) * s * jnp.where(v > 0, 1.0, 0.0)
-            return (r_v,), None
-
-        (r_vec,), _ = jax.lax.scan(
-            fwd, (r_vec,), (S, Y, rho, valid, alphas[::-1])
-        )
-        return r_vec
-
-    def step(carry, _):
-        theta, g, S, Y, rho, valid, it = carry
-        d = -two_loop(g, S, Y, rho, valid)
-        theta_new = theta + lr * d
-        g_new = global_grad(theta_new)
-        s = theta_new - theta
-        yv = g_new - g
-        sy = jnp.dot(s, yv)
-        ok = sy > 1e-10  # curvature condition
-        S = jnp.where(ok, jnp.roll(S, -1, axis=0).at[-1].set(s), S)
-        Y = jnp.where(ok, jnp.roll(Y, -1, axis=0).at[-1].set(yv), Y)
-        rho = jnp.where(ok, jnp.roll(rho, -1).at[-1].set(1.0 / jnp.maximum(sy, 1e-12)), rho)
-        valid = jnp.where(ok, jnp.roll(valid, -1).at[-1].set(1.0), valid)
-        cur = jnp.mean(jax.vmap(loss, in_axes=(None, 0, 0))(theta_new, Xs, ys))
-        return (theta_new, g_new, S, Y, rho, valid, it + 1), cur
-
-    theta0 = jnp.zeros((n,))
-    g0 = global_grad(theta0)
-    carry0 = (
-        theta0,
-        g0,
-        jnp.zeros((m, n)),
-        jnp.zeros((m, n)),
-        jnp.zeros((m,)),
-        jnp.zeros((m,)),
-        jnp.asarray(0),
+    """L-BFGS where only the GRADIENT crosses the network ([5])."""
+    _deprecated(
+        "distributed_lbfgs",
+        'repro.api.fit(LBFGS(loss), data, transport="allreduce")',
     )
-    (theta, *_), losses = jax.lax.scan(step, carry0, None, length=steps)
-
-    ledger = CommLedger()
-    for _ in range(steps + 1):
-        ledger.record_allreduce(theta, K, tag="grad")
-    return LBFGSResult(theta=theta, losses=losses, ledger=ledger)
+    res = fit(
+        LBFGS(loss, history=history, lr=lr, l2=l2),
+        (Xs, ys),
+        transport="allreduce",
+        steps=steps,
+        tag="lbfgs",
+    )
+    return LBFGSResult(theta=res.theta, losses=res.trajectory, ledger=res.ledger)
 
 
 # ----------------------------------------------------------------------------

@@ -20,12 +20,16 @@
 
 from __future__ import annotations
 
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
-from repro.core.admm import consensus_admm, gradient_local_prox
+from repro.api import fit
+from repro.api.strategy import ProxStrategy, Strategy
+from repro.core.admm import gradient_local_prox
 from repro.core.allreduce import CommLedger
 
 
@@ -115,6 +119,83 @@ class CascadeResult(NamedTuple):
     sv_counts: list
 
 
+class CascadeStrategy(Strategy):
+    """[25]'s cascade as a Strategy on the unified engine.
+
+    θ is the global-SV boolean mask over the pooled dataset; each round's
+    message is the per-node SV mask (node k trains on its shard ∪ the
+    current global SVs), aggregation is the set UNION, and the apply step
+    is the server retrain on the union.  Masks (rather than point copies)
+    keep a point from being duplicated when it is both local to a node and
+    a global SV — duplication would split dual weight and inflate the SV
+    count.  The byte-accounting hooks charge only the actual SV points
+    pushed and broadcast — the algorithm's semantic compression, which a
+    generic wire codec cannot know about.
+    """
+
+    def __init__(self, *, C: float = 1.0, kernel=linear_kernel, iters: int = 500):
+        self.C = C
+        self.kernel = kernel
+        self.iters = iters
+
+    def _pooled(self, data):
+        Xs, ys = data
+        Knodes, Nk, n = Xs.shape
+        return Xs.reshape(Knodes * Nk, n), ys.reshape(Knodes * Nk)
+
+    def init_theta(self, data):
+        Xs, _ = data
+        return jnp.zeros((Xs.shape[0] * Xs.shape[1],), dtype=bool)
+
+    def init_state(self, theta, data):
+        X, _ = self._pooled(data)
+        return (jnp.zeros((X.shape[0],)), theta)  # (server α, pushed union)
+
+    def _train(self, data, mask):
+        X, y = self._pooled(data)
+        return dual_svm(
+            X, y, C=self.C, kernel=self.kernel, iters=self.iters, mask=mask
+        )
+
+    def local_updates(self, theta, state, data, batch):
+        Xs, _ = data
+        Knodes, Nk, _ = Xs.shape
+        node_of = jnp.repeat(jnp.arange(Knodes), Nk)
+        node_masks = jax.vmap(
+            lambda k: ((node_of == k) | theta).astype(jnp.float32)
+        )(jnp.arange(Knodes))
+        models = jax.vmap(lambda m: self._train(data, m))(node_masks)
+        return models.sv_mask, state
+
+    def aggregate(self, msgs):
+        return jnp.any(msgs, axis=0)  # union of the pushed SV identities
+
+    def apply_update(self, theta, pushed, state, data):
+        model = self._train(data, pushed.astype(jnp.float32))
+        return model.sv_mask, (model.alpha, pushed)
+
+    def round_metric(self, theta, state, data):
+        return theta  # trajectory = the global SV mask per round
+
+    def _point_bytes(self, data, count):
+        Xs, _ = data
+        n = Xs.shape[-1]
+        return count.astype(jnp.float32) * (n + 1) * 4.0  # f32 point + label
+
+    def uplink_bytes(self, msgs_hat, data):
+        # one union push per round: only the SV identities move
+        return self._point_bytes(data, jnp.sum(jnp.any(msgs_hat, axis=0)))
+
+    def downlink_bytes(self, theta, data):
+        # broadcast of the new global SV set
+        return self._point_bytes(data, jnp.sum(theta))
+
+    def finalize(self, theta, state, data):
+        X, y = self._pooled(data)
+        alpha, _ = state
+        return SVMModel(alpha=alpha, X=X, y=y, sv_mask=theta)
+
+
 def cascade_svm(
     Xs: jnp.ndarray,  # (K, Nk, n)
     ys: jnp.ndarray,  # (K, Nk)
@@ -124,69 +205,49 @@ def cascade_svm(
     max_rounds: int = 5,
     iters: int = 500,
 ) -> CascadeResult:
-    """Cascade SVM: only Support Vectors cross the network.
+    """Cascade SVM: only Support Vectors cross the network ([25]).
 
-    Round r: every node trains on (local data ∪ current global SV set),
-    pushes the identities of its SVs; the server retrains on the union of
-    received SVs and broadcasts the new global SV set.  "The procedure is
-    repeated recursively until the SVs from one round to the other do not
-    change" ([25] via the paper).
-
-    The SV sets are represented as boolean masks over the pooled dataset so
-    a point is never duplicated when it is both local to a node and a global
-    SV — duplication would split dual weight and inflate the SV count.  The
-    communication ledger still charges only the actual SV points pushed and
-    broadcast.
+    Deprecation shim → ``api.fit(CascadeStrategy(...), transport="allreduce")``.
+    "The procedure is repeated recursively until the SVs from one round to
+    the other do not change" — the engine runs a fixed ``max_rounds`` scan
+    (stable rounds are fixed points), and this shim truncates the reported
+    rounds / SV counts / ledger at stabilization, exactly as the historical
+    early-stopping loop did.
     """
-    Knodes, Nk, n = Xs.shape
-    N = Knodes * Nk
-    X = Xs.reshape(N, n)
-    y = ys.reshape(N)
-    node_of = jnp.repeat(jnp.arange(Knodes), Nk)
-    ledger = CommLedger()
-
-    train = jax.jit(
-        jax.vmap(
-            lambda m: dual_svm(X, y, C=C, kernel=kernel, iters=iters, mask=m)
-        )
+    warnings.warn(
+        "repro.ml.svm.cascade_svm is a deprecation shim; use "
+        'repro.api.fit(CascadeStrategy(...), data, transport="allreduce")',
+        DeprecationWarning,
+        stacklevel=2,
     )
-    server_train = jax.jit(
-        lambda m: dual_svm(X, y, C=C, kernel=kernel, iters=iters, mask=m)
+    n = Xs.shape[-1]
+    N = Xs.shape[0] * Xs.shape[1]
+    strategy = CascadeStrategy(C=C, kernel=kernel, iters=iters)
+    res = fit(
+        strategy, (Xs, ys), transport="allreduce", steps=max_rounds, tag="cascade"
     )
+    masks = np.asarray(res.trajectory)  # (max_rounds, N) bool
 
-    global_sv = jnp.zeros((N,), dtype=bool)
-    sv_counts: list[int] = []
-    rounds = 0
-    server_model = None
+    prev = np.zeros((N,), dtype=bool)
+    rounds = max_rounds
     for r in range(max_rounds):
-        rounds = r + 1
-        # node k trains on: its own shard ∪ the current global SV set
-        node_masks = jax.vmap(
-            lambda k: ((node_of == k) | global_sv).astype(jnp.float32)
-        )(jnp.arange(Knodes))
-        models = train(node_masks)
-
-        # push: each node's SVs — union at the server (still only SVs move)
-        pushed = jnp.any(models.sv_mask, axis=0)
-        n_pushed = int(jnp.sum(pushed))
-        ledger.record_push(
-            (jnp.zeros((n_pushed, n)), jnp.zeros((n_pushed,))), tag=f"svs-r{r}"
-        )
-
-        server_model = server_train(pushed.astype(jnp.float32))
-        new_global = server_model.sv_mask
-        count = int(jnp.sum(new_global))
-        sv_counts.append(count)
-        ledger.record_pull(
-            (jnp.zeros((count, n)), jnp.zeros((count,))), tag=f"global-svs-r{r}"
-        )
-
-        if bool(jnp.all(new_global == global_sv)):
+        if bool((masks[r] == prev).all()):
+            rounds = r + 1
             break
-        global_sv = new_global
+        prev = masks[r]
+
+    sv_counts = [int(masks[r].sum()) for r in range(rounds)]
+    ledger = CommLedger()
+    for r in range(rounds):
+        up = int(res.metrics["uplink_bytes_per_round"][r])
+        down = int(res.metrics["downlink_bytes_per_round"][r])
+        ledger.uplink_bytes += up
+        ledger.downlink_bytes += down
+        ledger.events.append(("push", f"svs-r{r}", up))
+        ledger.events.append(("pull", f"global-svs-r{r}", down))
 
     return CascadeResult(
-        model=server_model, rounds=rounds, ledger=ledger, sv_counts=sv_counts
+        model=res.theta, rounds=rounds, ledger=ledger, sv_counts=sv_counts
     )
 
 
@@ -203,6 +264,29 @@ def smooth_hinge(m: jnp.ndarray, eps: float = 0.1) -> jnp.ndarray:
     )
 
 
+def _consensus_svm_prox_builder(inner_iters: int, inner_lr: float):
+    """Smoothed-hinge local prox by inner gradient descent — the paper's
+    "several proximity functions carried in parallel at each node"."""
+
+    def build(data):
+        Xs, ys = data
+        Nk = Xs.shape[1]
+
+        def node_grad(theta_rows):
+            def one(theta, X, y):
+                return jax.grad(
+                    lambda t: jnp.sum(smooth_hinge(y * (X @ t)))
+                )(theta)
+
+            return jax.vmap(one)(theta_rows, Xs, ys)
+
+        return gradient_local_prox(
+            node_grad, inner_iters=inner_iters, lr=inner_lr / Nk
+        )
+
+    return build
+
+
 def consensus_svm(
     Xs: jnp.ndarray,
     ys: jnp.ndarray,
@@ -213,21 +297,28 @@ def consensus_svm(
     inner_iters: int = 50,
     inner_lr: float = 0.5,
 ):
-    """Primal consensus SVM: min Σ_k Σ_i hinge(y_i θᵀx_i) + (λ/2)‖z‖²."""
-    Knodes, Nk, n = Xs.shape
+    """Primal consensus SVM: min Σ_k Σ_i hinge(y_i θᵀx_i) + (λ/2)‖z‖².
 
-    def node_grad(theta_rows):
-        def one(theta, X, y):
-            return jax.grad(
-                lambda t: jnp.sum(smooth_hinge(y * (X @ t)))
-            )(theta)
-
-        return jax.vmap(one)(theta_rows, Xs, ys)
-
-    local_prox = gradient_local_prox(node_grad, inner_iters=inner_iters, lr=inner_lr / Nk)
-    return consensus_admm(
-        local_prox, Knodes, n, rho=rho, g="l2sq", g_lam=lam, iters=iters
+    Deprecation shim → ``api.fit(ProxStrategy(...),
+    transport="admm_consensus", g="l2sq")``.
+    """
+    warnings.warn(
+        "repro.ml.svm.consensus_svm is a deprecation shim; use "
+        'repro.api.fit(ProxStrategy(...), data, transport="admm_consensus")',
+        DeprecationWarning,
+        stacklevel=2,
     )
+    res = fit(
+        ProxStrategy(_consensus_svm_prox_builder(inner_iters, inner_lr)),
+        (Xs, ys),
+        transport="admm_consensus",
+        steps=iters,
+        rho=rho,
+        g="l2sq",
+        g_lam=lam,
+        tag="consensus-svm",
+    )
+    return res.metrics["admm"]
 
 
 # ----------------------------------------------------------------------------

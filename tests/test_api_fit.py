@@ -1,0 +1,408 @@
+"""Equivalence + behavior tests for the unified ``repro.api.fit`` engine.
+
+The redesign's contract: the five transports reproduce the historical
+per-algorithm loops — the sequential-server path matches
+``core.server.run_protocol`` BIT-exactly, the allreduce path matches the
+historical ``distributed_gd`` arithmetic (golden reference inlined here),
+and compression composes with any transport while the ledger reports the
+savings.
+"""
+
+import warnings
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import schedules, server
+from repro.core.allreduce import server_allreduce
+from repro.core.staleness import delay_init, delay_push_pop
+from repro.ml.linear import lsq_loss
+
+
+def _make_problem(K=4, Nk=10, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    lr = 0.05
+
+    def F(k, theta):
+        Xk, yk = X[k], y[k]
+        g = Xk.T @ (Xk @ theta - yk) / Nk
+        return theta - lr * g
+
+    return F, X, y, w, n
+
+
+class TestServerEquivalence:
+    """fit(transport="sequential_server") ≡ run_protocol, bit-exactly."""
+
+    def test_sequential_bit_exact(self):
+        F, X, y, w, n = _make_problem()
+        sched = schedules.round_robin(4, 5)
+        final, traj = server.run_protocol(jnp.zeros(n), F, sched)
+        res = api.fit(
+            api.FunctionStrategy(F, num_nodes=4),
+            transport="sequential_server",
+            schedule=sched,
+            theta0=jnp.zeros(n),
+        )
+        np.testing.assert_array_equal(np.asarray(res.theta), np.asarray(final.theta))
+        np.testing.assert_array_equal(np.asarray(res.trajectory), np.asarray(traj))
+
+    def test_stale_bit_exact(self):
+        F, X, y, w, n = _make_problem()
+        sched = schedules.asynchronous(jax.random.key(3), 4, 40)
+        final, traj = server.run_protocol(jnp.zeros(n), F, sched, handoff="stale")
+        res = api.fit(
+            api.FunctionStrategy(F, num_nodes=4),
+            transport="stale_server",
+            schedule=sched,
+            theta0=jnp.zeros(n),
+        )
+        np.testing.assert_array_equal(np.asarray(res.theta), np.asarray(final.theta))
+        np.testing.assert_array_equal(np.asarray(res.trajectory), np.asarray(traj))
+
+    def test_server_ledger_charges_every_contact(self):
+        F, X, y, w, n = _make_problem()
+        sched = schedules.round_robin(4, 5)
+        res = api.fit(
+            api.FunctionStrategy(F, num_nodes=4),
+            transport="sequential_server",
+            schedule=sched,
+            theta0=jnp.zeros(n),
+        )
+        per_contact = 2 * n * 4  # push + handoff of the f32 θ
+        assert res.ledger.total_bytes == len(sched) * per_contact
+        assert res.ledger.rounds == len(sched)
+
+
+class TestAllreduceEquivalence:
+    """fit(transport="allreduce") ≡ the historical distributed_gd loop."""
+
+    @staticmethod
+    def _golden_gd(Xs, ys, *, loss, lr, steps, l2=0.0):
+        """The pre-redesign ml.linear.distributed_gd arithmetic, verbatim."""
+        K, Nk, n = Xs.shape
+        theta = jnp.zeros((n,))
+        weights = jnp.full((K,), Nk / (K * Nk))
+        grad_local = jax.vmap(jax.grad(loss), in_axes=(None, 0, 0))
+
+        def step(theta, _):
+            gs = grad_local(theta, Xs, ys)
+            g = server_allreduce(gs * weights[:, None], op="sum") + l2 * theta
+            theta_new = theta - lr * g
+            cur = jnp.mean(
+                jax.vmap(loss, in_axes=(None, 0, 0))(theta_new, Xs, ys)
+            )
+            return theta_new, cur
+
+        return jax.lax.scan(step, theta, None, length=steps)
+
+    def test_matches_golden_trajectory(self):
+        _, X, y, w, n = _make_problem()
+        theta_ref, losses_ref = self._golden_gd(X, y, loss=lsq_loss, lr=0.1, steps=60)
+        res = api.fit(
+            api.GradientDescent(lsq_loss, lr=0.1),
+            (X, y),
+            transport="allreduce",
+            steps=60,
+        )
+        np.testing.assert_array_equal(np.asarray(res.theta), np.asarray(theta_ref))
+        np.testing.assert_array_equal(
+            np.asarray(res.trajectory), np.asarray(losses_ref)
+        )
+
+    def test_allreduce_ledger_cost_model(self):
+        _, X, y, w, n = _make_problem()
+        res = api.fit(
+            api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+            transport="allreduce", steps=10,
+        )
+        assert res.ledger.total_bytes == 10 * 2 * 4 * n * 4  # K pushes + K pulls
+        assert res.ledger.rounds == 10
+
+    def test_converges_to_truth(self):
+        _, X, y, w, n = _make_problem()
+        res = api.fit(
+            api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+            transport="allreduce", steps=400,
+        )
+        assert float(jnp.linalg.norm(res.theta - w)) < 0.05
+
+
+class TestDelayLine:
+    def test_staleness_zero_equals_allreduce(self):
+        _, X, y, w, n = _make_problem()
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=30)
+        d = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="delay_line", staleness=0, steps=30)
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(d.theta))
+
+    def test_matches_manual_delay_line(self):
+        """fit(delay_line, D) ≡ hand-rolled core.staleness loop."""
+        _, X, y, w, n = _make_problem()
+        D, lr, steps = 2, 0.1, 40
+        strategy = api.GradientDescent(lsq_loss, lr=lr)
+        res = api.fit(strategy, (X, y), transport="delay_line",
+                      staleness=D, steps=steps)
+
+        K, Nk = X.shape[0], X.shape[1]
+        weights = jnp.full((K,), 1.0 / K)
+        grad_local = jax.vmap(jax.grad(lsq_loss), in_axes=(None, 0, 0))
+        theta = jnp.zeros(n)
+        delay = delay_init(jnp.zeros(n), D)
+        for _ in range(steps):
+            g = server_allreduce(
+                grad_local(theta, X, y) * weights[:, None], op="sum"
+            )
+            delay, g_stale = delay_push_pop(delay, g)
+            theta = theta - lr * g_stale
+        np.testing.assert_allclose(
+            np.asarray(res.theta), np.asarray(theta), rtol=1e-6, atol=1e-7
+        )
+
+    def test_delayed_still_converges(self):
+        _, X, y, w, n = _make_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                      transport="delay_line", staleness=3, steps=500)
+        assert float(jnp.linalg.norm(res.theta - w)) < 0.1
+
+
+class TestAdmmConsensus:
+    def test_matches_direct_consensus_admm(self):
+        from repro.core.admm import consensus_admm
+        from repro.ml.linear import lasso_prox_builder
+
+        _, X, y, w, n = _make_problem()
+        res = api.fit(
+            api.ProxStrategy(lasso_prox_builder), (X, y),
+            transport="admm_consensus", steps=50, rho=1.0, g="l1", g_lam=0.1,
+        )
+        ref = consensus_admm(
+            lasso_prox_builder((X, y)), 4, n, rho=1.0, g="l1", g_lam=0.1, iters=50
+        )
+        np.testing.assert_array_equal(np.asarray(res.theta), np.asarray(ref.z))
+        np.testing.assert_array_equal(
+            np.asarray(res.trajectory), np.asarray(ref.history)
+        )
+        assert res.metrics["admm"].z is not None
+
+    def test_two_allreduces_per_iteration(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        _, X, y, w, n = _make_problem()
+        res = api.fit(
+            api.ProxStrategy(lasso_prox_builder), (X, y),
+            transport="admm_consensus", steps=25, g="l1", g_lam=0.1,
+        )
+        assert res.ledger.rounds == 2 * 25
+        assert res.ledger.total_bytes == 25 * 2 * 2 * 4 * n * 4
+
+    def test_compressed_wire_rejected(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        _, X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="dense"):
+            api.fit(
+                api.ProxStrategy(lasso_prox_builder), (X, y),
+                transport="admm_consensus", steps=5, wire="topk:0.5",
+            )
+
+    def test_warm_start_rejected_not_ignored(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        _, X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="one-shot"):
+            api.fit(
+                api.ProxStrategy(lasso_prox_builder), (X, y),
+                transport="admm_consensus", steps=5, theta0=jnp.zeros(n),
+            )
+
+
+class TestCompressionThroughTransport:
+    """Satellite: top-k + error feedback composed with the stale_server
+    transport converges AND reports fewer ledger bytes than dense push."""
+
+    def test_topk_ef_stale_server(self):
+        F, X, y, w, n = _make_problem()
+        sched = schedules.round_robin(4, 100)
+        strategy = api.FunctionStrategy(F, num_nodes=4)
+        dense = api.fit(strategy, transport="stale_server",
+                        schedule=sched, theta0=jnp.zeros(n))
+        comp = api.fit(strategy, transport="stale_server", wire="topk:0.25+ef",
+                       schedule=sched, theta0=jnp.zeros(n))
+        # converges: close to the truth and to the dense solution
+        assert float(jnp.linalg.norm(comp.theta - w)) < 0.1
+        assert float(jnp.linalg.norm(comp.theta - dense.theta)) < 0.1
+        # cheaper: uplink strictly below the dense push cost
+        assert comp.ledger.uplink_bytes < dense.ledger.uplink_bytes
+        assert dense.ledger.uplink_bytes == len(sched) * n * 4
+
+    def test_error_feedback_beats_plain_topk(self):
+        F, X, y, w, n = _make_problem()
+        sched = schedules.round_robin(4, 150)
+        strategy = api.FunctionStrategy(F, num_nodes=4)
+        plain = api.fit(strategy, transport="stale_server", wire="topk:0.25",
+                        schedule=sched, theta0=jnp.zeros(n))
+        ef = api.fit(strategy, transport="stale_server", wire="topk:0.25+ef",
+                     schedule=sched, theta0=jnp.zeros(n))
+        err_plain = float(jnp.linalg.norm(plain.theta - w))
+        err_ef = float(jnp.linalg.norm(ef.theta - w))
+        assert err_ef <= err_plain + 1e-6
+
+    def test_compressed_allreduce_runs(self):
+        _, X, y, w, n = _make_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="int8", steps=50)
+        assert float(res.trajectory[-1]) < float(res.trajectory[0])
+        dense_up = 50 * 4 * n * 4
+        assert res.ledger.uplink_bytes != dense_up  # int8 metering applied
+
+
+class TestStreamAndResume:
+    def test_chunked_carry_matches_single_run(self):
+        """fit → carry → fit reproduces one uninterrupted run (the
+        launch/train.py driving pattern)."""
+        from repro.api.strategy import OptimizerStrategy
+        from repro.optim import adam
+
+        rng = np.random.default_rng(1)
+        Xb = jnp.asarray(rng.normal(size=(8, 4, 3)))  # 8 steps of batches
+        yb = jnp.asarray(rng.normal(size=(8, 4)))
+        theta0 = jnp.zeros((3,))
+
+        def loss_fn(theta, batch):
+            Xt, yt = batch
+            return 0.5 * jnp.mean((Xt @ theta - yt) ** 2)
+
+        def run(chunks):
+            strategy = OptimizerStrategy(loss_fn, adam(0.1))
+            theta, carry = theta0, None
+            losses = []
+            for lo, hi in chunks:
+                stream = (Xb[lo:hi], yb[lo:hi])
+                res = api.fit(strategy, None, transport="delay_line",
+                              staleness=1, wire="topk:0.5+ef",
+                              stream=stream, theta0=theta, carry=carry)
+                theta, carry = res.theta, res.metrics["carry"]
+                losses.extend(np.asarray(res.trajectory).tolist())
+            return theta, losses
+
+        t_full, l_full = run([(0, 8)])
+        t_chunk, l_chunk = run([(0, 3), (3, 8)])
+        np.testing.assert_allclose(np.asarray(t_full), np.asarray(t_chunk),
+                                   rtol=1e-6, atol=1e-7)
+        np.testing.assert_allclose(l_full, l_chunk, rtol=1e-6, atol=1e-7)
+
+
+class TestServerResume:
+    def test_carry_resumes_without_theta0(self):
+        """A server-transport run can continue from carry alone — the
+        resume token holds the full server state."""
+        F, X, y, w, n = _make_problem()
+        strategy = api.FunctionStrategy(F, num_nodes=4)
+        full = api.fit(strategy, transport="sequential_server",
+                       schedule=schedules.round_robin(4, 6),
+                       theta0=jnp.zeros(n))
+        first = api.fit(strategy, transport="sequential_server",
+                        schedule=schedules.round_robin(4, 2),
+                        theta0=jnp.zeros(n))
+        second = api.fit(strategy, transport="sequential_server",
+                         schedule=schedules.round_robin(4, 4),
+                         carry=first.metrics["carry"])
+        np.testing.assert_array_equal(
+            np.asarray(full.theta), np.asarray(second.theta)
+        )
+
+
+class TestLedgerExactness:
+    def test_byte_counts_are_int64_exact(self):
+        """Per-round byte counts must not pass through f32 (a dense push of
+        a >4M-param model would lose low bits)."""
+        F, X, y, w, n = _make_problem()
+        res = api.fit(api.FunctionStrategy(F, num_nodes=4),
+                      transport="sequential_server",
+                      schedule=schedules.round_robin(4, 3),
+                      theta0=jnp.zeros(n))
+        ups = res.metrics["uplink_bytes_per_round"]
+        assert ups.dtype == np.int64
+        big = 2**24 + 4  # not representable in f32
+        assert int(np.asarray(big, dtype=ups.dtype)) == big
+
+
+class TestShims:
+    """Old public entry points stay importable and delegate to repro.api."""
+
+    def test_distributed_gd_shim_warns_and_matches(self):
+        _, X, y, w, n = _make_problem()
+        from repro.ml import linear
+
+        with pytest.warns(DeprecationWarning):
+            old = linear.distributed_gd(X, y, steps=30, lr=0.1)
+        new = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=30)
+        np.testing.assert_array_equal(np.asarray(old.theta), np.asarray(new.theta))
+        assert old.ledger.summary() == new.ledger.summary()
+
+    def test_all_shims_importable(self):
+        from repro.ml.kwindows import distributed_kwindows  # noqa: F401
+        from repro.ml.linear import (  # noqa: F401
+            admm_lasso,
+            distributed_gd,
+            distributed_lbfgs,
+        )
+        from repro.ml.svm import cascade_svm, consensus_svm  # noqa: F401
+
+    def test_kwindows_shim_fills_ledger(self):
+        from repro.core.allreduce import CommLedger
+        from repro.ml import kwindows
+
+        rng = np.random.default_rng(2)
+        Xs = jnp.asarray(rng.normal(size=(3, 40, 2)))
+        led = CommLedger()
+        with warnings.catch_warnings():
+            warnings.simplefilter("ignore", DeprecationWarning)
+            win = kwindows.distributed_kwindows(
+                jax.random.key(0), Xs, num_windows=4, r=1.0, ledger=led
+            )
+        assert isinstance(win, kwindows.KWindows)
+        assert led.total_bytes > 0 and led.rounds == 3
+
+
+class TestEngineErrors:
+    def test_unknown_transport(self):
+        with pytest.raises(ValueError, match="unknown transport"):
+            api.make_transport("gossip")
+
+    def test_unknown_wire(self):
+        with pytest.raises(ValueError, match="unknown wire"):
+            api.make_wire("zstd")
+
+    def test_server_needs_schedule(self):
+        F, X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="schedule"):
+            api.fit(api.FunctionStrategy(F, num_nodes=4),
+                    transport="sequential_server", theta0=jnp.zeros(n))
+
+    def test_update_needs_steps(self):
+        _, X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="steps"):
+            api.fit(api.GradientDescent(lsq_loss), (X, y), transport="allreduce")
+
+    def test_unsupported_family_raises(self):
+        F, X, y, w, n = _make_problem()
+        strategy = api.FunctionStrategy(F, num_nodes=4)
+        with pytest.raises(NotImplementedError, match="update transports"):
+            api.fit(strategy, (X, y), transport="allreduce", steps=3,
+                    theta0=jnp.zeros(n))
+
+    def test_all_transports_listed(self):
+        assert set(api.TRANSPORTS) == {
+            "sequential_server", "stale_server", "delay_line",
+            "allreduce", "admm_consensus",
+        }

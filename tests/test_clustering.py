@@ -21,9 +21,20 @@ def _init(X, K, seed=0):
     return clustering.kmeans_pp_init(jax.random.key(seed), X, K)
 
 
+def _best_of_restarts(X, K, metric="l2", iters=30, seeds=range(4)):
+    """k-means++ is randomized; recovery claims use the standard
+    best-of-restarts protocol (lowest inertia over a few seeds)."""
+    results = [
+        clustering.kmeans(X, _init(X, K, seed=s), num_clusters=K,
+                          metric=metric, iters=iters)
+        for s in seeds
+    ]
+    return min(results, key=lambda r: float(r.inertia))
+
+
 def test_kmeans_recovers_centers(blobs):
     X, centers = blobs
-    res = clustering.kmeans(X, _init(X, 3), num_clusters=3, iters=30)
+    res = _best_of_restarts(X, 3)
     found = np.sort(np.asarray(res.centroids), axis=0)
     np.testing.assert_allclose(found, np.sort(np.asarray(centers), 0), atol=0.5)
 
@@ -42,7 +53,7 @@ def test_distributed_kmeans_identical_to_centralized(blobs):
 @pytest.mark.parametrize("metric", ["l1", "l2", "linf"])
 def test_metrics_all_separate_blobs(blobs, metric):
     X, centers = blobs
-    res = clustering.kmeans(X, _init(X, 3), num_clusters=3, metric=metric, iters=30)
+    res = _best_of_restarts(X, 3, metric=metric)
     found = np.sort(np.asarray(res.centroids), axis=0)
     np.testing.assert_allclose(found, np.sort(np.asarray(centers), 0), atol=0.7)
 
