@@ -1,0 +1,127 @@
+"""Executor comparison on a fixed GD workload: local (stacked scan) vs
+mesh (shard_map node placement) vs sweep (vmapped S-scenario batch).
+
+Measures compiled wall-clock per fit and the ledger byte totals (which
+must agree across local/mesh — placement changes WHERE the program runs,
+not what crosses the wire), and amortized per-scenario cost for the
+sweep against S sequential fits.  Writes ``BENCH_executors.json`` next to
+the repo root for the perf trajectory; also pluggable into
+``benchmarks.run`` (rows of ``name,us_per_call,derived``).
+
+Run:
+  PYTHONPATH=src python -m benchmarks.bench_fit_executors
+  # more parallelism on CPU:
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_fit_executors
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.ml.linear import lsq_loss
+
+K, NK, N = 8, 64, 256
+STEPS = 200
+LRS = (0.02, 0.05, 0.1, 0.2)
+
+
+def _problem():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(K, NK, N)))
+    w = jnp.asarray(rng.normal(size=(N,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    return X, y
+
+
+def _timed(fn, repeats=3):
+    fn()  # compile + warm caches
+    best = float("inf")
+    out = None
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = fn()
+        jax.block_until_ready(out.theta)
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def run(rows):
+    X, y = _problem()
+    data = (X, y)
+    results = {
+        "workload": {"K": K, "Nk": NK, "n": N, "steps": STEPS},
+        "num_devices": jax.device_count(),
+        "executors": {},
+    }
+
+    for name, kwargs in [
+        ("local", {"executor": "local"}),
+        ("mesh", {"executor": "mesh"}),
+        ("local_topk", {"executor": "local", "wire": "topk:0.1+ef"}),
+        ("mesh_topk", {"executor": "mesh", "wire": "topk:0.1+ef"}),
+    ]:
+        dt, res = _timed(
+            lambda kw=kwargs: api.fit(
+                api.GradientDescent(lsq_loss, lr=0.05), data,
+                transport="allreduce", steps=STEPS, **kw,
+            )
+        )
+        results["executors"][name] = {
+            "wall_s": dt,
+            "total_bytes": res.ledger.total_bytes,
+            "final_loss": float(res.trajectory[-1]),
+        }
+        rows.append((f"fit_executors/{name}", dt * 1e6 / STEPS,
+                     f"{float(res.trajectory[-1]):.4f}"))
+
+    # sweep: S scenarios in one executable vs S sequential fits
+    sweep = api.SweepExecutor({"lr": jnp.asarray(LRS)})
+    dt_sweep, res_sweep = _timed(
+        lambda: api.fit(api.GradientDescent(lsq_loss, lr=0.05), data,
+                        transport="allreduce", steps=STEPS, executor=sweep)
+    )
+
+    def _sequential():
+        out = None
+        for lr in LRS:
+            out = api.fit(api.GradientDescent(lsq_loss, lr=lr), data,
+                          transport="allreduce", steps=STEPS)
+        return out
+
+    dt_seq, _ = _timed(_sequential)
+    results["executors"]["sweep"] = {
+        "wall_s": dt_sweep,
+        "scenarios": len(LRS),
+        "wall_s_sequential_equivalent": dt_seq,
+        "speedup_vs_sequential": dt_seq / dt_sweep,
+        "total_bytes_per_scenario": res_sweep.ledger[0].total_bytes,
+    }
+    rows.append((f"fit_executors/sweep_S{len(LRS)}", dt_sweep * 1e6 / STEPS,
+                 f"{dt_seq / dt_sweep:.2f}x_vs_seq"))
+
+    out_path = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        "BENCH_executors.json",
+    )
+    with open(out_path, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out_path}")
+    return results
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = run(rows)
+    print("name,us_per_call,derived")
+    for r in rows:
+        print(",".join(str(c) for c in r))
+    for name, stats in res["executors"].items():
+        print(f"  {name}: {stats}")

@@ -20,6 +20,7 @@ def main() -> None:
         bench_cascade_svm,
         bench_clustering,
         bench_compression,
+        bench_fit_executors,
         bench_gp_experts,
         bench_kernels,
         bench_staleness,
@@ -30,6 +31,7 @@ def main() -> None:
         "staleness": bench_staleness,
         "admm": bench_admm,
         "compression": bench_compression,
+        "fit_executors": bench_fit_executors,
         "cascade_svm": bench_cascade_svm,
         "gp_experts": bench_gp_experts,
         "clustering": bench_clustering,

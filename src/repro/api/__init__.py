@@ -9,7 +9,10 @@ package factors that observation into three orthogonal protocols:
   ``sequential_server`` · ``stale_server`` · ``delay_line`` ·
   ``allreduce`` · ``admm_consensus``;
 * ``Wire``      — what crosses the network and what it costs
-  (``repro.api.wire``): dense · top-k · int8, each ± error feedback.
+  (``repro.api.wire``): dense · top-k · int8, each ± error feedback;
+* ``Executor``  — WHERE the fit runs (``repro.api.executor``):
+  ``local`` stacked scan · ``mesh`` shard_map node placement ·
+  ``sweep`` vmapped scenario batch.
 
 The single entry point::
 
@@ -18,12 +21,20 @@ The single entry point::
                      wire="topk:0.1+ef", schedule=sched)
     result.theta, result.trajectory, result.ledger, result.metrics
 
-runs any (strategy × transport × wire) combination in one jit/scan-able
-engine.  See ``docs/API.md`` for the protocol table and the migration
-guide from the historical per-algorithm entry points.
+runs any (strategy × transport × wire × executor) combination in one
+jit/scan-able engine.  See ``docs/API.md`` for the protocol table and the
+migration guide from the historical per-algorithm entry points.
 """
 
 from repro.api.engine import FitResult, fit
+from repro.api.executor import (
+    EXECUTORS,
+    Executor,
+    LocalExecutor,
+    MeshExecutor,
+    SweepExecutor,
+    make_executor,
+)
 from repro.api.strategy import (
     FunctionStrategy,
     GradientDescent,
@@ -61,4 +72,10 @@ __all__ = [
     "DenseWire",
     "CompressedWire",
     "make_wire",
+    "Executor",
+    "LocalExecutor",
+    "MeshExecutor",
+    "SweepExecutor",
+    "EXECUTORS",
+    "make_executor",
 ]

@@ -1,11 +1,13 @@
 """``repro.api.fit`` — one entry point for every distributed trainer.
 
-    fit(strategy, data, transport=..., wire=..., schedule=...)
+    fit(strategy, data, transport=..., wire=..., executor=..., schedule=...)
 
-runs any (strategy × transport × wire) combination inside one
-jit/scan-able engine and returns a uniform ``FitResult``.  The engine
-owns what every historical entry point used to reimplement by hand:
-the scan loop (via the transport), message encoding (via the wire), and
+runs any (strategy × transport × wire) combination on a chosen executor
+(`local` stacked scan / `mesh` shard_map placement / `sweep` vmapped
+scenario batch — see ``repro.api.executor``) inside one jit/scan-able
+engine and returns a uniform ``FitResult``.  The engine owns what every
+historical entry point used to reimplement by hand: the scan loop (via
+the transport + executor), message encoding (via the wire), and
 ``CommLedger`` byte accounting (materialized here from the per-round
 byte counts the transport/wire emitted).
 
@@ -17,20 +19,27 @@ byte counts the transport/wire emitted).
   transports, the strategy's ``round_metric`` for update transports, the
   residual history for admm_consensus;
 * ``ledger``      — byte-accurate ``CommLedger`` under the paper's strict
-  client-server cost model;
+  client-server cost model (a LIST of per-scenario ledgers under the
+  sweep executor);
 * ``metrics``     — the strategy's summary dict, plus engine extras:
   ``uplink_bytes_per_round`` / ``downlink_bytes_per_round`` (numpy),
   transport extras (e.g. the full ``ADMMResult``), and ``carry`` — an
   opaque resume token accepted by a later ``fit(..., carry=...)``.
+
+Under the sweep executor every result field gains a leading S (scenario)
+axis: ``theta`` is (S, …), ``trajectory`` is (S, T), the per-round byte
+arrays are (S, T), and ``ledger`` is a list of S ``CommLedger``s.
 """
 
 from __future__ import annotations
 
 from typing import Any, NamedTuple
 
+import jax
 import numpy as np
 
 from repro.core.allreduce import CommLedger
+from repro.api.executor import Executor, make_executor
 from repro.api.strategy import Strategy
 from repro.api.transport import Transport, make_transport
 from repro.api.wire import Wire, make_wire
@@ -41,8 +50,16 @@ PyTree = Any
 class FitResult(NamedTuple):
     theta: PyTree
     trajectory: PyTree
-    ledger: CommLedger
+    ledger: CommLedger | list
     metrics: dict
+
+
+def _total(a: np.ndarray) -> int:
+    """Exact byte total: int64 accumulation for integer counts, f64 for
+    the (small) value-dependent traced counts."""
+    if np.issubdtype(a.dtype, np.integer):
+        return int(a.sum(dtype=np.int64))
+    return int(round(float(a.sum(dtype=np.float64))))
 
 
 def fit(
@@ -51,6 +68,7 @@ def fit(
     *,
     transport: str | Transport = "sequential_server",
     wire: str | Wire = "dense",
+    executor: str | Executor = "local",
     schedule=None,
     steps: int | None = None,
     stream: PyTree = None,
@@ -59,7 +77,8 @@ def fit(
     tag: str = "fit",
     **transport_options,
 ) -> FitResult:
-    """Train ``strategy`` on ``data`` under a transport and a wire.
+    """Train ``strategy`` on ``data`` under a transport, a wire and an
+    executor.
 
     Args:
       strategy: the per-node learner F^(k) (see ``repro.api.strategy``).
@@ -69,6 +88,9 @@ def fit(
         ``delay_line`` / ``allreduce`` / ``admm_consensus``, or a
         ``Transport`` instance.
       wire: ``"dense"``, ``"topk:<f>[+ef]"``, ``"int8[+ef]"`` or a ``Wire``.
+      executor: ``"local"`` (stacked scan), ``"mesh"`` (shard_map node
+        placement; or a configured ``MeshExecutor(mesh)``), or an
+        ``api.SweepExecutor({...})`` scenario batch.
       schedule: int32 contact schedule (server transports; see
         ``repro.core.schedules``).
       steps: number of rounds (update/consensus transports).
@@ -81,33 +103,52 @@ def fit(
     """
     w = make_wire(wire)
     tr = make_transport(transport, **transport_options)
+    ex = make_executor(executor)
     raw = tr.run(
         strategy, data,
         wire=w, schedule=schedule, steps=steps, stream=stream,
-        theta0=theta0, carry=carry,
+        theta0=theta0, carry=carry, executor=ex,
     )
 
-    ledger = CommLedger()
-    if strategy.init_rounds and carry is None:
-        K = strategy.num_nodes(data)
-        theta_like = raw.theta if theta0 is None else theta0
-        for _ in range(strategy.init_rounds):
-            ledger.record_allreduce(theta_like, K, tag=f"{tag}/init")
     ups = np.asarray(raw.uplink)
     downs = np.asarray(raw.downlink)
-    for t in range(ups.shape[0]):
-        up, down = int(ups[t]), int(downs[t])
-        ledger.uplink_bytes += up
-        ledger.downlink_bytes += down
-        ledger.rounds += raw.rounds_per_step
-        ledger.events.append((raw.event_kind, f"{tag}[{t}]", up + down))
 
-    metrics = dict(strategy.summary(raw.theta, data))
+    def materialize(u: np.ndarray, d: np.ndarray, suffix: str = "") -> CommLedger:
+        led = CommLedger()
+        if strategy.init_rounds and carry is None:
+            K = strategy.num_nodes(data)
+            theta_like = (
+                ex.scenario_template(raw.theta) if theta0 is None else theta0
+            )
+            for _ in range(strategy.init_rounds):
+                led.record_allreduce(theta_like, K, tag=f"{tag}/init")
+        T = int(u.shape[0])
+        up_tot, down_tot = _total(u), _total(d)
+        led.uplink_bytes += up_tot
+        led.downlink_bytes += down_tot
+        led.rounds += raw.rounds_per_step * T
+        led.events.append(
+            (raw.event_kind, f"{tag}{suffix}[0:{T}]", up_tot + down_tot)
+        )
+        return led
+
+    S = ex.num_scenarios
+    if S is None:
+        ledger = materialize(ups, downs)
+        metrics = dict(strategy.summary(raw.theta, data))
+    else:
+        ledger = [materialize(ups[s], downs[s], f"/s{s}") for s in range(S)]
+        try:
+            batched = jax.vmap(lambda th: strategy.summary(th, data))(raw.theta)
+            metrics = {k: np.asarray(v) for k, v in batched.items()}
+        except Exception:  # summaries need not be vmappable — skip, keep raw
+            metrics = {}
     metrics.update(raw.extras)
     metrics["uplink_bytes_per_round"] = ups
     metrics["downlink_bytes_per_round"] = downs
     metrics["transport"] = tr.name
     metrics["wire"] = w.name
+    metrics["executor"] = ex.name
     metrics["carry"] = raw.carry
     return FitResult(
         theta=raw.theta, trajectory=raw.trajectory, ledger=ledger, metrics=metrics

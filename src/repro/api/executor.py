@@ -1,0 +1,423 @@
+"""Executor layer — WHERE a fit runs.
+
+The Strategy/Transport/Wire decomposition (see ``docs/API.md``) says what
+is learned, who talks to whom, and what crosses the network.  The
+*executor* owns the remaining axis: where the per-round program is
+placed.  The paper's §3.1 observation — the central-server Allreduce is
+the two-phase simulation of what ``jax.lax.psum`` does natively — becomes
+a pure placement choice: the same transport step runs
+
+* ``local``  — K logical nodes stacked on one host (the classical
+  simulation; bit-exact with the pre-executor engine);
+* ``mesh``   — nodes placed on the data axis of a ``jax.sharding.Mesh``
+  via ``shard_map``; aggregation is ``psum``/``pmean`` over the mesh axis
+  and the wire's encode/decode (including the Pallas ``topk_compress``
+  kernel) runs per shard, on the real hot path;
+* ``sweep``  — a vmapped leading *scenario* axis: S configurations
+  (step sizes, regularizers, staleness levels, initial points) compile to
+  ONE executable and return a batched ``FitResult`` with per-scenario
+  ``CommLedger``s.
+
+Transports do not hard-code stacked-axis arithmetic anymore; they express
+their step against the executor-provided primitive set below —
+``aggregate`` / ``broadcast`` / ``node_axis`` (+ the ``metric_mean`` /
+``sum_bytes`` / ``num_node_shards`` helpers).  The primitives are ambient
+(a trace-time context installed by the running executor), so strategy
+code written against them is placement-oblivious: under the local
+executor every primitive degrades to the identity / the stacked
+``server_allreduce``, keeping historical results bit-exact.
+"""
+
+from __future__ import annotations
+
+import threading
+from contextlib import contextmanager
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.core.allreduce import mesh_allreduce, server_allreduce
+from repro.launch.mesh import batch_axes, make_node_mesh
+from repro.sharding.rules import current_mesh_context
+
+PyTree = Any
+
+# ----------------------------------------------------------------------------
+# Ambient execution context + the primitive set
+# ----------------------------------------------------------------------------
+
+_ctx = threading.local()
+
+
+class ExecContext(NamedTuple):
+    """Trace-time placement info installed by the running executor."""
+
+    node_axis: Any  # mesh axis name (or tuple) carrying nodes; None = stacked
+    num_shards: int  # how many shards the node axis is split over
+
+
+def current_exec_context() -> ExecContext | None:
+    return getattr(_ctx, "value", None)
+
+
+@contextmanager
+def executing(ctx: ExecContext | None):
+    prev = current_exec_context()
+    _ctx.value = ctx
+    try:
+        yield
+    finally:
+        _ctx.value = prev
+
+
+def node_axis():
+    """The mesh axis name(s) carrying the node dimension, or None when the
+    nodes are stacked locally."""
+    ctx = current_exec_context()
+    return None if ctx is None else ctx.node_axis
+
+
+def num_node_shards() -> int:
+    """How many shards the leading node axis is split over (1 locally).
+    Strategies that derive per-node weights from ``data.shape[0]`` must
+    multiply by this to recover the GLOBAL node count."""
+    ctx = current_exec_context()
+    return 1 if ctx is None else ctx.num_shards
+
+
+def aggregate(stacked: PyTree, op: str = "sum") -> PyTree:
+    """Reduce per-node messages over the node axis, wherever it lives:
+    the (shard-local) stacked axis 0, then — under a mesh placement — the
+    native collective across shards.  Locally this IS ``server_allreduce``
+    (bit-exact with the pre-executor engine)."""
+    reduced = server_allreduce(stacked, op=op)
+    ctx = current_exec_context()
+    if ctx is not None and ctx.node_axis is not None:
+        reduced = mesh_allreduce(reduced, ctx.node_axis, op=op)
+    return reduced
+
+
+def broadcast(tree: PyTree) -> PyTree:
+    """Phase 2 of the §3.1 two-step protocol: hand the aggregate back to
+    every node.  ``aggregate`` already returns a replicated value under
+    every placement, so this is the identity — it exists so transports can
+    mark the downlink point explicitly (and future executors with
+    non-replicating collectives have a hook)."""
+    return tree
+
+
+def metric_mean(x: PyTree) -> PyTree:
+    """Complete a node-mean statistic across shards (``pmean``); identity
+    locally.  Strategies whose ``round_metric`` is a mean over the (local)
+    node axis wrap it in this so the metric stays global under the mesh
+    executor."""
+    ctx = current_exec_context()
+    if ctx is not None and ctx.node_axis is not None:
+        return jax.tree.map(lambda v: jax.lax.pmean(v, ctx.node_axis), x)
+    return x
+
+
+def sum_bytes(x):
+    """Total a shard-local byte count across shards (``psum``); identity
+    locally."""
+    ctx = current_exec_context()
+    if ctx is not None and ctx.node_axis is not None:
+        return jax.lax.psum(x, ctx.node_axis)
+    return x
+
+
+# ----------------------------------------------------------------------------
+# Executors
+# ----------------------------------------------------------------------------
+
+
+class Executor:
+    """Owns where a fit's per-round loop runs.
+
+    Transports hand the executor a ``make_carry`` thunk, a
+    ``make_step(shard_data, sweep_delay)`` step factory and the scan
+    inputs; the executor decides placement (stacked scan, shard_map'd
+    scan, vmapped scan) and installs the ambient primitive context the
+    step body's ``aggregate``/``metric_mean``/… calls resolve against.
+    """
+
+    name = "executor"
+    #: number of scenarios for batched executors; None = unbatched
+    num_scenarios: int | None = None
+
+    def swept(self, key: str):
+        """The per-scenario values swept for ``key`` (None when not swept)."""
+        return None
+
+    def scenario_template(self, tree: PyTree) -> PyTree:
+        """An unbatched representative of a possibly scenario-batched tree
+        (used for shape-static byte accounting)."""
+        return tree
+
+    def finalize(self, strategy, theta, state, data):
+        return strategy.finalize(theta, state, data)
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length
+    ):
+        raise NotImplementedError
+
+    def run_server(self, *, step, carry, schedule):
+        raise ValueError(
+            "server transports walk one contact schedule sequentially — "
+            f"executor {self.name!r} cannot place them; use executor='local'"
+        )
+
+
+class LocalExecutor(Executor):
+    """Today's engine: K logical nodes stacked on one host, one
+    ``lax.scan``.  No ambient context is installed, so every primitive is
+    the stacked identity and results are bit-exact with the historical
+    loops."""
+
+    name = "local"
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length
+    ):
+        if carry is None:
+            carry = make_carry()
+        step = make_step(data, None)
+        return jax.lax.scan(step, carry, xs, length=length)
+
+    def run_server(self, *, step, carry, schedule):
+        return jax.lax.scan(step, carry, schedule)
+
+
+class MeshExecutor(Executor):
+    """Place the K nodes on the data axis of a ``jax.sharding.Mesh``.
+
+    The whole scan runs inside one ``shard_map``: each device hosts
+    K/ndev nodes of the data (and the wire's per-node state, e.g. EF
+    residuals), θ and the strategy state stay replicated, and
+    ``aggregate`` completes shard-local reductions with
+    ``psum``/``pmean`` over the mesh axis — the §3.1 equivalence run in
+    the native direction.  Wire encode/decode executes per shard, so a
+    compressed wire's kernels (Pallas ``topk_compress``) sit on the real
+    per-device hot path.
+
+    Mesh resolution order: explicit ``mesh=`` → the active
+    ``sharding.rules.MeshContext`` (its ``node_axes``) → a fresh 1-D
+    ``("data",)`` mesh over all local devices (``launch.mesh``).
+    """
+
+    name = "mesh"
+
+    def __init__(self, mesh: Mesh | None = None):
+        self._mesh = mesh
+
+    def resolve(self) -> tuple[Mesh, Any, int]:
+        mesh = self._mesh
+        axes = None
+        if mesh is None:
+            mc = current_mesh_context()
+            if mc is not None:
+                mesh, axes = mc.mesh, mc.node_axes
+            else:
+                mesh = make_node_mesh()
+        if axes is None:
+            axes = batch_axes(mesh)
+        if not axes:
+            raise ValueError(
+                f"mesh {mesh} has no 'data'/'pod' axis to place nodes on"
+            )
+        axis = axes if len(axes) > 1 else axes[0]
+        ndev = 1
+        for a in axes:
+            ndev *= mesh.shape[a]
+        return mesh, axis, ndev
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length
+    ):
+        from repro.api.strategy import Strategy
+
+        mesh, axis, ndev = self.resolve()
+        if data is None:
+            raise ValueError(
+                "mesh executor needs data with a leading node axis to shard"
+            )
+        if not strategy.stacked_msgs:
+            raise ValueError(
+                "mesh executor needs per-node stacked messages "
+                "(strategy.stacked_msgs=True)"
+            )
+        if type(strategy).aggregate is not Strategy.aggregate:
+            raise NotImplementedError(
+                f"{type(strategy).__name__} overrides aggregate(); the mesh "
+                "executor only places op-based reductions (set aggregate_op "
+                "to 'sum'/'mean'/'max' instead)"
+            )
+        K = strategy.num_nodes(data)
+        if K % ndev != 0:
+            raise ValueError(
+                f"{K} nodes cannot be placed evenly on {ndev} mesh shards"
+            )
+        if carry is None:
+            carry = make_carry()
+        ctx = ExecContext(node_axis=axis, num_shards=ndev)
+        # carry = (theta, strategy state, wire state, delay line): everything
+        # replicated except the per-node wire state, which lives with its node
+        cspec = (P(), P(), P(axis), P())
+
+        if xs is None:
+
+            def body(c, d):
+                with executing(ctx):
+                    return jax.lax.scan(make_step(d, None), c, None, length=length)
+
+            fn = shard_map(
+                body, mesh=mesh, in_specs=(cspec, P(axis)),
+                out_specs=(cspec, P()), check_rep=False,
+            )
+            return fn(carry, data)
+
+        def body(c, d, x):
+            with executing(ctx):
+                return jax.lax.scan(make_step(d, None), c, x, length=length)
+
+        fn = shard_map(
+            body, mesh=mesh, in_specs=(cspec, P(axis), P()),
+            out_specs=(cspec, P()), check_rep=False,
+        )
+        return fn(carry, data, xs)
+
+
+class SweepExecutor(Executor):
+    """Batch S scenarios into one executable with ``jax.vmap``.
+
+    ``params`` maps names to length-S arrays:
+
+    * a strategy attribute name (``"lr"``, ``"l2"``, ``"rho"``, …) — the
+      attribute is rebound per scenario while the step is traced, so any
+      scalar hyperparameter a strategy reads from ``self`` sweeps without
+      the strategy knowing;
+    * the reserved key ``"staleness"`` — handled by the update transport,
+      which sizes one depth-max(D) delay line and reads it at a batched
+      per-scenario index (``core.staleness.delay_push_read``), so D=0…D_max
+      share one compiled program;
+    * the reserved key ``"theta0"`` — a (S, …)-batched initial parameter.
+
+    Structural knobs (top-k fraction, wire choice, transport identity)
+    change compiled shapes and cannot ride one executable — run those as
+    separate ``fit`` calls.
+
+    The engine materializes one ``CommLedger`` per scenario from the
+    batched byte counts; ``FitResult.theta`` / ``.trajectory`` /
+    ``metrics["carry"]`` all gain a leading S axis (the carry resumes a
+    later swept ``fit`` with the same executor shape).
+    """
+
+    name = "sweep"
+    RESERVED = ("staleness", "theta0")
+
+    def __init__(self, params: dict):
+        if not params:
+            raise ValueError("sweep executor needs at least one swept parameter")
+        # values may be pytrees (a batched theta0 for model-pytree
+        # strategies); every leaf's leading axis is the scenario axis
+        self.params = {
+            k: jax.tree.map(jnp.asarray, v) for k, v in params.items()
+        }
+        counts = {}
+        for k, v in self.params.items():
+            leaves = jax.tree.leaves(v)
+            if not leaves:
+                raise ValueError(f"swept parameter {k!r} has no array leaves")
+            per_leaf = {int(leaf.shape[0]) for leaf in leaves}
+            if len(per_leaf) != 1:
+                raise ValueError(
+                    f"swept parameter {k!r} leaves disagree on scenario count"
+                )
+            counts[k] = per_leaf.pop()
+        if len(set(counts.values())) != 1:
+            raise ValueError(
+                f"swept parameters disagree on scenario count: {counts}"
+            )
+        self.num_scenarios = next(iter(counts.values()))
+
+    def swept(self, key: str):
+        return self.params.get(key)
+
+    def scenario_template(self, tree: PyTree) -> PyTree:
+        return jax.tree.map(lambda x: x[0], tree)
+
+    def finalize(self, strategy, theta, state, data):
+        from repro.api.strategy import Strategy
+
+        if type(strategy).finalize is Strategy.finalize:
+            return theta
+        return jax.vmap(lambda th, st: strategy.finalize(th, st, data))(
+            theta, state
+        )
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length
+    ):
+        attrs = {
+            k: v for k, v in self.params.items() if k not in self.RESERVED
+        }
+        for k in attrs:
+            if not hasattr(strategy, k):
+                raise ValueError(
+                    f"swept parameter {k!r} is not an attribute of "
+                    f"{type(strategy).__name__} (reserved keys: "
+                    f"{self.RESERVED})"
+                )
+        stal = self.params.get("staleness")
+        theta0s = self.params.get("theta0")
+
+        def one(vals, d, th0, c):
+            saved = {k: getattr(strategy, k) for k in vals}
+            try:
+                for k, v in vals.items():
+                    setattr(strategy, k, v)
+                if c is not None:
+                    c0 = c
+                elif th0 is None:
+                    c0 = make_carry()
+                else:
+                    c0 = make_carry(theta0=th0)
+                return jax.lax.scan(
+                    make_step(data, d), c0, xs, length=length
+                )
+            finally:
+                for k, v in saved.items():
+                    setattr(strategy, k, v)
+
+        axes = (
+            {k: 0 for k in attrs},
+            None if stal is None else 0,
+            None if theta0s is None else 0,
+            None if carry is None else 0,
+        )
+        return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
+
+
+EXECUTORS = ("local", "mesh", "sweep")
+
+
+def make_executor(spec: str | Executor | None) -> Executor:
+    """Resolve an executor spec: an ``Executor`` instance, ``None``/"local",
+    "mesh" (nodes over all local devices / the active mesh context), or a
+    configured ``MeshExecutor(mesh)`` / ``SweepExecutor(params)``."""
+    if isinstance(spec, Executor):
+        return spec
+    if spec is None or spec == "local":
+        return LocalExecutor()
+    if spec == "mesh":
+        return MeshExecutor()
+    if spec == "sweep":
+        raise ValueError(
+            "the sweep executor needs scenario parameters — pass "
+            "api.SweepExecutor({'lr': [...], ...}) instead of the bare string"
+        )
+    raise ValueError(f"unknown executor {spec!r} — one of {EXECUTORS}")

@@ -26,6 +26,7 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import executor as _exec
 from repro.core.allreduce import server_allreduce
 
 PyTree = Any
@@ -39,6 +40,12 @@ class Strategy:
     #: communication rounds charged before the loop (e.g. an initial
     #: gradient Allreduce) — the engine adds them to the ledger
     init_rounds: int = 0
+    #: reduction applied over the node axis by the base ``aggregate``
+    #: ("sum" / "mean" / "max").  Executors that place nodes on a mesh
+    #: complete this op with the native collective — strategies that
+    #: instead *override* ``aggregate`` (semantic aggregation, e.g. the
+    #: cascade SVM's mask union) stay local/sweep-only.
+    aggregate_op: str = "sum"
 
     # -- setup ---------------------------------------------------------------
     def init_theta(self, data) -> PyTree:
@@ -74,7 +81,7 @@ class Strategy:
         )
 
     def aggregate(self, msgs: PyTree) -> PyTree:
-        return server_allreduce(msgs, op="sum")
+        return _exec.aggregate(msgs, op=self.aggregate_op)
 
     def apply_update(self, theta: PyTree, agg: PyTree, state, data):
         """Apply the aggregated message.  Returns (θ', state)."""
@@ -173,9 +180,12 @@ class GradientDescent(Strategy):
         return jnp.zeros((Xs.shape[-1],))
 
     def _weights(self, data):
+        # data may be the shard-local slice of the node axis (mesh
+        # executor); the weights must still normalize by the GLOBAL count
         Xs, _ = data
-        K, Nk = Xs.shape[0], Xs.shape[1]
-        return jnp.full((K,), Nk / (K * Nk))
+        K_local, Nk = Xs.shape[0], Xs.shape[1]
+        K = K_local * _exec.num_node_shards()
+        return jnp.full((K_local,), Nk / (K * Nk))
 
     def local_step(self, k, theta, state, data):
         Xs, ys = data
@@ -193,7 +203,9 @@ class GradientDescent(Strategy):
 
     def round_metric(self, theta, state, data):
         Xs, ys = data
-        return jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+        return _exec.metric_mean(
+            jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+        )
 
     def summary(self, theta, data) -> dict:
         return {"loss": self.round_metric(theta, (), data)}
@@ -249,6 +261,7 @@ class LBFGS(Strategy):
     deterministically identically — on every node."""
 
     init_rounds = 1  # the initial global gradient
+    aggregate_op = "mean"
 
     def __init__(
         self,
@@ -291,9 +304,6 @@ class LBFGS(Strategy):
         msgs = self._grad_local(theta_prop, Xs, ys)
         return msgs, state._replace(theta_prop=theta_prop)
 
-    def aggregate(self, msgs):
-        return server_allreduce(msgs, op="mean")
-
     def apply_update(self, theta, agg, state, data):
         theta_new = state.theta_prop
         g_new = agg + self.l2 * theta_new
@@ -317,7 +327,9 @@ class LBFGS(Strategy):
 
     def round_metric(self, theta, state, data):
         Xs, ys = data
-        return jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+        return _exec.metric_mean(
+            jnp.mean(jax.vmap(self.loss, in_axes=(None, 0, 0))(theta, Xs, ys))
+        )
 
     def summary(self, theta, data) -> dict:
         return {"loss": self.round_metric(theta, (), data)}

@@ -15,10 +15,14 @@ corresponding ``repro.core`` primitive:
 * ``admm_consensus``    — global-variable-consensus ADMM (three-stage
   Douglas-Rachford, two Allreduces per iteration); wraps ``core.admm``.
 
-A transport's ``run`` owns the jit/scan-able loop; it calls back into the
-strategy for local computation and into the wire for message encoding and
-byte metering, and returns a ``RawRun`` that the engine turns into a
-``FitResult``.
+A transport's ``run`` builds the per-round step; it calls back into the
+strategy for local computation, into the wire for message encoding and
+byte metering, and into the executor-provided primitive set
+(``repro.api.executor``: ``aggregate`` / ``broadcast`` / ``metric_mean`` /
+``sum_bytes``) for everything that depends on WHERE the nodes live — the
+executor owns the loop placement (stacked scan, ``shard_map``'d scan,
+vmapped scenario sweep) and returns what the transport wraps into a
+``RawRun`` for the engine.
 """
 
 from __future__ import annotations
@@ -29,10 +33,11 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.api import executor as _exec
 from repro.api.strategy import Strategy
 from repro.core.admm import consensus_admm
 from repro.core.server import contact, init_server
-from repro.core.staleness import delay_init, delay_push_pop
+from repro.core.staleness import delay_init, delay_push_pop, delay_push_read
 
 PyTree = Any
 
@@ -53,7 +58,8 @@ class Transport:
     name = "transport"
 
     def run(
-        self, strategy, data, *, wire, schedule, steps, stream, theta0, carry
+        self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
+        executor,
     ) -> RawRun:
         raise NotImplementedError
 
@@ -73,7 +79,8 @@ class ServerTransport(Transport):
             "sequential_server" if handoff == "sequential" else "stale_server"
         )
 
-    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
+            executor):
         if schedule is None:
             raise ValueError(
                 f"transport {self.name!r} needs a contact schedule= "
@@ -104,8 +111,8 @@ class ServerTransport(Transport):
             server, received = contact(server, theta_push, handoff=handoff)
             return (server, sstate, wstate), (received, up)
 
-        (server, sstate, wstate), (traj, ups) = jax.lax.scan(
-            step, carry, schedule
+        (server, sstate, wstate), (traj, ups) = executor.run_server(
+            step=step, carry=carry, schedule=schedule
         )
         theta = strategy.finalize(server.theta, sstate, data)
         T = len(schedule)
@@ -136,7 +143,8 @@ class UpdateTransport(Transport):
         self.staleness = staleness
         self.name = "allreduce" if staleness == 0 else "delay_line"
 
-    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
+            executor):
         K = strategy.num_nodes(data)
         if stream is not None:
             T = jax.tree.leaves(stream)[0].shape[0]
@@ -147,21 +155,42 @@ class UpdateTransport(Transport):
                 f"transport {self.name!r} needs steps= or a stream= with a "
                 "leading time axis"
             )
-        if carry is None:
-            theta0 = _resolve_theta0(strategy, data, theta0)
+        # a swept "staleness" supersedes the transport's own D: one delay
+        # line of depth max(D_s) is shared, read at a per-scenario index
+        stal_sweep = executor.swept("staleness")
+        if stal_sweep is not None:
+            D_buf = max(1, int(np.max(np.asarray(stal_sweep))))
+        else:
+            D_buf = self.staleness
+        resolved0 = None
+        if carry is None and executor.swept("theta0") is None:
+            resolved0 = _resolve_theta0(strategy, data, theta0)
+
+        def make_carry(theta0=resolved0):
+            th0 = (
+                theta0 if theta0 is not None
+                else _resolve_theta0(strategy, data, None)
+            )
             delay = (
-                delay_init(jax.tree.map(jnp.zeros_like, theta0), self.staleness)
-                if self.staleness > 0
+                delay_init(jax.tree.map(jnp.zeros_like, th0), D_buf)
+                if D_buf > 0
                 else ()
             )
-            carry = (
-                theta0,
-                strategy.init_state(theta0, data),
-                wire.init_state(theta0, K, stacked=strategy.stacked_msgs),
+            return (
+                th0,
+                strategy.init_state(th0, data),
+                wire.init_state(th0, K, stacked=strategy.stacked_msgs),
                 delay,
             )
-        theta_template = carry[0]
-        D = self.staleness
+
+        if carry is not None:
+            theta_template = executor.scenario_template(carry[0])
+        elif resolved0 is not None:
+            theta_template = resolved0
+        else:
+            theta_template = executor.scenario_template(
+                executor.swept("theta0")
+            )
         # static byte accounting where possible (see Wire.push_bytes)
         up_is_static = (
             type(strategy).uplink_bytes is Strategy.uplink_bytes
@@ -169,29 +198,50 @@ class UpdateTransport(Transport):
         )
         down_is_static = type(strategy).downlink_bytes is Strategy.downlink_bytes
 
-        def step(c, xt):
-            theta, sstate, wstate, delay = c
-            msgs, sstate = strategy.local_updates(theta, sstate, data, xt)
-            wstate, msgs_hat, up = wire.encode_updates(
-                wstate, msgs, stacked=strategy.stacked_msgs
-            )
-            up_override = strategy.uplink_bytes(msgs_hat, data)
-            if up_override is not None:
-                up = up_override
-            agg = strategy.aggregate(msgs_hat)
-            if D > 0:
-                delay, agg = delay_push_pop(delay, agg)
-            theta_new, sstate = strategy.apply_update(theta, agg, sstate, data)
-            down = strategy.downlink_bytes(theta_new, data)
-            if down is None:
-                down = jnp.asarray(float(K * wire.measure(theta_new)))
-            m = strategy.round_metric(theta_new, sstate, data)
-            return (theta_new, sstate, wstate, delay), (m, up, down)
+        def make_step(shard_data, sweep_delay):
+            """Per-round step against the executor's primitive set.
+
+            ``shard_data`` is whatever node slice the executor placed here
+            (the full stack locally, a shard under the mesh); ``sweep_delay``
+            is the per-scenario staleness index under a sweep, else None.
+            """
+
+            def step(c, xt):
+                theta, sstate, wstate, delay = c
+                msgs, sstate = strategy.local_updates(
+                    theta, sstate, shard_data, xt
+                )
+                wstate, msgs_hat, up = wire.encode_updates(
+                    wstate, msgs, stacked=strategy.stacked_msgs
+                )
+                up_override = strategy.uplink_bytes(msgs_hat, shard_data)
+                if up_override is not None:
+                    up = up_override
+                else:
+                    up = _exec.sum_bytes(up)  # shard-local wire cost → global
+                agg = _exec.broadcast(strategy.aggregate(msgs_hat))
+                if sweep_delay is not None:
+                    delay, agg = delay_push_read(delay, agg, sweep_delay)
+                elif D_buf > 0:
+                    delay, agg = delay_push_pop(delay, agg)
+                theta_new, sstate = strategy.apply_update(
+                    theta, agg, sstate, shard_data
+                )
+                down = strategy.downlink_bytes(theta_new, shard_data)
+                if down is None:
+                    down = jnp.asarray(float(K * wire.measure(theta_new)))
+                m = strategy.round_metric(theta_new, sstate, shard_data)
+                return (theta_new, sstate, wstate, delay), (m, up, down)
+
+            return step
 
         xs = stream if stream is not None else None
-        carry, (traj, ups, downs) = jax.lax.scan(step, carry, xs, length=T)
+        carry, (traj, ups, downs) = executor.run_update(
+            strategy=strategy, data=data, carry=carry,
+            make_carry=make_carry, make_step=make_step, xs=xs, length=T,
+        )
         theta, sstate = carry[0], carry[1]
-        theta = strategy.finalize(theta, sstate, data)
+        theta = executor.finalize(strategy, theta, sstate, data)
         if up_is_static:
             per_round = wire.push_bytes(theta_template) * (
                 K if strategy.stacked_msgs else 1
@@ -201,6 +251,14 @@ class UpdateTransport(Transport):
             downs = np.full(
                 (T,), K * wire.measure(theta_template), dtype=np.int64
             )
+        S = executor.num_scenarios
+        if S is not None:
+            ups = np.asarray(ups)
+            downs = np.asarray(downs)
+            if ups.ndim == 1:  # static costs are scenario-invariant
+                ups = np.broadcast_to(ups, (S, T)).copy()
+            if downs.ndim == 1:
+                downs = np.broadcast_to(downs, (S, T)).copy()
         return RawRun(
             theta=theta,
             state=sstate,
@@ -226,7 +284,8 @@ class AdmmTransport(Transport):
         self.g = g
         self.g_lam = g_lam
 
-    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry):
+    def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
+            executor):
         if steps is None:
             raise ValueError("transport 'admm_consensus' needs steps= (iterations)")
         if theta0 is not None or carry is not None:
@@ -234,10 +293,15 @@ class AdmmTransport(Transport):
                 "admm_consensus runs are one-shot: warm-start (theta0=) and "
                 "resume (carry=) are not supported — rerun with more steps"
             )
-        if type(wire).__name__ != "DenseWire" and wire.name != "dense":
+        if not wire.lossless:
             raise ValueError(
-                "admm_consensus supports only the dense wire — compressing "
+                "admm_consensus needs a lossless wire (dense) — compressing "
                 "the consensus pushes would change the algorithm"
+            )
+        if executor.name != "local":
+            raise ValueError(
+                "admm_consensus wraps core.admm's own inner loop — it runs "
+                f"on the local executor only, not {executor.name!r}"
             )
         local_prox = strategy.make_local_prox(data)
         K = strategy.num_nodes(data)

@@ -42,6 +42,10 @@ class Wire:
     """Base wire: dense — push exactly what the strategy produced."""
 
     name = "dense"
+    #: capability flag: True when encode is the identity (no information
+    #: loss).  Transports whose algorithm would CHANGE under compression
+    #: (e.g. admm_consensus) gate on this instead of the wire's type/name.
+    lossless = True
 
     def init_state(self, theta: PyTree, num_nodes: int, *, stacked: bool = True):
         """Per-run wire state (e.g. error-feedback residuals); () if none."""
@@ -80,6 +84,8 @@ class CompressedWire(Wire):
     compressor dropped is carried per node and added to the next push —
     the EF-SGD construction that preserves the non-distributed rate.
     """
+
+    lossless = False
 
     def __init__(
         self,

@@ -41,6 +41,21 @@ def pmean_allreduce(tree: PyTree, axis_name: str | tuple[str, ...]) -> PyTree:
     return jax.tree.map(lambda x: jax.lax.pmean(x, axis_name), tree)
 
 
+def mesh_allreduce(
+    tree: PyTree, axis_name: str | tuple[str, ...], op: str = "sum"
+) -> PyTree:
+    """Native collective with the same ``op`` vocabulary as
+    ``server_allreduce`` — the §3.1 equivalence made literal: the mesh
+    executor swaps one for the other without touching the algorithm."""
+    if op == "sum":
+        return psum_allreduce(tree, axis_name)
+    if op == "mean":
+        return pmean_allreduce(tree, axis_name)
+    if op == "max":
+        return jax.tree.map(lambda x: jax.lax.pmax(x, axis_name), tree)
+    raise ValueError(f"unknown op: {op!r}")
+
+
 def server_allreduce(stacked: PyTree, op: str = "sum") -> PyTree:
     """Two-phase central-server Allreduce over a leading node axis.
 

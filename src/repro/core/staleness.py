@@ -58,6 +58,31 @@ def delay_push_pop(state: DelayLine, grads: PyTree) -> tuple[DelayLine, PyTree]:
     return DelayLine(buffer=new_buf, step=state.step + 1), popped
 
 
+def delay_push_read(
+    state: DelayLine, grads: PyTree, delay: jnp.ndarray
+) -> tuple[DelayLine, PyTree]:
+    """Dynamic-staleness variant of ``delay_push_pop``: push fresh ``grads``
+    and read the value pushed ``delay`` steps ago, where ``delay`` may be a
+    *traced* int32 in ``[0, D]`` (D = buffer depth).  ``delay == D``
+    reproduces ``delay_push_pop`` on a depth-D buffer exactly; ``delay == 0``
+    reads the fresh push (synchronous).  This is what lets a vmapped
+    scenario sweep compile S different staleness levels into ONE executable:
+    every scenario shares the depth-D_max buffer and differs only in the
+    (batched) read index.
+    """
+    ext = jax.tree.map(
+        lambda b, g: jnp.concatenate([b, g[None]], axis=0), state.buffer, grads
+    )
+    depth = jax.tree.leaves(state.buffer)[0].shape[0]
+    idx = depth - delay  # delay=depth -> oldest slot; delay=0 -> the fresh push
+    read = jax.tree.map(
+        lambda e: jax.lax.dynamic_index_in_dim(e, idx, axis=0, keepdims=False),
+        ext,
+    )
+    new_buf = jax.tree.map(lambda e: e[1:], ext)
+    return DelayLine(buffer=new_buf, step=state.step + 1), read
+
+
 class AsyncSGDState(NamedTuple):
     params: PyTree
     delay: DelayLine | None

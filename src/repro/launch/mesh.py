@@ -23,6 +23,14 @@ def make_host_mesh():
     return jax.make_mesh((1, 1), ("data", "model"))
 
 
+def make_node_mesh(num_devices: int | None = None):
+    """1-D ``("data",)`` mesh over the host's devices — the mesh executor's
+    default placement for the paper's K logical nodes (K must be a multiple
+    of the device count; each device hosts K/ndev nodes)."""
+    n = num_devices if num_devices is not None else len(jax.devices())
+    return jax.make_mesh((n,), ("data",))
+
+
 def batch_axes(mesh) -> tuple:
     """The axes that carry data parallelism (the paper's 'nodes')."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

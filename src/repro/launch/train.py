@@ -15,6 +15,11 @@ checkpoint cadence, resuming each chunk from the previous
 ``FitResult.metrics["carry"]`` so the delay line, error-feedback
 residuals and optimizer state flow through unchanged.
 
+``--sweep-staleness "0,1,2,4"`` runs all listed staleness levels as ONE
+vmapped scenario batch (the sweep executor): every level shares one
+compiled step and one data stream, and the driver reports the loss
+trajectory per scenario — the cheapest way to pick D before a long run.
+
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --steps 50 --batch 8 --seq 128 --log-every 10
@@ -55,6 +60,11 @@ def main(argv=None):
     ap.add_argument("--seq", type=int, default=128)
     ap.add_argument("--lr", type=float, default=3e-4)
     ap.add_argument("--staleness", type=int, default=0)
+    ap.add_argument(
+        "--sweep-staleness", default="",
+        help="comma-separated staleness levels batched into one vmapped "
+        "sweep (overrides --staleness; incompatible with checkpointing)",
+    )
     ap.add_argument("--compress-topk", type=float, default=0.0)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
@@ -79,10 +89,18 @@ def main(argv=None):
     )
     wire = f"topk:{args.compress_topk}+ef" if args.compress_topk > 0 else "dense"
 
+    sweep_levels = None
+    executor = "local"
+    if args.sweep_staleness:
+        if args.ckpt_dir:
+            raise SystemExit("--sweep-staleness is incompatible with --ckpt-dir")
+        sweep_levels = [int(s) for s in args.sweep_staleness.split(",")]
+        executor = api.SweepExecutor({"staleness": jnp.asarray(sweep_levels)})
+
     data = synthetic_lm_batches(args.seed, args.batch, args.seq, cfg.vocab_size)
     print(
         f"training {cfg.name} ({n_params/1e6:.1f}M params, "
-        f"staleness={args.staleness}, wire={wire})"
+        f"staleness={sweep_levels or args.staleness}, wire={wire})"
     )
     t0 = time.time()
     history = []
@@ -98,30 +116,41 @@ def main(argv=None):
             transport="delay_line",
             staleness=args.staleness,
             wire=wire,
+            executor=executor,
             stream=stream,
             theta0=theta,
             carry=carry,
             tag="train",
         )
         theta, carry = res.theta, res.metrics["carry"]
-        wire_bytes += res.ledger.uplink_bytes
+        if sweep_levels is None:
+            wire_bytes += res.ledger.uplink_bytes
+            losses = {"loss": float(res.trajectory[-1])}
+            first = {"loss": float(res.trajectory[0])}
+        else:
+            wire_bytes += res.ledger[0].uplink_bytes  # identical across D
+            traj = jnp.asarray(res.trajectory)
+            losses = {f"loss_D{d}": float(traj[i, -1])
+                      for i, d in enumerate(sweep_levels)}
+            first = {f"loss_D{d}": float(traj[i, 0])
+                     for i, d in enumerate(sweep_levels)}
         if done == 0:
-            history.append({"step": 1, "loss": float(res.trajectory[0])})
+            history.append({"step": 1, **first})
         done = end
         if done % args.log_every == 0 or done == args.steps:
-            l = float(res.trajectory[-1])
             if history[-1]["step"] != done:
-                history.append({"step": done, "loss": l})
-            print(
-                f"step {done:5d}  loss {l:.4f}  "
-                f"({(time.time()-t0)/done:.2f}s/step)"
-            )
+                history.append({"step": done, **losses})
+            shown = "  ".join(f"{k} {v:.4f}" for k, v in losses.items())
+            print(f"step {done:5d}  {shown}  ({(time.time()-t0)/done:.2f}s/step)")
         if args.ckpt_dir and args.ckpt_every and done % args.ckpt_every == 0:
             save(args.ckpt_dir, done, theta)
+    final = {k: v for k, v in history[-1].items() if k != "step"}
     print(
         json.dumps(
             {
-                "final_loss": history[-1]["loss"],
+                "final_loss": (
+                    final["loss"] if sweep_levels is None else final
+                ),
                 "uplink_bytes": wire_bytes,
                 "history": history,
             }

@@ -42,6 +42,12 @@ class MeshContext:
     def model_axis(self):
         return self.logical.get("model")
 
+    @property
+    def node_axes(self) -> tuple:
+        """Physical mesh axes that place the paper's K nodes (data
+        parallelism) — what the mesh executor shards the node axis over."""
+        return tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
+
 
 def set_mesh_context(ctx: MeshContext | None):
     _ctx.value = ctx

@@ -300,6 +300,62 @@ class TestStreamAndResume:
         np.testing.assert_allclose(l_full, l_chunk, rtol=1e-6, atol=1e-7)
 
 
+class TestCarryResumeEquivalence:
+    """fit(steps=T) ≡ fit(steps=T/2) then fit(carry=..., steps=T/2) — the
+    split must be invisible: θ, the concatenated trajectory, AND the
+    summed ledger totals all match the uninterrupted run."""
+
+    @pytest.mark.parametrize(
+        "transport,kw",
+        [("allreduce", {}), ("delay_line", {"staleness": 2})],
+    )
+    def test_split_matches_full(self, transport, kw):
+        from repro.ml.linear import lsq_loss
+
+        _, X, y, w, n = _make_problem()
+        T = 40
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, steps=T, **kw)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport=transport, steps=T // 2, **kw)
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport=transport, steps=T // 2,
+                    carry=a.metrics["carry"], **kw)
+        np.testing.assert_array_equal(np.asarray(b.theta), np.asarray(full.theta))
+        np.testing.assert_array_equal(
+            np.concatenate([np.asarray(a.trajectory), np.asarray(b.trajectory)]),
+            np.asarray(full.trajectory),
+        )
+        assert (a.ledger.uplink_bytes + b.ledger.uplink_bytes
+                == full.ledger.uplink_bytes)
+        assert (a.ledger.downlink_bytes + b.ledger.downlink_bytes
+                == full.ledger.downlink_bytes)
+        assert a.ledger.rounds + b.ledger.rounds == full.ledger.rounds
+
+    @pytest.mark.parametrize(
+        "transport,kw",
+        [("allreduce", {}), ("delay_line", {"staleness": 2})],
+    )
+    def test_split_matches_full_compressed(self, transport, kw):
+        """Same invariance with a stateful (EF) wire: the residuals ride
+        the carry."""
+        from repro.ml.linear import lsq_loss
+
+        _, X, y, w, n = _make_problem()
+        T = 40
+        kw = dict(kw, wire="topk:0.5+ef")
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, steps=T, **kw)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport=transport, steps=T // 2, **kw)
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport=transport, steps=T // 2,
+                    carry=a.metrics["carry"], **kw)
+        np.testing.assert_array_equal(np.asarray(b.theta), np.asarray(full.theta))
+        assert (a.ledger.total_bytes + b.ledger.total_bytes
+                == full.ledger.total_bytes)
+
+
 class TestServerResume:
     def test_carry_resumes_without_theta0(self):
         """A server-transport run can continue from carry alone — the

@@ -1,0 +1,405 @@
+"""Executor-layer tests: the same Strategy/Transport/Wire program must
+produce the same fit under every placement.
+
+* ``local`` — bit-exact with the pre-executor engine (covered by
+  ``test_api_fit.py`` running entirely on the default executor; here we
+  only check the explicit spec resolves to the same run).
+* ``mesh``  — shard_map node placement matches the stacked scan within fp
+  tolerance (reduction order differs), with IDENTICAL ledgers; exercised
+  on however many devices the process has (the CI mesh job forces 8 fake
+  CPU devices via XLA_FLAGS) plus an explicit 8-device subprocess check.
+* ``sweep`` — a vmapped S-scenario batch matches S independent ``fit``
+  calls, with per-scenario ledgers bit-for-bit equal on byte totals.
+"""
+
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core import schedules
+from repro.ml.linear import lsq_loss
+
+
+def _make_problem(K=8, Nk=10, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    return X, y, w, n
+
+
+class TestMeshEquivalence:
+    """mesh executor ≡ local executor on whatever devices this process has
+    (1 in a plain run; 8 under the CI mesh job's XLA_FLAGS)."""
+
+    @pytest.mark.parametrize(
+        "transport,kw",
+        [("allreduce", {}), ("delay_line", {"staleness": 2})],
+    )
+    def test_matches_local(self, transport, kw):
+        X, y, w, n = _make_problem()
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport=transport, steps=40, **kw)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, steps=40, executor="mesh", **kw)
+        np.testing.assert_allclose(np.asarray(mesh.theta), np.asarray(loc.theta),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_allclose(np.asarray(mesh.trajectory),
+                                   np.asarray(loc.trajectory),
+                                   rtol=1e-5, atol=1e-6)
+        assert mesh.ledger.summary() == loc.ledger.summary()
+        assert mesh.metrics["executor"] == "mesh"
+
+    def test_lbfgs_mean_aggregation(self):
+        """aggregate_op="mean" completes with pmean across shards."""
+        X, y, w, n = _make_problem()
+        loc = api.fit(api.LBFGS(lsq_loss), (X, y), transport="allreduce", steps=15)
+        mesh = api.fit(api.LBFGS(lsq_loss), (X, y), transport="allreduce",
+                       steps=15, executor="mesh")
+        np.testing.assert_allclose(np.asarray(mesh.theta), np.asarray(loc.theta),
+                                   rtol=1e-4, atol=1e-5)
+        assert mesh.ledger.summary() == loc.ledger.summary()
+
+    def test_compressed_wire_encodes_per_shard(self):
+        """top-k + EF composes with the mesh placement: the per-node
+        encode runs inside the shard_map body, byte accounting unchanged."""
+        X, y, w, n = _make_problem()
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="topk:0.5+ef", steps=25)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", wire="topk:0.5+ef", steps=25,
+                       executor="mesh")
+        assert mesh.ledger.summary() == loc.ledger.summary()
+        assert float(mesh.trajectory[-1]) < float(mesh.trajectory[0])
+        # compression actually metered: below the dense allreduce cost
+        dense_up = 25 * X.shape[0] * n * 4
+        assert mesh.ledger.uplink_bytes < dense_up
+
+    def test_resume_carry_crosses_executors(self):
+        """A mesh run's carry resumes on the local executor (the wire/EF
+        state is reassembled to its global layout at the shard_map exit)."""
+        X, y, w, n = _make_problem()
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", steps=30)
+        first = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                        transport="allreduce", steps=15, executor="mesh")
+        second = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                         transport="allreduce", steps=15,
+                         carry=first.metrics["carry"])
+        np.testing.assert_allclose(np.asarray(second.theta),
+                                   np.asarray(full.theta),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestMeshValidation:
+    def test_server_transport_rejected(self):
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(ValueError, match="local"):
+            api.fit(api.FunctionStrategy(lambda k, t: t, num_nodes=4),
+                    transport="sequential_server",
+                    schedule=schedules.round_robin(4, 2),
+                    theta0=jnp.zeros(n), executor="mesh")
+
+    def test_admm_rejected(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(ValueError, match="local"):
+            api.fit(api.ProxStrategy(lasso_prox_builder), (X, y),
+                    transport="admm_consensus", steps=5, g="l1", g_lam=0.1,
+                    executor="mesh")
+
+    def test_semantic_aggregate_rejected(self):
+        """Strategies that override aggregate() (cascade SVM's mask union)
+        cannot be placed on a mesh — only op-based reductions psum."""
+        from repro.ml.svm import CascadeStrategy
+
+        rng = np.random.default_rng(3)
+        Xs = jnp.asarray(rng.normal(size=(4, 6, 2)))
+        ys = jnp.asarray(np.sign(rng.normal(size=(4, 6))))
+        with pytest.raises(NotImplementedError, match="aggregate"):
+            api.fit(CascadeStrategy(C=1.0, iters=10), (Xs, ys),
+                    transport="allreduce", steps=2, executor="mesh")
+
+    def test_uneven_placement_rejected(self):
+        if jax.device_count() == 1:
+            pytest.skip("needs >1 device to make K indivisible")
+        K = jax.device_count() + 1
+        X, y, w, n = _make_problem(K=K)
+        with pytest.raises(ValueError, match="evenly"):
+            api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=3, executor="mesh")
+
+    def test_mesh_context_reuse(self):
+        """An active sharding.rules.MeshContext supplies the mesh."""
+        from repro.launch.mesh import make_node_mesh
+        from repro.sharding.rules import MeshContext, set_mesh_context
+
+        X, y, w, n = _make_problem()
+        set_mesh_context(MeshContext(mesh=make_node_mesh(), logical={}))
+        try:
+            res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                          transport="allreduce", steps=10, executor="mesh")
+        finally:
+            set_mesh_context(None)
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=10)
+        np.testing.assert_allclose(np.asarray(res.theta), np.asarray(loc.theta),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestMeshEightDevices:
+    """The acceptance check proper: 8 fake CPU devices in a subprocess
+    (XLA device count is fixed at jax init, so in-process tests can't
+    force it)."""
+
+    SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import api
+from repro.ml.linear import lsq_loss
+
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.normal(size=(8, 10, 5)))
+w = jnp.asarray(rng.normal(size=(5,)))
+y = jnp.einsum("kni,i->kn", X, w)
+out = {"num_devices": jax.device_count()}
+for transport, kw in [("allreduce", {}), ("delay_line", {"staleness": 2})]:
+    loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                  transport=transport, steps=40, **kw)
+    mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                   transport=transport, steps=40, executor="mesh", **kw)
+    out[transport] = {
+        "theta_close": bool(np.allclose(loc.theta, mesh.theta,
+                                        rtol=1e-5, atol=1e-6)),
+        "traj_close": bool(np.allclose(loc.trajectory, mesh.trajectory,
+                                       rtol=1e-5, atol=1e-6)),
+        "ledger_equal": loc.ledger.summary() == mesh.ledger.summary(),
+    }
+print(json.dumps(out))
+"""
+
+    def test_mesh_matches_local_on_8_devices(self):
+        # repro may be a namespace package (no __file__) — anchor on api
+        src = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["JAX_PLATFORMS"] = "cpu"
+        proc = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["num_devices"] == 8
+        for transport in ("allreduce", "delay_line"):
+            assert out[transport] == {
+                "theta_close": True, "traj_close": True, "ledger_equal": True
+            }, out
+
+
+class TestSweepEquivalence:
+    """sweep over S scenarios ≡ S independent fits; ledgers bit-for-bit."""
+
+    LRS = (0.02, 0.05, 0.1, 0.2)
+
+    def test_lr_sweep_matches_independent_fits(self):
+        X, y, w, n = _make_problem()
+        sw = api.SweepExecutor({"lr": jnp.asarray(self.LRS)})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=30, executor=sw)
+        assert np.asarray(res.theta).shape == (4, n)
+        assert np.asarray(res.trajectory).shape == (4, 30)
+        assert isinstance(res.ledger, list) and len(res.ledger) == 4
+        for i, lr in enumerate(self.LRS):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=lr), (X, y),
+                           transport="allreduce", steps=30)
+            np.testing.assert_allclose(np.asarray(res.theta[i]),
+                                       np.asarray(solo.theta),
+                                       rtol=1e-6, atol=1e-7)
+            np.testing.assert_allclose(np.asarray(res.trajectory[i]),
+                                       np.asarray(solo.trajectory),
+                                       rtol=1e-6, atol=1e-7)
+            # acceptance: byte totals bit-for-bit
+            assert res.ledger[i].uplink_bytes == solo.ledger.uplink_bytes
+            assert res.ledger[i].downlink_bytes == solo.ledger.downlink_bytes
+            assert res.ledger[i].rounds == solo.ledger.rounds
+
+    def test_staleness_sweep_matches_independent_fits(self):
+        """S staleness levels share one depth-max(D) delay line read at a
+        batched index — one compiled executable."""
+        X, y, w, n = _make_problem()
+        Ds = (0, 1, 2, 3)
+        sw = api.SweepExecutor({"staleness": jnp.asarray(Ds)})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                      transport="delay_line", steps=40, executor=sw)
+        for i, D in enumerate(Ds):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                           transport="delay_line", staleness=D, steps=40)
+            np.testing.assert_allclose(np.asarray(res.theta[i]),
+                                       np.asarray(solo.theta),
+                                       rtol=1e-6, atol=1e-7)
+            assert res.ledger[i].total_bytes == solo.ledger.total_bytes
+
+    def test_theta0_sweep(self):
+        X, y, w, n = _make_problem()
+        theta0s = jnp.asarray(np.random.default_rng(1).normal(size=(3, n)))
+        sw = api.SweepExecutor({"theta0": theta0s})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=20, executor=sw)
+        for i in range(3):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                           transport="allreduce", steps=20,
+                           theta0=theta0s[i])
+            np.testing.assert_allclose(np.asarray(res.theta[i]),
+                                       np.asarray(solo.theta),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_pytree_theta0_sweep(self):
+        """theta0 may be a model PYTREE with batched leaves (the
+        launch/train.py param dicts), not just a flat vector."""
+        from repro.api.strategy import OptimizerStrategy
+        from repro.optim import adam
+
+        rng = np.random.default_rng(2)
+        Xb = jnp.asarray(rng.normal(size=(6, 4, 3)))
+        yb = jnp.asarray(rng.normal(size=(6, 4)))
+
+        def loss_fn(theta, batch):
+            Xt, yt = batch
+            return 0.5 * jnp.mean(((Xt @ theta["w"]) + theta["b"] - yt) ** 2)
+
+        theta0s = {
+            "w": jnp.asarray(rng.normal(size=(2, 3))),
+            "b": jnp.asarray(rng.normal(size=(2,))),
+        }
+        sw = api.SweepExecutor({"theta0": theta0s})
+        assert sw.num_scenarios == 2
+        res = api.fit(OptimizerStrategy(loss_fn, adam(0.1)), None,
+                      transport="delay_line", staleness=0,
+                      stream=(Xb, yb), executor=sw)
+        for i in range(2):
+            solo = api.fit(OptimizerStrategy(loss_fn, adam(0.1)), None,
+                           transport="delay_line", staleness=0,
+                           stream=(Xb, yb),
+                           theta0=jax.tree.map(lambda x: x[i], theta0s))
+            np.testing.assert_allclose(np.asarray(res.theta["w"][i]),
+                                       np.asarray(solo.theta["w"]),
+                                       rtol=1e-6, atol=1e-7)
+
+    def test_sweep_carry_resume(self):
+        """A swept run resumes from its batched carry."""
+        X, y, w, n = _make_problem()
+        sw = api.SweepExecutor({"lr": jnp.asarray(self.LRS)})
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", steps=30, executor=sw)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=15, executor=sw)
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=15, executor=sw,
+                    carry=a.metrics["carry"])
+        np.testing.assert_allclose(np.asarray(b.theta), np.asarray(full.theta),
+                                   rtol=1e-6, atol=1e-7)
+
+    def test_compressed_wire_sweeps(self):
+        """EF residual state batches per scenario alongside θ."""
+        X, y, w, n = _make_problem()
+        sw = api.SweepExecutor({"lr": jnp.asarray([0.05, 0.1])})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="topk:0.5+ef", steps=20,
+                      executor=sw)
+        solo = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                       transport="allreduce", wire="topk:0.5+ef", steps=20)
+        np.testing.assert_allclose(np.asarray(res.theta[0]),
+                                   np.asarray(solo.theta),
+                                   rtol=1e-6, atol=1e-7)
+        assert res.ledger[0].total_bytes == solo.ledger.total_bytes
+
+
+class TestExecutorErrors:
+    def test_unknown_executor(self):
+        with pytest.raises(ValueError, match="unknown executor"):
+            api.make_executor("cluster")
+
+    def test_bare_sweep_string_rejected(self):
+        with pytest.raises(ValueError, match="SweepExecutor"):
+            api.make_executor("sweep")
+
+    def test_sweep_needs_params(self):
+        with pytest.raises(ValueError, match="at least one"):
+            api.SweepExecutor({})
+
+    def test_sweep_scenario_count_mismatch(self):
+        with pytest.raises(ValueError, match="disagree"):
+            api.SweepExecutor({"lr": jnp.zeros(3), "l2": jnp.zeros(4)})
+
+    def test_sweep_unknown_attribute(self):
+        X, y, w, n = _make_problem(K=4)
+        sw = api.SweepExecutor({"momentum": jnp.asarray([0.1, 0.2])})
+        with pytest.raises(ValueError, match="momentum"):
+            api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=3, executor=sw)
+
+    def test_server_transport_rejects_sweep(self):
+        X, y, w, n = _make_problem(K=4)
+        sw = api.SweepExecutor({"lr": jnp.asarray([0.1, 0.2])})
+        with pytest.raises(ValueError, match="local"):
+            api.fit(api.FunctionStrategy(lambda k, t: t, num_nodes=4),
+                    transport="sequential_server",
+                    schedule=schedules.round_robin(4, 2),
+                    theta0=jnp.zeros(n), executor=sw)
+
+    def test_all_executors_listed(self):
+        assert set(api.EXECUTORS) == {"local", "mesh", "sweep"}
+
+    def test_explicit_local_is_default(self):
+        X, y, w, n = _make_problem(K=4)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=10)
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=10, executor="local")
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+        assert a.ledger.summary() == b.ledger.summary()
+
+
+class TestDynamicDelayRead:
+    """core.staleness.delay_push_read ≡ delay_push_pop at delay == depth."""
+
+    def test_matches_push_pop_at_full_depth(self):
+        from repro.core.staleness import delay_init, delay_push_pop, delay_push_read
+
+        rng = np.random.default_rng(0)
+        D = 3
+        a = delay_init(jnp.zeros(4), D)
+        b = delay_init(jnp.zeros(4), D)
+        for t in range(8):
+            g = jnp.asarray(rng.normal(size=4))
+            a, pa = delay_push_pop(a, g)
+            b, pb = delay_push_read(b, g, jnp.asarray(D))
+            np.testing.assert_array_equal(np.asarray(pa), np.asarray(pb))
+            np.testing.assert_array_equal(np.asarray(a.buffer), np.asarray(b.buffer))
+
+    def test_zero_delay_reads_fresh(self):
+        from repro.core.staleness import delay_init, delay_push_read
+
+        s = delay_init(jnp.zeros(3), 2)
+        g = jnp.asarray([1.0, 2.0, 3.0])
+        _, read = delay_push_read(s, g, jnp.asarray(0))
+        np.testing.assert_array_equal(np.asarray(read), np.asarray(g))
