@@ -1,0 +1,113 @@
+"""Serving throughput: batch-bucket size sweep × placement (local vs mesh).
+
+Drives a trained linear-GD model through ``ServeEngine``/``MicroBatcher``
+at each batch bucket and measures steady-state requests/s after warmup
+(compile excluded), plus per-request wire bytes from the inference
+ledger.  The bucket sweep is the batcher's core trade: larger buckets
+amortize dispatch, smaller ones bound padding waste and latency.  Writes
+``BENCH_serve.json`` next to the repo root for the perf trajectory; also
+pluggable into ``benchmarks.run``.
+
+Run:
+  PYTHONPATH=src python -m benchmarks.bench_serve
+  XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+      PYTHONPATH=src python -m benchmarks.bench_serve
+"""
+
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.ml.linear import lsq_loss
+from repro.serve import MicroBatcher, ServeEngine, ServeMetrics
+
+K, NK, N = 8, 64, 256
+BUCKETS = (1, 4, 16, 64)
+REQUESTS = 256
+
+
+def _trained():
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(K, NK, N)))
+    w = jnp.asarray(rng.normal(size=(N,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    strategy = api.GradientDescent(lsq_loss, lr=0.05)
+    res = api.fit(strategy, (X, y), transport="allreduce", steps=100)
+    return strategy, res
+
+
+def _throughput(engine, bucket: int, queries: np.ndarray) -> float:
+    batcher = MicroBatcher(engine, max_batch=bucket)
+    for q in queries[:bucket]:  # warmup: compile this bucket shape
+        batcher.submit(q)
+    batcher.flush()
+    engine.metrics = ServeMetrics()  # drop warmup/compile from the stats
+    t0 = time.perf_counter()
+    tickets = [batcher.submit(q) for q in queries]
+    batcher.flush()
+    for t in tickets:
+        t.result()
+    return len(queries) / (time.perf_counter() - t0)
+
+
+def run(rows):
+    strategy, res = _trained()
+    rng = np.random.default_rng(1)
+    queries = rng.normal(size=(REQUESTS, N)).astype(np.float32)
+
+    placements = {"local": None}
+    if jax.device_count() > 1:
+        placements["mesh"] = jax.make_mesh((jax.device_count(),), ("data",))
+
+    results = {
+        "workload": {"n_features": N, "requests": REQUESTS},
+        "num_devices": jax.device_count(),
+        "placements": {},
+    }
+    for pname, mesh in placements.items():
+        per_bucket = {}
+        for bucket in BUCKETS:
+            engine = ServeEngine.from_fit(res, strategy, mesh=mesh)
+            rps = _throughput(engine, bucket, queries)
+            stats = engine.stats()
+            per_bucket[bucket] = {
+                "requests_per_s": rps,
+                "p50_latency_ms": stats["p50_latency_ms"],
+                "request_bytes": stats["request_bytes"],
+                "response_bytes": stats["response_bytes"],
+            }
+            rows.append(
+                (f"serve_{pname}_b{bucket}", 1e6 / rps, f"{rps:.0f}rps")
+            )
+        results["placements"][pname] = per_bucket
+
+    best = max(
+        (b["requests_per_s"], k)
+        for k, b in results["placements"]["local"].items()
+    )
+    results["derived"] = {
+        "best_local_bucket": best[1],
+        "bucket_speedup_vs_b1": best[0]
+        / results["placements"]["local"][BUCKETS[0]]["requests_per_s"],
+    }
+    out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
+                                       "BENCH_serve.json"))
+    with open(out, "w") as f:
+        json.dump(results, f, indent=2)
+    print(f"wrote {out}")
+    return results
+
+
+if __name__ == "__main__":
+    rows: list = []
+    res = run(rows)
+    for r in rows:
+        print(f"{r[0]},{r[1]:.1f},{r[2]}")
+    print(json.dumps(res["derived"], indent=2))

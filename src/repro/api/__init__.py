@@ -12,7 +12,8 @@ package factors that observation into three orthogonal protocols:
   (``repro.api.wire``): dense · top-k · int8, each ± error feedback;
 * ``Executor``  — WHERE the fit runs (``repro.api.executor``):
   ``local`` stacked scan · ``mesh`` shard_map node placement ·
-  ``sweep`` vmapped scenario batch.
+  ``sweep`` vmapped scenario batch · ``serve`` local fit handed straight
+  to a ``repro.serve.ServeEngine`` (train→serve as an executor swap).
 
 The single entry point::
 
@@ -32,6 +33,7 @@ from repro.api.executor import (
     Executor,
     LocalExecutor,
     MeshExecutor,
+    ServingExecutor,
     SweepExecutor,
     make_executor,
 )
@@ -75,6 +77,7 @@ __all__ = [
     "Executor",
     "LocalExecutor",
     "MeshExecutor",
+    "ServingExecutor",
     "SweepExecutor",
     "EXECUTORS",
     "make_executor",

@@ -150,6 +150,7 @@ def fit(
     metrics["wire"] = w.name
     metrics["executor"] = ex.name
     metrics["carry"] = raw.carry
+    metrics.update(ex.extra_metrics())  # e.g. ServingExecutor's live engine
     return FitResult(
         theta=raw.theta, trajectory=raw.trajectory, ledger=ledger, metrics=metrics
     )

@@ -160,6 +160,11 @@ class Executor:
     def finalize(self, strategy, theta, state, data):
         return strategy.finalize(theta, state, data)
 
+    def extra_metrics(self) -> dict:
+        """Executor-specific entries merged into ``FitResult.metrics``
+        (e.g. the serving executor's live engine)."""
+        return {}
+
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length
     ):
@@ -190,6 +195,49 @@ class LocalExecutor(Executor):
 
     def run_server(self, *, step, carry, schedule):
         return jax.lax.scan(step, carry, schedule)
+
+
+class ServingExecutor(LocalExecutor):
+    """Train exactly like ``local``, then stand the finalized model up
+    behind a ``repro.serve.ServeEngine`` — the ROADMAP's train→serve
+    executor swap.  ``fit(..., executor="serve")`` returns a ``FitResult``
+    whose ``metrics["serve_engine"]`` already answers requests (and, with
+    ``registry=``/``publish_as=``, has been published first):
+
+        res = api.fit(strategy, data, transport="allreduce", steps=400,
+                      executor=api.ServingExecutor(mesh=mesh))
+        y = res.metrics["serve_engine"].predict(Xq)
+    """
+
+    name = "serve"
+
+    def __init__(
+        self, *, mesh=None, registry=None, publish_as: str | None = None,
+        **engine_kw,
+    ):
+        if (registry is None) != (publish_as is None):
+            raise ValueError(
+                "publishing needs both registry= and publish_as="
+            )
+        self._mesh = mesh
+        self._registry = registry
+        self._publish_as = publish_as
+        self._engine_kw = engine_kw
+        self.engine = None
+
+    def finalize(self, strategy, theta, state, data):
+        from repro.serve.engine import ServeEngine
+
+        final = super().finalize(strategy, theta, state, data)
+        if self._registry is not None:
+            self._registry.publish(self._publish_as, final)
+        self.engine = ServeEngine(
+            strategy, final, mesh=self._mesh, **self._engine_kw
+        )
+        return final
+
+    def extra_metrics(self) -> dict:
+        return {} if self.engine is None else {"serve_engine": self.engine}
 
 
 class MeshExecutor(Executor):
@@ -402,19 +450,23 @@ class SweepExecutor(Executor):
         return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
 
 
-EXECUTORS = ("local", "mesh", "sweep")
+EXECUTORS = ("local", "mesh", "sweep", "serve")
 
 
 def make_executor(spec: str | Executor | None) -> Executor:
     """Resolve an executor spec: an ``Executor`` instance, ``None``/"local",
-    "mesh" (nodes over all local devices / the active mesh context), or a
-    configured ``MeshExecutor(mesh)`` / ``SweepExecutor(params)``."""
+    "mesh" (nodes over all local devices / the active mesh context),
+    "serve" (local fit, finalized model handed to a ``ServeEngine``), or a
+    configured ``MeshExecutor(mesh)`` / ``SweepExecutor(params)`` /
+    ``ServingExecutor(...)``."""
     if isinstance(spec, Executor):
         return spec
     if spec is None or spec == "local":
         return LocalExecutor()
     if spec == "mesh":
         return MeshExecutor()
+    if spec == "serve":
+        return ServingExecutor()
     if spec == "sweep":
         raise ValueError(
             "the sweep executor needs scenario parameters — pass "

@@ -46,6 +46,11 @@ class Strategy:
     #: instead *override* ``aggregate`` (semantic aggregation, e.g. the
     #: cascade SVM's mask union) stay local/sweep-only.
     aggregate_op: str = "sum"
+    #: whether ``predict`` is a pure jittable function of (θ, X).  The
+    #: serve engine compiles jittable predicts once per request shape;
+    #: strategies whose predict drives its own Python loop (LM decode)
+    #: set this False and are called eagerly.
+    predict_jit: bool = True
 
     # -- setup ---------------------------------------------------------------
     def init_theta(self, data) -> PyTree:
@@ -112,6 +117,20 @@ class Strategy:
 
     def finalize(self, theta: PyTree, state, data) -> PyTree:
         return theta
+
+    # -- serving ------------------------------------------------------------
+    def predict(self, theta: PyTree, X: PyTree) -> PyTree:
+        """Answer a batch of inference requests with the trained model.
+
+        ``theta`` is a FINALIZED parameter (what ``FitResult.theta``
+        holds); ``X`` carries a leading request/batch axis and every
+        request must be independent — the serve batcher relies on
+        row-independence to pad batches without changing any answer.
+        """
+        raise NotImplementedError(
+            f"{type(self).__name__} does not implement predict() and "
+            "cannot be served"
+        )
 
     def uplink_bytes(self, msgs_hat: PyTree, data):
         """Override to report semantic (data-dependent) push cost; None →
@@ -209,6 +228,11 @@ class GradientDescent(Strategy):
 
     def summary(self, theta, data) -> dict:
         return {"loss": self.round_metric(theta, (), data)}
+
+    def predict(self, theta, X):
+        """Linear score X @ θ — regression values (lsq) or logits
+        (logistic; threshold at 0 for labels)."""
+        return X @ theta
 
 
 class _LBFGSState(NamedTuple):
@@ -334,6 +358,9 @@ class LBFGS(Strategy):
     def summary(self, theta, data) -> dict:
         return {"loss": self.round_metric(theta, (), data)}
 
+    def predict(self, theta, X):
+        return X @ theta
+
 
 class ProxStrategy(Strategy):
     """Consensus-family strategy: per-node proximity operators for the
@@ -364,10 +391,23 @@ class OptimizerStrategy(Strategy):
 
     stacked_msgs = False
 
-    def __init__(self, loss_fn: Callable, optimizer, *, has_aux: bool = False):
+    def __init__(
+        self,
+        loss_fn: Callable,
+        optimizer,
+        *,
+        has_aux: bool = False,
+        predict_fn: Callable | None = None,
+        predict_jit: bool = False,
+    ):
         self.loss_fn = loss_fn
         self.optimizer = optimizer
         self.has_aux = has_aux
+        self.predict_fn = predict_fn
+        # servability is injected per instance, so jittability rides
+        # along: False fits loop-driving decodes (LM prefill+decode);
+        # pass True for a predict_fn that is a pure jittable function
+        self.predict_jit = predict_jit
 
     def num_nodes(self, data) -> int:
         return 1
@@ -395,3 +435,15 @@ class OptimizerStrategy(Strategy):
 
     def round_metric(self, theta, state, data):
         return state[1]  # loss on the round's batch (pre-update)
+
+    def predict(self, theta, X):
+        """Serving for optimizer-trained models is workload-specific
+        (`launch/serve.prefill_and_decode` for LMs) — inject it as
+        ``predict_fn(θ, X)``; e.g. a closure over the model config that
+        decodes prompt batches."""
+        if self.predict_fn is None:
+            raise NotImplementedError(
+                "OptimizerStrategy needs predict_fn= to be served (e.g. a "
+                "prefill_and_decode closure from repro.launch.serve)"
+            )
+        return self.predict_fn(theta, X)

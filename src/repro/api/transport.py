@@ -114,7 +114,7 @@ class ServerTransport(Transport):
         (server, sstate, wstate), (traj, ups) = executor.run_server(
             step=step, carry=carry, schedule=schedule
         )
-        theta = strategy.finalize(server.theta, sstate, data)
+        theta = executor.finalize(strategy, server.theta, sstate, data)
         T = len(schedule)
         if static_up is not None:
             # exact integer accounting — large models overflow f32 mantissas
@@ -298,7 +298,9 @@ class AdmmTransport(Transport):
                 "admm_consensus needs a lossless wire (dense) — compressing "
                 "the consensus pushes would change the algorithm"
             )
-        if executor.name != "local":
+        from repro.api.executor import LocalExecutor
+
+        if not isinstance(executor, LocalExecutor):
             raise ValueError(
                 "admm_consensus wraps core.admm's own inner loop — it runs "
                 f"on the local executor only, not {executor.name!r}"
@@ -310,11 +312,12 @@ class AdmmTransport(Transport):
             local_prox, K, dim,
             rho=self.rho, g=self.g, g_lam=self.g_lam, iters=steps,
         )
+        theta = executor.finalize(strategy, res.z, res.state, data)
         # two Allreduces of the (dim,) consensus variable per iteration
         per_iter = 2 * K * wire.measure(res.z)
         ups = np.full((steps,), per_iter, dtype=np.int64)
         return RawRun(
-            theta=res.z,
+            theta=theta,
             state=res.state,
             trajectory=res.history,
             uplink=ups,

@@ -61,6 +61,26 @@ def latest_step(ckpt_dir: str) -> int | None:
     return max(steps) if steps else None
 
 
+def restore_dict(ckpt_dir: str, step: int):
+    """Restore WITHOUT a template: rebuild nested dicts from the
+    '/'-joined keys ``_flatten`` produced (a single '' key is a bare-array
+    checkpoint).  Non-dict pytrees (NamedTuples, lists) flatten to
+    positional/field keys and need ``restore(..., like=)`` instead."""
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as data:
+        flat = {k: data[k] for k in data.files}
+    if set(flat) == {""}:
+        return jax.numpy.asarray(flat[""])
+    tree: dict = {}
+    for key, arr in flat.items():
+        node = tree
+        parts = key.split("/")
+        for p in parts[:-1]:
+            node = node.setdefault(p, {})
+        node[parts[-1]] = jax.numpy.asarray(arr)
+    return tree
+
+
 def restore(ckpt_dir: str, step: int, like, *, shardings=None):
     """Restore into the structure of ``like``; optionally place leaves on
     ``shardings`` (matching pytree of NamedSharding)."""

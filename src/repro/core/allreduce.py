@@ -102,6 +102,16 @@ class CommLedger:
         self.downlink_bytes += nbytes
         self.events.append(("pull", tag, nbytes))
 
+    def record_inference(self, request: PyTree, response: PyTree, tag: str = "") -> None:
+        """One served batch under the same client-server cost model as
+        training: the clients upload their request features and download
+        the predictions — the deployment half of the paper's traffic."""
+        up = tree_bytes(request)
+        down = tree_bytes(response)
+        self.uplink_bytes += up
+        self.downlink_bytes += down
+        self.events.append(("inference", tag, up + down))
+
     def merge(self, other: "CommLedger") -> None:
         """Fold another ledger's accounting into this one."""
         self.uplink_bytes += other.uplink_bytes

@@ -322,6 +322,12 @@ class KWindowsStrategy(Strategy):
     def finalize(self, theta, state, data):
         return merge_overlapping_windows(theta)
 
+    def predict(self, theta, X):
+        """Cluster assignment of query points against the merged window
+        set (``theta`` is the finalized ``KWindows``): nearest capturing
+        window's index, or -1 for points no window captures."""
+        return assign_points(X, theta)
+
 
 def distributed_kwindows(
     key: jax.Array,

@@ -195,6 +195,11 @@ class CascadeStrategy(Strategy):
         alpha, _ = state
         return SVMModel(alpha=alpha, X=X, y=y, sv_mask=theta)
 
+    def predict(self, theta, X):
+        """Decision values f(x) for query points (``theta`` is the
+        finalized ``SVMModel``); sign(f) is the class label."""
+        return decision_function(theta, X, kernel=self.kernel)
+
 
 def cascade_svm(
     Xs: jnp.ndarray,  # (K, Nk, n)

@@ -45,6 +45,13 @@ from repro.sharding.rules import maybe_shard
 # Layer specs and segmentation
 # ----------------------------------------------------------------------------
 
+#: mixers whose caches accept T ≥ 1 appended tokens in ONE decode_step
+#: call (keys causal-masked against idx + arange(T)); the recurrent
+#: mixers (mamba / mlstm / slstm) carry single-step state and must be
+#: fed token by token.  Serving uses this to pick batched vs loop prefill.
+MULTI_TOKEN_MIXERS = ("attn", "mla")
+
+
 @dataclass(frozen=True)
 class LayerSpec:
     mixer: str  # attn | mla | mamba | mlstm | slstm

@@ -1,0 +1,39 @@
+"""``repro.serve`` — sharded batched-inference serving.
+
+The deployment half of the paper's client-server model: the devices that
+produced the training data come back with inference requests.  Train→serve
+is an executor swap (``api.fit(..., executor="serve")``), and the pieces
+compose à la carte:
+
+* ``ServeEngine``   — compiled, mesh-sharded ``Strategy.predict`` with
+  hot-swappable parameters (``repro.serve.engine``);
+* ``MicroBatcher``  — bucketed-padding request batching with timeout
+  flush (``repro.serve.batcher``);
+* ``ModelRegistry`` — name/version store over ``checkpoint/io`` with an
+  atomic LATEST pointer (``repro.serve.registry``);
+* ``ServeMetrics``  — latency/throughput + ``CommLedger`` inference-byte
+  metering (``repro.serve.metrics``).
+
+Quickstart (see ``docs/SERVING.md``)::
+
+    res = api.fit(strategy, data, transport="allreduce", steps=400)
+    registry = ModelRegistry("registry/")
+    registry.publish("linreg", res.theta)
+    engine = ServeEngine.from_registry(registry, "linreg", strategy)
+    batcher = MicroBatcher(engine, max_batch=8, timeout_s=0.005)
+    ticket = batcher.submit(x)          # one client request
+    y = ticket.result()                 # bucketed, padded, metered
+"""
+
+from repro.serve.batcher import MicroBatcher, Ticket
+from repro.serve.engine import ServeEngine
+from repro.serve.metrics import ServeMetrics
+from repro.serve.registry import ModelRegistry
+
+__all__ = [
+    "MicroBatcher",
+    "ModelRegistry",
+    "ServeEngine",
+    "ServeMetrics",
+    "Ticket",
+]

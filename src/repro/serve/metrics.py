@@ -1,0 +1,117 @@
+"""Serving metrics: per-request latency/throughput + inference traffic.
+
+The paper's recurring evaluation axis is communication cost under the
+strict client-server model; serving extends that model from training
+messages to inference traffic — every answered batch is one `inference`
+event on a ``CommLedger`` (request features up, predictions down), so a
+deployed model's bytes are accounted through the same path as the fit
+that produced it.
+"""
+
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any
+
+from repro.core.allreduce import CommLedger
+from repro.utils.tree import tree_bytes
+
+PyTree = Any
+
+#: latency percentile window — counters and bytes stay exact forever, but
+#: a long-lived server must not grow a list per request
+LATENCY_WINDOW = 4096
+
+
+def _percentile(sorted_vals: list, q: float) -> float:
+    if not sorted_vals:
+        return 0.0
+    i = min(len(sorted_vals) - 1, int(round(q * (len(sorted_vals) - 1))))
+    return sorted_vals[i]
+
+
+@dataclass
+class ServeMetrics:
+    """Latency/throughput counters + a ``CommLedger`` for inference bytes.
+
+    One ``record_batch`` call per answered microbatch; per-request latency
+    is attributed uniformly (all requests in a batch share its wall time
+    — the batching trade the batcher makes explicit).  Percentiles come
+    from a bounded window of the most recent requests; everything else is
+    an exact running total.
+    """
+
+    ledger: CommLedger = field(default_factory=CommLedger)
+    requests: int = 0
+    batches: int = 0
+    padded_slots: int = 0
+    busy_s: float = 0.0
+    started_at: float = field(default_factory=time.perf_counter)
+    latencies_s: deque = field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
+    )
+    # batches resolve concurrently (the batcher runs predict outside its
+    # lock), so counter/ledger updates must not interleave
+    _lock: threading.Lock = field(default_factory=threading.Lock, repr=False)
+    # ledger events coalesce per tag — a long-lived server must not grow
+    # one event tuple per answered batch
+    _event_idx: dict = field(default_factory=dict, repr=False)
+
+    def record_batch(
+        self,
+        n_requests: int,
+        batch_size: int,
+        latency_s: float,
+        request: PyTree,
+        response: PyTree,
+        tag: str = "serve",
+    ) -> None:
+        with self._lock:
+            self.requests += n_requests
+            self.batches += 1
+            self.padded_slots += batch_size - n_requests
+            self.busy_s += latency_s
+            self.latencies_s.extend([latency_s] * n_requests)
+            # same pricing as CommLedger.record_inference, but coalesced
+            # into ONE running event per tag (a long-lived server must not
+            # grow the event log per batch).  Updating in place — rather
+            # than append-then-pop — keeps the log consistent even when
+            # other writers share this ledger (e.g. a training loop
+            # merging its accounting in).
+            up = tree_bytes(request)
+            down = tree_bytes(response)
+            self.ledger.uplink_bytes += up
+            self.ledger.downlink_bytes += down
+            idx = self._event_idx.get(tag)
+            if idx is None:
+                self.ledger.events.append(("inference", tag, up + down))
+                self._event_idx[tag] = len(self.ledger.events) - 1
+            else:
+                kind, t, prev = self.ledger.events[idx]
+                self.ledger.events[idx] = (kind, t, prev + up + down)
+
+    def summary(self) -> dict:
+        with self._lock:
+            lat = sorted(self.latencies_s)
+            requests, batches = self.requests, self.batches
+            padded, busy = self.padded_slots, self.busy_s
+            up, down = self.ledger.uplink_bytes, self.ledger.downlink_bytes
+        slots = requests + padded
+        return {
+            "requests": requests,
+            "batches": batches,
+            "busy_s": busy,
+            "wall_s": time.perf_counter() - self.started_at,
+            # throughput while actually serving (busy time), so compile
+            # and idle gaps don't decay the stat
+            "requests_per_s": requests / max(busy, 1e-9),
+            "mean_latency_ms": 1e3 * (sum(lat) / len(lat)) if lat else 0.0,
+            "p50_latency_ms": 1e3 * _percentile(lat, 0.50),
+            "p95_latency_ms": 1e3 * _percentile(lat, 0.95),
+            "pad_fraction": (padded / slots) if slots else 0.0,
+            "request_bytes": up,
+            "response_bytes": down,
+        }

@@ -1,0 +1,164 @@
+"""Name/version model registry over ``checkpoint/io`` with atomic hot-swap.
+
+Layout (one directory per model name, versions are checkpoint steps)::
+
+    <root>/<name>/step_00000001.npz   # checkpoint.io payload
+    <root>/<name>/step_00000001.json  # checkpoint.io manifest
+    <root>/<name>/meta_00000001.json  # registry metadata (publisher info)
+    <root>/<name>/LATEST              # active version pointer
+
+``publish`` writes the payload (atomic inside ``checkpoint.io.save``),
+then flips ``LATEST`` with the same write-temp + ``os.replace`` pattern —
+a serving process that re-resolves ``latest`` between two requests sees
+either the old or the new version, never a torn state.  A finished
+``fit`` can therefore be published and picked up by a live ``ServeEngine``
+(``engine.swap(registry.load(name))``) without a process restart.
+"""
+
+from __future__ import annotations
+
+import contextlib
+import json
+import os
+import re
+import tempfile
+import time
+from typing import Any
+
+from repro.checkpoint import io as ckpt_io
+
+PyTree = Any
+
+
+class ModelRegistry:
+    """Versioned store of finalized models, keyed by name."""
+
+    def __init__(self, root: str):
+        self.root = root
+
+    def _dir(self, name: str) -> str:
+        return os.path.join(self.root, name)
+
+    # -- write side ----------------------------------------------------------
+
+    def publish(
+        self, name: str, theta: PyTree, *, meta: dict | None = None,
+        activate: bool = True,
+    ) -> int:
+        """Store ``theta`` as the next version of ``name``; with
+        ``activate`` (default) the LATEST pointer hot-swaps to it.
+        Concurrent publishers each get their own version: the number is
+        claimed with an exclusive-create sentinel before anything is
+        written, so two processes can never overwrite one payload."""
+        d = self._dir(name)
+        os.makedirs(d, exist_ok=True)
+        version = self._claim_version(name)
+        ckpt_io.save(d, version, theta)
+        # the payload now protects the number — drop our claim sentinel
+        # so publishes don't accumulate empty files forever
+        with contextlib.suppress(FileNotFoundError):
+            os.unlink(os.path.join(d, f"step_{version:08d}.claim"))
+        record = {
+            **(meta or {}),
+            # reserved manifest keys always win over user metadata
+            "name": name,
+            "version": version,
+            "published_at": time.time(),
+        }
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            json.dump(record, f)
+        os.replace(tmp, os.path.join(d, f"meta_{version:08d}.json"))
+        if activate:
+            self.set_latest(name, version)
+        return version
+
+    def _claim_version(self, name: str) -> int:
+        d = self._dir(name)
+        claimed = [
+            int(m.group(1))
+            for fn in os.listdir(d)
+            if (m := re.match(r"step_(\d+)\.(npz|claim)$", fn))
+        ]
+        version = (max(claimed) + 1) if claimed else 1
+        while True:
+            try:
+                fd = os.open(
+                    os.path.join(d, f"step_{version:08d}.claim"),
+                    os.O_CREAT | os.O_EXCL | os.O_WRONLY,
+                )
+                os.close(fd)
+                return version
+            except FileExistsError:  # another publisher got here first
+                version += 1
+
+    def set_latest(self, name: str, version: int) -> None:
+        """Atomically repoint LATEST (the hot-swap primitive)."""
+        d = self._dir(name)
+        if not os.path.exists(os.path.join(d, f"step_{version:08d}.npz")):
+            raise FileNotFoundError(
+                f"{name!r} has no published version {version}"
+            )
+        fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+        with os.fdopen(fd, "w") as f:
+            f.write(str(version))
+        os.replace(tmp, os.path.join(d, "LATEST"))
+
+    # -- read side -----------------------------------------------------------
+
+    def models(self) -> list:
+        if not os.path.isdir(self.root):
+            return []
+        return sorted(
+            n for n in os.listdir(self.root)
+            if os.path.isdir(self._dir(n)) and self.versions(n)
+        )
+
+    def versions(self, name: str) -> list:
+        d = self._dir(name)
+        if not os.path.isdir(d):
+            return []
+        return sorted(
+            int(m.group(1))
+            for fn in os.listdir(d)
+            if (m := re.match(r"step_(\d+)\.npz$", fn))
+        )
+
+    def latest(self, name: str) -> int | None:
+        """The ACTIVATED version — None until something is activated, so
+        a model only ever staged (``activate=False``) is never served by
+        default."""
+        path = os.path.join(self._dir(name), "LATEST")
+        try:
+            with open(path) as f:
+                return int(f.read().strip())
+        except FileNotFoundError:
+            return None
+
+    def resolve(self, name: str, version: int | None = None) -> int:
+        v = version if version is not None else self.latest(name)
+        if v is None or v not in self.versions(name):
+            raise FileNotFoundError(
+                f"registry has no version {version!r} of model {name!r}"
+            )
+        return v
+
+    def load(
+        self, name: str, version: int | None = None, *, like: PyTree = None,
+        shardings=None,
+    ) -> PyTree:
+        """Materialize a published model.  With ``like`` (and optional
+        ``shardings``) this is ``checkpoint.io.restore`` — exact structure
+        and placement; without it, nested-dict/bare-array thetas are
+        rebuilt from the manifest keys."""
+        v = self.resolve(name, version)
+        if like is not None:
+            return ckpt_io.restore(
+                self._dir(name), v, like, shardings=shardings
+            )
+        return ckpt_io.restore_dict(self._dir(name), v)
+
+    def meta(self, name: str, version: int | None = None) -> dict:
+        v = self.resolve(name, version)
+        with open(os.path.join(self._dir(name), f"meta_{v:08d}.json")) as f:
+            return json.load(f)

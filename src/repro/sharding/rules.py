@@ -171,3 +171,21 @@ def make_shardings(mesh: Mesh, spec_tree):
         spec_tree,
         is_leaf=lambda s: isinstance(s, P),
     )
+
+
+def place_params(mesh: Mesh, params, *, model_axis="model", fsdp_axis=None,
+                 expert_axes=None):
+    """Partition ``params`` by the name rules and put them on ``mesh`` in
+    one step.  Axis names absent from the mesh degrade to replication, so
+    callers (e.g. the serving engine) can pass any mesh — a pure-data mesh
+    simply replicates every parameter."""
+    model = model_axis if model_axis in mesh.axis_names else None
+    fsdp = fsdp_axis if fsdp_axis and fsdp_axis in mesh.axis_names else None
+    if expert_axes is not None:
+        ea = (expert_axes,) if isinstance(expert_axes, str) else expert_axes
+        if not all(a in mesh.axis_names for a in ea):
+            expert_axes = None
+    spec = partition_params(
+        params, model_axis=model, fsdp_axis=fsdp, expert_axes=expert_axes
+    )
+    return jax.device_put(params, make_shardings(mesh, spec))

@@ -367,7 +367,7 @@ class TestExecutorErrors:
                     theta0=jnp.zeros(n), executor=sw)
 
     def test_all_executors_listed(self):
-        assert set(api.EXECUTORS) == {"local", "mesh", "sweep"}
+        assert set(api.EXECUTORS) == {"local", "mesh", "sweep", "serve"}
 
     def test_explicit_local_is_default(self):
         X, y, w, n = _make_problem(K=4)

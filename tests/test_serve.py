@@ -1,0 +1,796 @@
+"""Serving-subsystem tests: the train→serve executor swap.
+
+* ``Strategy.predict`` protocol — linear GD, k-windows cluster
+  assignment, cascade-SVM decision values, LM decode closures.
+* ``ServeEngine`` — fit → publish → serve round trips, hot-swap,
+  inference byte metering through ``CommLedger``.
+* ``MicroBatcher`` — bucketed-padding batches answer bit-exactly what
+  per-request calls answer; timeout flush; static compiled-shape set.
+* ``ModelRegistry`` — round-trip through ``checkpoint/io``, atomic
+  LATEST hot-swap.
+* 8-fake-device acceptance in a subprocess: mesh-sharded params, with
+  per-request bytes visible on the ledger.
+"""
+
+import dataclasses
+import json
+import os
+import subprocess
+import sys
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.core.allreduce import CommLedger
+from repro.core.schedules import round_robin
+from repro.ml.linear import lsq_loss
+from repro.serve import MicroBatcher, ModelRegistry, ServeEngine, ServeMetrics
+from repro.utils.tree import tree_bytes
+
+
+def _linear_problem(K=8, Nk=10, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    return X, y, w, n
+
+
+@pytest.fixture(scope="module")
+def gd_fit():
+    X, y, w, n = _linear_problem()
+    strategy = api.GradientDescent(lsq_loss, lr=0.1)
+    res = api.fit(strategy, (X, y), transport="allreduce", steps=150)
+    return strategy, res, n
+
+
+@pytest.fixture(scope="module")
+def kwindows_fit():
+    from repro.ml.kwindows import KWindowsStrategy
+
+    rng = np.random.default_rng(1)
+    centers = rng.normal(size=(3, 2)) * 4.0
+    Xs = jnp.asarray(
+        centers[rng.integers(0, 3, size=(4, 64))]
+        + rng.normal(size=(4, 64, 2)) * 0.3
+    )
+    strategy = KWindowsStrategy(jax.random.key(0), num_windows=6, r=1.0)
+    res = api.fit(strategy, Xs, transport="sequential_server",
+                  schedule=round_robin(4, 1))
+    return strategy, res, jnp.asarray(centers, dtype=jnp.float32)
+
+
+# ----------------------------------------------------------------------------
+# Strategy.predict protocol
+# ----------------------------------------------------------------------------
+
+
+class TestPredictProtocol:
+    def test_gd_linear_score(self, gd_fit):
+        strategy, res, n = gd_fit
+        Xq = jnp.asarray(np.random.default_rng(2).normal(size=(7, n)))
+        np.testing.assert_array_equal(
+            np.asarray(strategy.predict(res.theta, Xq)),
+            np.asarray(Xq @ res.theta),
+        )
+
+    def test_kwindows_cluster_assignment(self, kwindows_fit):
+        strategy, res, centers = kwindows_fit
+        labels = strategy.predict(res.theta, centers)
+        # every true center is captured by some merged window
+        assert bool(jnp.all(labels >= 0))
+        far = jnp.full((2, 2), 100.0)
+        np.testing.assert_array_equal(
+            np.asarray(strategy.predict(res.theta, far)), [-1, -1]
+        )
+
+    def test_cascade_svm_decision_values(self):
+        from repro.ml.svm import CascadeStrategy, decision_function
+
+        rng = np.random.default_rng(3)
+        Xs = jnp.asarray(rng.normal(size=(4, 8, 2)))
+        ys = jnp.sign(Xs[..., 0] + Xs[..., 1] + 1e-3)
+        strategy = CascadeStrategy(C=1.0, iters=50)
+        res = api.fit(strategy, (Xs, ys), transport="allreduce", steps=2)
+        Xq = jnp.asarray(rng.normal(size=(9, 2)))
+        np.testing.assert_array_equal(
+            np.asarray(strategy.predict(res.theta, Xq)),
+            np.asarray(decision_function(res.theta, Xq)),
+        )
+
+    def test_base_strategy_not_servable(self):
+        with pytest.raises(NotImplementedError, match="cannot be served"):
+            api.Strategy().predict(jnp.zeros(3), jnp.zeros((2, 3)))
+
+    def test_optimizer_strategy_needs_predict_fn(self):
+        s = api.OptimizerStrategy(lambda t, b: 0.0, None)
+        with pytest.raises(NotImplementedError, match="predict_fn"):
+            s.predict(jnp.zeros(3), jnp.zeros((2, 3)))
+
+
+# ----------------------------------------------------------------------------
+# ServeEngine
+# ----------------------------------------------------------------------------
+
+
+class TestServeEngine:
+    def test_from_fit_predicts(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        Xq = jnp.asarray(
+            np.random.default_rng(4).normal(size=(5, n)).astype(np.float32)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(engine.predict(Xq)), np.asarray(Xq @ res.theta)
+        )
+
+    def test_inference_bytes_metered(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        Xq = jnp.zeros((6, n), jnp.float32)
+        Y = engine.predict(Xq)
+        assert engine.ledger.uplink_bytes == tree_bytes(Xq)
+        assert engine.ledger.downlink_bytes == tree_bytes(Y)
+        assert engine.ledger.events[0][0] == "inference"
+        assert engine.stats()["requests"] == 6
+
+    def test_valid_rows_trimmed_and_metered(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        Xq = jnp.zeros((8, n), jnp.float32)
+        Y = engine.predict(Xq, valid=3)
+        assert Y.shape == (3,)
+        assert engine.ledger.uplink_bytes == 3 * n * 4  # only real requests
+        assert engine.metrics.padded_slots == 5
+
+    def test_hot_swap_changes_predictions(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        Xq = jnp.ones((2, n), jnp.float32)
+        before = np.asarray(engine.predict(Xq))
+        engine.swap(2.0 * res.theta)
+        np.testing.assert_allclose(
+            np.asarray(engine.predict(Xq)), 2.0 * before, rtol=1e-6
+        )
+
+    def test_swap_rejects_structure_change(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        with pytest.raises(ValueError, match="structure"):
+            engine.swap({"w": res.theta})
+
+    def test_shared_metrics_across_engines(self, gd_fit):
+        strategy, res, n = gd_fit
+        metrics = ServeMetrics()
+        a = ServeEngine.from_fit(res, strategy, metrics=metrics, tag="a")
+        b = ServeEngine.from_fit(res, strategy, metrics=metrics, tag="b")
+        a.predict(jnp.zeros((2, n), jnp.float32))
+        b.predict(jnp.zeros((3, n), jnp.float32))
+        assert metrics.requests == 5
+        assert [e[1] for e in metrics.ledger.events] == ["a", "b"]
+
+
+# ----------------------------------------------------------------------------
+# MicroBatcher
+# ----------------------------------------------------------------------------
+
+
+class TestMicroBatcher:
+    def test_padding_invariance_bit_exact(self, gd_fit):
+        """Padded bucketed batches answer exactly what unpadded
+        per-request predicts answer."""
+        strategy, res, n = gd_fit
+        rng = np.random.default_rng(5)
+        for count in (1, 2, 3, 5, 7):
+            engine = ServeEngine.from_fit(res, strategy)
+            batcher = MicroBatcher(engine, max_batch=8)
+            xs = [rng.normal(size=(n,)).astype(np.float32) for _ in range(count)]
+            tickets = [batcher.submit(x) for x in xs]
+            batcher.flush()
+            got = np.asarray([t.result() for t in tickets])
+            ref = np.asarray([
+                np.asarray(engine.predict(jnp.asarray(x)[None]))[0] for x in xs
+            ])
+            np.testing.assert_array_equal(got, ref)
+
+    def test_padded_slots_not_metered(self, gd_fit):
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        batcher = MicroBatcher(engine, max_batch=8)
+        for _ in range(3):  # bucket 4 → one padded slot
+            batcher.submit(np.zeros(n, np.float32))
+        batcher.flush()
+        assert engine.ledger.uplink_bytes == 3 * n * 4
+        assert engine.metrics.padded_slots == 1
+
+    def test_static_shape_set(self):
+        """Ragged traffic lowers to |shape groups| × |buckets| shapes."""
+        seen = []
+
+        def predict(X):
+            seen.append(X.shape)
+            return X.sum(axis=tuple(range(1, X.ndim)))
+
+        batcher = MicroBatcher(predict, max_batch=4)
+        rng = np.random.default_rng(6)
+        for count in (1, 3, 2, 4, 3, 1):  # ragged arrival pattern
+            for _ in range(count):
+                batcher.submit(rng.normal(size=(5,)).astype(np.float32))
+            batcher.flush()
+        for _ in range(3):  # a second shape group
+            batcher.submit(rng.normal(size=(9,)).astype(np.float32))
+        batcher.flush()
+        assert set(s[0] for s in seen) <= {1, 2, 4}
+        assert set(s[1:] for s in seen) == {(5,), (9,)}
+
+    def test_max_batch_auto_flush(self):
+        calls = []
+        batcher = MicroBatcher(lambda X: (calls.append(len(X)), X)[1],
+                               max_batch=4)
+        tickets = [batcher.submit(np.zeros(2, np.float32)) for _ in range(4)]
+        assert calls == [4]  # flushed without an explicit flush()
+        assert all(t.done for t in tickets)
+
+    def test_timeout_flush_with_injected_clock(self):
+        now = [0.0]
+        batcher = MicroBatcher(lambda X: X, max_batch=8, timeout_s=0.5,
+                               clock=lambda: now[0])
+        batcher.submit(np.zeros(2, np.float32))
+        assert batcher.poll() == 0  # younger than the timeout
+        now[0] = 0.6
+        assert batcher.poll() == 1
+        assert batcher.pending() == 0
+
+    def test_ticket_result_forces_service(self):
+        batcher = MicroBatcher(lambda X: 2.0 * X, max_batch=8)
+        t = batcher.submit(np.ones(3, np.float32))
+        assert not t.done
+        np.testing.assert_array_equal(np.asarray(t.result()), 2.0 * np.ones(3))
+
+    def test_bucket_resolution(self):
+        batcher = MicroBatcher(lambda X: X, max_batch=8)
+        assert batcher.buckets == (1, 2, 4, 8)
+        assert [batcher.bucket_for(k) for k in (1, 2, 3, 5, 8)] == [1, 2, 4, 8, 8]
+
+    def test_inconsistent_buckets_rejected(self):
+        """Explicit buckets that contradict max_batch must raise, not be
+        silently clamped."""
+        with pytest.raises(ValueError, match="largest bucket"):
+            MicroBatcher(lambda X: X, max_batch=16, buckets=(2, 4))
+        b = MicroBatcher(lambda X: X, max_batch=4, buckets=(2, 4))
+        assert b.buckets == (2, 4) and b.max_batch == 4
+
+    def test_predict_runs_outside_the_lock(self):
+        """A slow predict must not block submits of other shape groups."""
+        import threading
+
+        started, release = threading.Event(), threading.Event()
+
+        def slow(X):
+            started.set()
+            assert release.wait(timeout=5)
+            return X
+
+        batcher = MicroBatcher(slow, max_batch=8)
+        batcher.submit(np.zeros(3, np.float32))
+        flusher = threading.Thread(target=batcher.flush)
+        flusher.start()
+        try:
+            assert started.wait(timeout=5)
+            batcher.submit(np.zeros(5, np.float32))  # would deadlock before
+            assert batcher.pending() == 1
+        finally:
+            release.set()
+            flusher.join(timeout=5)
+        assert not flusher.is_alive()
+
+    def test_result_waits_for_in_flight_batch(self):
+        """result() on a ticket whose batch another thread is already
+        serving must wait for the real answer, not return None."""
+        import threading
+
+        release = threading.Event()
+
+        def slow(X):
+            assert release.wait(timeout=5)
+            return 2.0 * X
+
+        batcher = MicroBatcher(slow, max_batch=8)
+        t = batcher.submit(np.ones(3, np.float32))
+        flusher = threading.Thread(target=batcher.flush)
+        flusher.start()  # pops the group and blocks inside predict
+        try:
+            with pytest.raises(TimeoutError):
+                t.result(timeout=0.05)  # in flight, not yet resolved
+            release.set()
+            np.testing.assert_array_equal(np.asarray(t.result(timeout=5)),
+                                          2.0 * np.ones(3))
+        finally:
+            release.set()
+            flusher.join(timeout=5)
+
+    def test_concurrent_submits_never_overshoot_buckets(self):
+        """Racing submits must not grow a group past max_batch (which
+        would serve an unbucketed shape and force a fresh compile)."""
+        import threading
+
+        sizes = []
+
+        def predict(X):
+            sizes.append(len(X))
+            return X
+
+        batcher = MicroBatcher(predict, max_batch=4)
+        barrier = threading.Barrier(8)
+
+        def client():
+            barrier.wait()
+            for _ in range(25):
+                batcher.submit(np.zeros(2, np.float32))
+
+        threads = [threading.Thread(target=client) for _ in range(8)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=10)
+        batcher.flush()
+        assert sizes and set(sizes) <= set(batcher.buckets)
+
+    def test_concurrent_clients_meter_exactly(self, gd_fit):
+        """Counter/ledger updates must not interleave when batches
+        resolve on several client threads at once."""
+        import threading
+
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        batcher = MicroBatcher(engine, max_batch=4)
+        per_thread, n_threads = 20, 6
+        barrier = threading.Barrier(n_threads)
+
+        def client():
+            barrier.wait()
+            for _ in range(per_thread):
+                batcher.submit(np.zeros(n, np.float32))
+
+        threads = [threading.Thread(target=client) for _ in range(n_threads)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join(timeout=10)
+        batcher.flush()
+        total = per_thread * n_threads
+        assert engine.metrics.requests == total
+        assert engine.ledger.uplink_bytes == total * n * 4
+
+    def test_predict_failure_propagates_to_tickets(self):
+        """A failing predict resolves every ticket with the error — no
+        request is silently lost as a None result."""
+
+        def broken(X):
+            raise RuntimeError("model exploded")
+
+        batcher = MicroBatcher(broken, max_batch=8)
+        t1 = batcher.submit(np.zeros(3, np.float32))
+        t2 = batcher.submit(np.zeros(3, np.float32))
+        with pytest.raises(RuntimeError, match="exploded"):
+            batcher.flush()
+        assert t1.done and t2.done
+        with pytest.raises(RuntimeError, match="exploded"):
+            t1.result()
+        assert batcher.pending() == 0
+
+
+# ----------------------------------------------------------------------------
+# ModelRegistry
+# ----------------------------------------------------------------------------
+
+
+class TestModelRegistry:
+    def test_round_trip_bare_array(self, tmp_path, gd_fit):
+        _, res, _ = gd_fit
+        reg = ModelRegistry(str(tmp_path))
+        v = reg.publish("lin", res.theta)
+        assert v == 1
+        np.testing.assert_array_equal(
+            np.asarray(reg.load("lin")), np.asarray(res.theta)
+        )
+
+    def test_round_trip_dict_tree(self, tmp_path):
+        reg = ModelRegistry(str(tmp_path))
+        theta = {"a": {"w": jnp.arange(6.0).reshape(2, 3)}, "b": jnp.ones(2)}
+        reg.publish("m", theta)
+        out = reg.load("m")
+        np.testing.assert_array_equal(np.asarray(out["a"]["w"]),
+                                      np.asarray(theta["a"]["w"]))
+        np.testing.assert_array_equal(np.asarray(out["b"]),
+                                      np.asarray(theta["b"]))
+
+    def test_round_trip_namedtuple_with_like(self, tmp_path, kwindows_fit):
+        _, res, _ = kwindows_fit
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("kw", res.theta)
+        out = reg.load("kw", like=res.theta)
+        assert type(out).__name__ == "KWindows"
+        np.testing.assert_array_equal(np.asarray(out.centers),
+                                      np.asarray(res.theta.centers))
+
+    def test_versioning_and_hot_swap(self, tmp_path):
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("m", jnp.zeros(3))
+        reg.publish("m", jnp.ones(3))
+        assert reg.versions("m") == [1, 2]
+        assert reg.latest("m") == 2
+        reg.set_latest("m", 1)  # atomic rollback
+        np.testing.assert_array_equal(np.asarray(reg.load("m")), np.zeros(3))
+        with open(os.path.join(str(tmp_path), "m", "LATEST")) as f:
+            assert f.read().strip() == "1"
+
+    def test_publish_without_activate_keeps_pointer(self, tmp_path):
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("m", jnp.zeros(3))
+        reg.publish("m", jnp.ones(3), activate=False)
+        assert reg.latest("m") == 1
+        assert reg.versions("m") == [1, 2]
+
+    def test_staged_only_model_is_not_served(self, tmp_path):
+        """activate=False on a fresh name must not become 'latest'."""
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("dark", jnp.zeros(3), activate=False)
+        assert reg.latest("dark") is None
+        with pytest.raises(FileNotFoundError):
+            reg.load("dark")
+        np.testing.assert_array_equal(  # explicit version still loads
+            np.asarray(reg.load("dark", 1)), np.zeros(3)
+        )
+
+    def test_engine_hot_swaps_from_registry(self, tmp_path, gd_fit):
+        strategy, res, n = gd_fit
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("lin", res.theta)
+        engine = ServeEngine.from_registry(reg, "lin", strategy)
+        Xq = jnp.ones((2, n), jnp.float32)
+        before = np.asarray(engine.predict(Xq))
+        reg.publish("lin", 3.0 * res.theta)  # new version goes live
+        engine.swap(reg.load("lin"))
+        np.testing.assert_allclose(np.asarray(engine.predict(Xq)),
+                                   3.0 * before, rtol=1e-6)
+
+    def test_publish_skips_claimed_versions(self, tmp_path):
+        """A version another publisher has claimed (sentinel present but
+        payload not yet written) is never reused."""
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("m", jnp.zeros(3))
+        open(os.path.join(str(tmp_path), "m", "step_00000002.claim"),
+             "w").close()
+        assert reg.publish("m", jnp.ones(3)) == 3
+        assert reg.versions("m") == [1, 3]
+        assert reg.latest("m") == 3
+
+    def test_meta_and_models(self, tmp_path):
+        reg = ModelRegistry(str(tmp_path))
+        reg.publish("m", jnp.zeros(3), meta={"transport": "allreduce"})
+        assert reg.meta("m")["transport"] == "allreduce"
+        assert reg.models() == ["m"]
+
+    def test_missing_version_raises(self, tmp_path):
+        reg = ModelRegistry(str(tmp_path))
+        with pytest.raises(FileNotFoundError):
+            reg.load("ghost")
+        reg.publish("m", jnp.zeros(3))
+        with pytest.raises(FileNotFoundError):
+            reg.set_latest("m", 7)
+
+
+# ----------------------------------------------------------------------------
+# CommLedger inference pricing
+# ----------------------------------------------------------------------------
+
+
+class TestInferenceLedger:
+    def test_priced_like_training_messages(self):
+        led = CommLedger()
+        req = jnp.zeros((4, 16), jnp.float32)
+        resp = jnp.zeros((4,), jnp.float32)
+        led.record_inference(req, resp, tag="q")
+        assert led.uplink_bytes == 4 * 16 * 4
+        assert led.downlink_bytes == 4 * 4
+        assert led.events == [("inference", "q", 4 * 16 * 4 + 4 * 4)]
+
+    def test_merges_with_training_ledger(self, gd_fit):
+        """One accounting path: a fit's ledger absorbs serving traffic."""
+        strategy, res, n = gd_fit
+        engine = ServeEngine.from_fit(res, strategy)
+        engine.predict(jnp.zeros((2, n), jnp.float32))
+        total = CommLedger()
+        total.merge(res.ledger)
+        total.merge(engine.ledger)
+        assert total.uplink_bytes == (
+            res.ledger.uplink_bytes + engine.ledger.uplink_bytes
+        )
+        kinds = {e[0] for e in total.events}
+        assert "inference" in kinds and len(kinds) > 1
+
+
+# ----------------------------------------------------------------------------
+# Vectorized prefill (launch/serve satellite)
+# ----------------------------------------------------------------------------
+
+
+class TestVectorizedPrefill:
+    @pytest.mark.parametrize("arch", ["qwen2-1.5b", "minicpm3-4b"])
+    def test_batched_matches_loop(self, arch):
+        """One batched prefill call ≡ the token loop, for plain attention
+        (qwen2) and MLA (minicpm3) cache appends."""
+        from repro.configs import get_config
+        from repro.launch import serve as sv
+        from repro.models import transformer as tf
+
+        cfg = dataclasses.replace(
+            get_config(arch).reduced(), compute_dtype="float32"
+        )
+        assert sv.batched_prefill_supported(cfg)
+        params = tf.init_params(jax.random.key(0), cfg)
+        prompts = jax.random.randint(
+            jax.random.key(1), (3, 12), 0, cfg.vocab_size
+        )
+        loop = sv.prefill_and_decode(
+            cfg, params, prompts, gen=5, cache_len=20, prefill="loop"
+        )
+        batched = sv.prefill_and_decode(
+            cfg, params, prompts, gen=5, cache_len=20, prefill="batched"
+        )
+        np.testing.assert_array_equal(np.asarray(loop), np.asarray(batched))
+
+    def test_sampled_decode_is_padding_invariant(self):
+        """temperature > 0 uses per-row sample keys, so appending padded
+        rows cannot change a real request's tokens."""
+        from repro.configs import get_config
+        from repro.launch import serve as sv
+        from repro.models import transformer as tf
+
+        cfg = dataclasses.replace(
+            get_config("qwen2-1.5b").reduced(), compute_dtype="float32"
+        )
+        params = tf.init_params(jax.random.key(0), cfg)
+        prompts = jax.random.randint(jax.random.key(1), (3, 6), 0,
+                                     cfg.vocab_size)
+        padded = jnp.concatenate([prompts, prompts[-1:]])  # bucket pad
+        a = sv.prefill_and_decode(cfg, params, prompts, gen=4, cache_len=12,
+                                  temperature=0.8)
+        b = sv.prefill_and_decode(cfg, params, padded, gen=4, cache_len=12,
+                                  temperature=0.8)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b[:3]))
+
+    def test_recurrent_archs_keep_the_loop(self):
+        from repro.configs import get_config
+        from repro.launch import serve as sv
+
+        cfg = get_config("xlstm-125m").reduced()
+        assert not sv.batched_prefill_supported(cfg)
+        with pytest.raises(ValueError, match="recurrent"):
+            sv.prefill_and_decode(
+                cfg, None, jnp.zeros((1, 4), jnp.int32), gen=1, cache_len=8,
+                prefill="batched",
+            )
+
+
+# ----------------------------------------------------------------------------
+# ServingExecutor: train→serve as an executor swap
+# ----------------------------------------------------------------------------
+
+
+class TestServingExecutor:
+    def test_fit_returns_live_engine(self, gd_fit):
+        strategy, ref, n = gd_fit
+        X, y, w, _ = _linear_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=150, executor="serve")
+        engine = res.metrics["serve_engine"]
+        assert isinstance(engine, ServeEngine)
+        Xq = jnp.ones((2, n), jnp.float32)
+        np.testing.assert_array_equal(np.asarray(engine.predict(Xq)),
+                                      np.asarray(Xq @ ref.theta))
+
+    def test_server_transport_finalizes_through_executor(self, kwindows_fit):
+        """k-windows trains on a server transport; executor="serve" hands
+        its MERGED windows to the engine."""
+        from repro.ml.kwindows import KWindowsStrategy
+
+        strategy, ref, centers = kwindows_fit
+        Xs_strategy = KWindowsStrategy(jax.random.key(0), num_windows=6, r=1.0)
+        rng = np.random.default_rng(1)
+        cs = rng.normal(size=(3, 2)) * 4.0
+        Xs = jnp.asarray(
+            cs[rng.integers(0, 3, size=(4, 64))]
+            + rng.normal(size=(4, 64, 2)) * 0.3
+        )
+        res = api.fit(Xs_strategy, Xs, transport="sequential_server",
+                      schedule=round_robin(4, 1), executor="serve")
+        engine = res.metrics["serve_engine"]
+        labels = engine.predict(jnp.asarray(cs, dtype=jnp.float32))
+        assert bool(jnp.all(labels >= 0))
+
+    def test_publishes_when_given_registry(self, tmp_path, gd_fit):
+        X, y, w, n = _linear_problem()
+        reg = ModelRegistry(str(tmp_path))
+        ex = api.ServingExecutor(registry=reg, publish_as="lin")
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=20, executor=ex)
+        assert reg.latest("lin") == 1
+        np.testing.assert_array_equal(np.asarray(reg.load("lin")),
+                                      np.asarray(res.theta))
+
+    def test_registry_needs_name(self):
+        with pytest.raises(ValueError, match="publish_as"):
+            api.ServingExecutor(registry=ModelRegistry("/tmp/x"))
+
+    def test_registered_in_executor_table(self):
+        assert "serve" in api.EXECUTORS
+        assert isinstance(api.make_executor("serve"), api.ServingExecutor)
+
+    def test_admm_accepts_serving_executor(self, tmp_path):
+        """The executor swap covers admm_consensus too: the consensus z
+        trains locally and is published/stood up like any other theta."""
+        from repro.ml.linear import lasso_prox_builder
+
+        X, y, w, n = _linear_problem(K=4)
+        reg = ModelRegistry(str(tmp_path))
+        ex = api.ServingExecutor(registry=reg, publish_as="lasso")
+        res = api.fit(api.ProxStrategy(lasso_prox_builder), (X, y),
+                      transport="admm_consensus", steps=10, g="l1",
+                      g_lam=0.1, executor=ex)
+        assert reg.latest("lasso") == 1
+        assert "serve_engine" in res.metrics
+        np.testing.assert_array_equal(np.asarray(reg.load("lasso")),
+                                      np.asarray(res.theta))
+
+
+# ----------------------------------------------------------------------------
+# CLI
+# ----------------------------------------------------------------------------
+
+
+class TestServeCLI:
+    def test_strategy_path_publishes_and_serves(self, tmp_path):
+        from repro.launch import serve as serve_mod
+
+        preds = serve_mod.main(
+            ["--strategy", "gd", "--registry", str(tmp_path),
+             "--requests", "5", "--batch", "4"]
+        )
+        assert len(preds) == 5
+        reg = ModelRegistry(str(tmp_path))
+        assert reg.latest("gd") == 1
+
+
+# ----------------------------------------------------------------------------
+# Acceptance: 8 fake devices, mesh-sharded serving
+# ----------------------------------------------------------------------------
+
+
+class TestServeMeshEightDevices:
+    """fit → publish → serve with params placed on a ("data", "model")
+    mesh over 8 fake CPU devices, bytes visible on the ledger (XLA device
+    count is fixed at jax init, so this runs in a subprocess)."""
+
+    SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import tempfile
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import api
+from repro.core.schedules import round_robin
+from repro.ml.kwindows import KWindowsStrategy
+from repro.ml.linear import lsq_loss
+from repro.serve import MicroBatcher, ModelRegistry, ServeEngine
+
+rng = np.random.default_rng(0)
+out = {"num_devices": jax.device_count()}
+mesh = jax.make_mesh((4, 2), ("data", "model"))
+reg = ModelRegistry(tempfile.mkdtemp())
+
+# linear GD: trained on the mesh executor, served on the same mesh
+X = jnp.asarray(rng.normal(size=(8, 10, 5)))
+w = jnp.asarray(rng.normal(size=(5,)))
+y = jnp.einsum("kni,i->kn", X, w)
+gd = api.GradientDescent(lsq_loss, lr=0.1)
+res = api.fit(gd, (X, y), transport="allreduce", steps=100, executor="mesh")
+reg.publish("lin", res.theta)
+eng = ServeEngine.from_registry(reg, "lin", gd, mesh=mesh)
+local = ServeEngine(gd, res.theta)
+Xq = jnp.asarray(rng.normal(size=(6, 5)).astype(np.float32))
+bat = MicroBatcher(eng, max_batch=8)
+tickets = [bat.submit(np.asarray(x)) for x in Xq]
+bat.flush()
+got = np.asarray([t.result() for t in tickets])
+out["gd"] = {
+    "matches_local": bool(np.allclose(got, np.asarray(local.predict(Xq)),
+                                      rtol=1e-6, atol=1e-7)),
+    "uplink": eng.ledger.uplink_bytes,
+    "downlink": eng.ledger.downlink_bytes,
+    "events": [e[0] for e in eng.ledger.events],
+}
+
+# k-windows: server-transport fit, mesh-served cluster assignment
+centers = rng.normal(size=(3, 2)) * 4.0
+Xs = jnp.asarray(centers[rng.integers(0, 3, size=(4, 64))]
+                 + rng.normal(size=(4, 64, 2)) * 0.3)
+kw = KWindowsStrategy(jax.random.key(0), num_windows=6, r=1.0)
+rkw = api.fit(kw, Xs, transport="sequential_server",
+              schedule=round_robin(4, 1))
+reg.publish("kw", rkw.theta)
+ekw = ServeEngine.from_registry(reg, "kw", kw, like=rkw.theta, mesh=mesh)
+labels = ekw.predict(jnp.asarray(centers, dtype=jnp.float32))
+lref = ServeEngine(kw, rkw.theta).predict(jnp.asarray(centers, dtype=jnp.float32))
+out["kwindows"] = {
+    "matches_local": bool(np.array_equal(np.asarray(labels), np.asarray(lref))),
+    "uplink": ekw.ledger.uplink_bytes,
+}
+print(json.dumps(out))
+"""
+
+    def test_fit_publish_serve_on_8_devices(self):
+        src = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["JAX_PLATFORMS"] = "cpu"
+        proc = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["num_devices"] == 8
+        assert out["gd"]["matches_local"], out
+        assert out["gd"]["uplink"] == 6 * 5 * 4  # 6 requests × 5 f32 features
+        assert out["gd"]["downlink"] == 6 * 4
+        assert out["gd"]["events"] == ["inference"]
+        assert out["kwindows"]["matches_local"], out
+        assert out["kwindows"]["uplink"] == 3 * 2 * 4
+
+
+# ----------------------------------------------------------------------------
+# LM decode through the engine (host mesh; heavier compile kept small)
+# ----------------------------------------------------------------------------
+
+
+class TestLMServing:
+    def test_lm_decode_engine_with_batcher(self):
+        from repro.api.strategy import OptimizerStrategy
+        from repro.configs import get_config
+        from repro.launch.mesh import make_host_mesh
+        from repro.launch.serve import lm_predict_fn
+        from repro.models import transformer as tf
+
+        cfg = dataclasses.replace(
+            get_config("qwen2-1.5b").reduced(), compute_dtype="float32"
+        )
+        params = tf.init_params(jax.random.key(0), cfg)
+        strategy = OptimizerStrategy(
+            None, None, predict_fn=lm_predict_fn(cfg, gen=3)
+        )
+        assert not strategy.predict_jit
+        engine = ServeEngine(strategy, params, mesh=make_host_mesh())
+        prompts = jax.random.randint(jax.random.key(1), (3, 8), 0,
+                                     cfg.vocab_size)
+        batcher = MicroBatcher(engine, max_batch=4)
+        tickets = [batcher.submit(np.asarray(p)) for p in prompts]
+        batcher.flush()
+        got = np.asarray([t.result() for t in tickets])
+        ref = np.asarray(strategy.predict(params, prompts))
+        np.testing.assert_array_equal(got, ref)
+        # prompts up (int32), generated ids down
+        assert engine.ledger.uplink_bytes == 3 * 8 * 4
+        assert engine.ledger.downlink_bytes == 3 * 3 * 4
