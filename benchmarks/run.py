@@ -23,6 +23,7 @@ def main() -> None:
         bench_fit_executors,
         bench_gp_experts,
         bench_kernels,
+        bench_multipod,
         bench_serve,
         bench_staleness,
     )
@@ -33,6 +34,7 @@ def main() -> None:
         "admm": bench_admm,
         "compression": bench_compression,
         "fit_executors": bench_fit_executors,
+        "multipod": bench_multipod,
         "serve": bench_serve,
         "cascade_svm": bench_cascade_svm,
         "gp_experts": bench_gp_experts,

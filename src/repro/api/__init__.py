@@ -12,8 +12,10 @@ package factors that observation into three orthogonal protocols:
   (``repro.api.wire``): dense · top-k · int8, each ± error feedback;
 * ``Executor``  — WHERE the fit runs (``repro.api.executor``):
   ``local`` stacked scan · ``mesh`` shard_map node placement ·
-  ``sweep`` vmapped scenario batch · ``serve`` local fit handed straight
-  to a ``repro.serve.ServeEngine`` (train→serve as an executor swap).
+  ``multipod`` hierarchical ``("pod", "data")`` placement with per-hop
+  ``CommLedger`` pricing · ``sweep`` vmapped scenario batch · ``serve``
+  local fit handed straight to a ``repro.serve.ServeEngine``
+  (train→serve as an executor swap).
 
 The single entry point::
 
@@ -33,6 +35,7 @@ from repro.api.executor import (
     Executor,
     LocalExecutor,
     MeshExecutor,
+    MultiPodExecutor,
     ServingExecutor,
     SweepExecutor,
     make_executor,
@@ -53,7 +56,13 @@ from repro.api.transport import (
     UpdateTransport,
     make_transport,
 )
-from repro.api.wire import CompressedWire, DenseWire, Wire, make_wire
+from repro.api.wire import (
+    CompressedWire,
+    DenseWire,
+    ThresholdWire,
+    Wire,
+    make_wire,
+)
 
 __all__ = [
     "fit",
@@ -73,10 +82,12 @@ __all__ = [
     "Wire",
     "DenseWire",
     "CompressedWire",
+    "ThresholdWire",
     "make_wire",
     "Executor",
     "LocalExecutor",
     "MeshExecutor",
+    "MultiPodExecutor",
     "ServingExecutor",
     "SweepExecutor",
     "EXECUTORS",

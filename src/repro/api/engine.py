@@ -3,7 +3,8 @@
     fit(strategy, data, transport=..., wire=..., executor=..., schedule=...)
 
 runs any (strategy × transport × wire) combination on a chosen executor
-(`local` stacked scan / `mesh` shard_map placement / `sweep` vmapped
+(`local` stacked scan / `mesh` shard_map placement / `multipod`
+hierarchical pod placement with per-hop ledger pricing / `sweep` vmapped
 scenario batch — see ``repro.api.executor``) inside one jit/scan-able
 engine and returns a uniform ``FitResult``.  The engine owns what every
 historical entry point used to reimplement by hand: the scan loop (via
@@ -112,6 +113,10 @@ def fit(
 
     ups = np.asarray(raw.uplink)
     downs = np.asarray(raw.downlink)
+    # topology-aware executors decompose the flat totals by reduction
+    # tier (intra-pod vs inter-pod), priced per hop — same totals, now
+    # attributed to the link each byte crossed
+    hop_split = ex.ledger_hops(strategy, data)
 
     def materialize(u: np.ndarray, d: np.ndarray, suffix: str = "") -> CommLedger:
         led = CommLedger()
@@ -130,6 +135,8 @@ def fit(
         led.events.append(
             (raw.event_kind, f"{tag}{suffix}[0:{T}]", up_tot + down_tot)
         )
+        if hop_split:
+            led.attribute_hops(hop_split)
         return led
 
     S = ex.num_scenarios

@@ -13,6 +13,10 @@ a pure placement choice: the same transport step runs
   via ``shard_map``; aggregation is ``psum``/``pmean`` over the mesh axis
   and the wire's encode/decode (including the Pallas ``topk_compress``
   kernel) runs per shard, on the real hot path;
+* ``multipod`` — the ``("pod", "data")`` production placement: the same
+  shard_map'd step, but the ledger decomposes by reduction tier —
+  intra-pod psum (cheap) vs inter-pod allreduce (the paper's expensive
+  client↔server link), priced per hop;
 * ``sweep``  — a vmapped leading *scenario* axis: S configurations
   (step sizes, regularizers, staleness levels, initial points) compile to
   ONE executable and return a batched ``FitResult`` with per-scenario
@@ -21,11 +25,14 @@ a pure placement choice: the same transport step runs
 Transports do not hard-code stacked-axis arithmetic anymore; they express
 their step against the executor-provided primitive set below —
 ``aggregate`` / ``broadcast`` / ``node_axis`` (+ the ``metric_mean`` /
-``sum_bytes`` / ``num_node_shards`` helpers).  The primitives are ambient
-(a trace-time context installed by the running executor), so strategy
-code written against them is placement-oblivious: under the local
-executor every primitive degrades to the identity / the stacked
-``server_allreduce``, keeping historical results bit-exact.
+``sum_bytes`` / ``num_node_shards`` / ``node_shard_index`` helpers).  The
+primitives are ambient (a trace-time context installed by the running
+executor) and resolve against the context's ``core.topology.Topology``:
+a flat topology reduces every node axis in one hop (today's behavior,
+bit-exact), a hierarchical one stages the reduction intra-pod first and
+inter-pod last.  Under the local executor every primitive degrades to
+the identity / the stacked ``server_allreduce``, keeping historical
+results bit-exact.
 """
 
 from __future__ import annotations
@@ -39,8 +46,13 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
-from repro.core.allreduce import mesh_allreduce, server_allreduce
-from repro.launch.mesh import batch_axes, make_node_mesh
+from repro.core.allreduce import (
+    hierarchical_allreduce,
+    mesh_allreduce,
+    server_allreduce,
+)
+from repro.core.topology import Topology
+from repro.launch.mesh import batch_axes, make_multipod_mesh, make_node_mesh
 from repro.sharding.rules import current_mesh_context
 
 PyTree = Any
@@ -57,6 +69,11 @@ class ExecContext(NamedTuple):
 
     node_axis: Any  # mesh axis name (or tuple) carrying nodes; None = stacked
     num_shards: int  # how many shards the node axis is split over
+    #: reduction topology the primitives resolve against (None = single
+    #: joint collective over ``node_axis``)
+    topology: Any = None
+    #: per-axis shard counts in ``node_axis`` order (for shard indexing)
+    axis_sizes: Any = None
 
 
 def current_exec_context() -> ExecContext | None:
@@ -88,15 +105,45 @@ def num_node_shards() -> int:
     return 1 if ctx is None else ctx.num_shards
 
 
+def node_shard_index():
+    """This shard's linear index along the node axis (0 locally) — the
+    row-major position matching how ``P(node_axis)`` lays node slices out,
+    so a strategy running on REPLICATED data can reconstruct which global
+    nodes it owns (``shard * K_local + arange(K_local)``)."""
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return jnp.asarray(0, jnp.int32)
+    axes = (
+        (ctx.node_axis,) if isinstance(ctx.node_axis, str) else ctx.node_axis
+    )
+    sizes = ctx.axis_sizes
+    if sizes is None:
+        if len(axes) > 1:
+            raise ValueError(
+                "node_shard_index over a multi-axis node placement needs "
+                "ExecContext.axis_sizes (set by the mesh executors)"
+            )
+        sizes = (1,)  # single axis: the multiplier never applies
+    idx = jnp.asarray(0, jnp.int32)
+    for a, s in zip(axes, sizes):
+        idx = idx * s + jax.lax.axis_index(a)
+    return idx
+
+
 def aggregate(stacked: PyTree, op: str = "sum") -> PyTree:
     """Reduce per-node messages over the node axis, wherever it lives:
     the (shard-local) stacked axis 0, then — under a mesh placement — the
-    native collective across shards.  Locally this IS ``server_allreduce``
-    (bit-exact with the pre-executor engine)."""
+    native collective across shards, staged hop by hop through the
+    ambient ``Topology`` (intra-pod psum first, inter-pod allreduce
+    last; a flat topology is one joint collective).  Locally this IS
+    ``server_allreduce`` (bit-exact with the pre-executor engine)."""
     reduced = server_allreduce(stacked, op=op)
     ctx = current_exec_context()
     if ctx is not None and ctx.node_axis is not None:
-        reduced = mesh_allreduce(reduced, ctx.node_axis, op=op)
+        if ctx.topology is not None:
+            reduced = hierarchical_allreduce(reduced, ctx.topology.hops, op=op)
+        else:
+            reduced = mesh_allreduce(reduced, ctx.node_axis, op=op)
     return reduced
 
 
@@ -165,8 +212,16 @@ class Executor:
         (e.g. the serving executor's live engine)."""
         return {}
 
+    def ledger_hops(self, strategy, data):
+        """Per-tier decomposition of the per-round node messages —
+        ``[(tier, messages, price_per_byte), ...]`` summing to K — or
+        None for flat (single-tier) ledger accounting.  The engine uses
+        this to attribute the materialized ledger's byte totals by hop."""
+        return None
+
     def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
     ):
         raise NotImplementedError
 
@@ -186,7 +241,8 @@ class LocalExecutor(Executor):
     name = "local"
 
     def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
     ):
         if carry is None:
             carry = make_carry()
@@ -240,6 +296,16 @@ class ServingExecutor(LocalExecutor):
         return {} if self.engine is None else {"serve_engine": self.engine}
 
 
+class ResolvedPlacement(NamedTuple):
+    """A mesh executor's resolved placement."""
+
+    mesh: Mesh
+    axes: tuple  # ordered node axes
+    axis: Any  # squashed spec entry: the tuple, or the single axis name
+    num_shards: int
+    topology: Topology
+
+
 class MeshExecutor(Executor):
     """Place the K nodes on the data axis of a ``jax.sharding.Mesh``.
 
@@ -247,10 +313,17 @@ class MeshExecutor(Executor):
     K/ndev nodes of the data (and the wire's per-node state, e.g. EF
     residuals), θ and the strategy state stay replicated, and
     ``aggregate`` completes shard-local reductions with
-    ``psum``/``pmean`` over the mesh axis — the §3.1 equivalence run in
-    the native direction.  Wire encode/decode executes per shard, so a
-    compressed wire's kernels (Pallas ``topk_compress``) sit on the real
-    per-device hot path.
+    ``psum``/``pmean`` over the mesh axes — the §3.1 equivalence run in
+    the native direction, staged hop by hop through the mesh's implied
+    ``Topology`` (pod meshes reduce intra-pod first, then inter-pod;
+    1-D meshes keep the single-collective behavior bit-exact).  Wire
+    encode/decode executes per shard, so a compressed wire's kernels
+    (Pallas ``topk_compress``) sit on the real per-device hot path.
+
+    Strategies with ``replicate_data=True`` (the cascade SVM, whose
+    per-node training sets overlap through the shared global-SV pool)
+    receive the FULL data on every shard and reconstruct their node
+    slice from ``node_shard_index()`` instead.
 
     Mesh resolution order: explicit ``mesh=`` → the active
     ``sharding.rules.MeshContext`` (its ``node_axes``) → a fresh 1-D
@@ -262,7 +335,16 @@ class MeshExecutor(Executor):
     def __init__(self, mesh: Mesh | None = None):
         self._mesh = mesh
 
-    def resolve(self) -> tuple[Mesh, Any, int]:
+    def _default_mesh(self) -> Mesh:
+        return make_node_mesh()
+
+    def _topology(self, axes) -> Topology:
+        return Topology.from_mesh(axes)
+
+    def _validate_mesh(self, mesh: Mesh) -> None:
+        pass
+
+    def resolve(self) -> ResolvedPlacement:
         mesh = self._mesh
         axes = None
         if mesh is None:
@@ -270,25 +352,35 @@ class MeshExecutor(Executor):
             if mc is not None:
                 mesh, axes = mc.mesh, mc.node_axes
             else:
-                mesh = make_node_mesh()
+                mesh = self._default_mesh()
+        self._validate_mesh(mesh)
         if axes is None:
             axes = batch_axes(mesh)
         if not axes:
             raise ValueError(
                 f"mesh {mesh} has no 'data'/'pod' axis to place nodes on"
             )
+        # placement keeps the mesh's axis order (pods hold contiguous node
+        # ranges); the topology orders the REDUCTION hops independently
+        # (intra-pod first, inter-pod last)
+        topology = self._topology(axes)
+        axes = tuple(axes)
         axis = axes if len(axes) > 1 else axes[0]
         ndev = 1
         for a in axes:
             ndev *= mesh.shape[a]
-        return mesh, axis, ndev
+        return ResolvedPlacement(
+            mesh=mesh, axes=axes, axis=axis, num_shards=ndev, topology=topology
+        )
 
     def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
     ):
         from repro.api.strategy import Strategy
 
-        mesh, axis, ndev = self.resolve()
+        r = self.resolve()
+        mesh, axis, ndev = r.mesh, r.axis, r.num_shards
         if data is None:
             raise ValueError(
                 "mesh executor needs data with a leading node axis to shard"
@@ -302,7 +394,7 @@ class MeshExecutor(Executor):
             raise NotImplementedError(
                 f"{type(strategy).__name__} overrides aggregate(); the mesh "
                 "executor only places op-based reductions (set aggregate_op "
-                "to 'sum'/'mean'/'max' instead)"
+                "to 'sum'/'mean'/'max'/'any' instead)"
             )
         K = strategy.num_nodes(data)
         if K % ndev != 0:
@@ -311,10 +403,16 @@ class MeshExecutor(Executor):
             )
         if carry is None:
             carry = make_carry()
-        ctx = ExecContext(node_axis=axis, num_shards=ndev)
+        ctx = ExecContext(
+            node_axis=axis, num_shards=ndev, topology=r.topology,
+            axis_sizes=tuple(mesh.shape[a] for a in r.axes),
+        )
         # carry = (theta, strategy state, wire state, delay line): everything
         # replicated except the per-node wire state, which lives with its node
         cspec = (P(), P(), P(axis), P())
+        # replicate-data strategies see the whole dataset on every shard
+        # and slice their own nodes out via node_shard_index()
+        dspec = P() if strategy.replicate_data else P(axis)
 
         if xs is None:
 
@@ -323,7 +421,7 @@ class MeshExecutor(Executor):
                     return jax.lax.scan(make_step(d, None), c, None, length=length)
 
             fn = shard_map(
-                body, mesh=mesh, in_specs=(cspec, P(axis)),
+                body, mesh=mesh, in_specs=(cspec, dspec),
                 out_specs=(cspec, P()), check_rep=False,
             )
             return fn(carry, data)
@@ -333,10 +431,67 @@ class MeshExecutor(Executor):
                 return jax.lax.scan(make_step(d, None), c, x, length=length)
 
         fn = shard_map(
-            body, mesh=mesh, in_specs=(cspec, P(axis), P()),
+            body, mesh=mesh, in_specs=(cspec, dspec, P()),
             out_specs=(cspec, P()), check_rep=False,
         )
         return fn(carry, data, xs)
+
+
+class MultiPodExecutor(MeshExecutor):
+    """The production placement: nodes on ``("pod", "data")`` of a
+    multi-pod mesh, with the ledger decomposed by reduction tier.
+
+    Execution is the same shard_map'd step as ``MeshExecutor`` on the
+    same mesh — the staged intra-pod-psum + inter-pod-allreduce program
+    both executors derive from the mesh's ``Topology`` — so the theta
+    trajectory is bit-exact with ``executor="mesh"``.  What changes is
+    the accounting: ``ledger_hops`` attributes the per-round node
+    messages to tiers (K−P intra-pod pushes, P inter-pod root pushes for
+    P pods), each priced per byte, so ``ledger.summary()["by_hop"]``
+    reports the paper's cheap-vs-expensive link split instead of one
+    lump sum.
+
+    Mesh resolution order: explicit ``mesh=`` → the active
+    ``sharding.rules.MeshContext`` → ``launch.mesh.make_multipod_mesh()``
+    over the local devices (pass
+    ``make_production_mesh(multi_pod=True)`` explicitly for the 512-chip
+    production shape).
+    """
+
+    name = "multipod"
+
+    def __init__(
+        self,
+        mesh: Mesh | None = None,
+        *,
+        intra_price: float | None = None,
+        inter_price: float | None = None,
+    ):
+        super().__init__(mesh)
+        self._intra_price = intra_price
+        self._inter_price = inter_price
+
+    def _default_mesh(self) -> Mesh:
+        return make_multipod_mesh()
+
+    def _topology(self, axes) -> Topology:
+        return Topology.from_mesh(
+            axes, intra_price=self._intra_price, inter_price=self._inter_price
+        )
+
+    def _validate_mesh(self, mesh: Mesh) -> None:
+        if "pod" not in mesh.axis_names:
+            raise ValueError(
+                f"multipod executor needs a mesh with a 'pod' axis, got "
+                f"axes {mesh.axis_names} — build one with "
+                "launch.mesh.make_multipod_mesh() or "
+                "make_production_mesh(multi_pod=True)"
+            )
+
+    def ledger_hops(self, strategy, data):
+        r = self.resolve()
+        K = strategy.num_nodes(data)
+        return r.topology.hop_messages(K, dict(r.mesh.shape))
 
 
 class SweepExecutor(Executor):
@@ -348,6 +503,12 @@ class SweepExecutor(Executor):
       attribute is rebound per scenario while the step is traced, so any
       scalar hyperparameter a strategy reads from ``self`` sweeps without
       the strategy knowing;
+    * a WIRE attribute name (names not found on the strategy are looked
+      up on the wire) — e.g. the threshold wire's ``"tau"``, which makes
+      the compression ratio itself sweepable: the sparsifier is
+      value-dependent but shape-static, so S thresholds share one
+      executable where per-scenario top-k fractions would each need a
+      different static k;
     * the reserved key ``"staleness"`` — handled by the update transport,
       which sizes one depth-max(D) delay line and reads it at a batched
       per-scenario index (``core.staleness.delay_push_read``), so D=0…D_max
@@ -408,26 +569,32 @@ class SweepExecutor(Executor):
         )
 
     def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
     ):
         attrs = {
             k: v for k, v in self.params.items() if k not in self.RESERVED
         }
+        targets = {}
         for k in attrs:
-            if not hasattr(strategy, k):
+            if hasattr(strategy, k):
+                targets[k] = strategy
+            elif wire is not None and hasattr(wire, k):
+                targets[k] = wire
+            else:
                 raise ValueError(
                     f"swept parameter {k!r} is not an attribute of "
-                    f"{type(strategy).__name__} (reserved keys: "
+                    f"{type(strategy).__name__} or the wire (reserved keys: "
                     f"{self.RESERVED})"
                 )
         stal = self.params.get("staleness")
         theta0s = self.params.get("theta0")
 
         def one(vals, d, th0, c):
-            saved = {k: getattr(strategy, k) for k in vals}
+            saved = {k: getattr(targets[k], k) for k in vals}
             try:
                 for k, v in vals.items():
-                    setattr(strategy, k, v)
+                    setattr(targets[k], k, v)
                 if c is not None:
                     c0 = c
                 elif th0 is None:
@@ -439,7 +606,7 @@ class SweepExecutor(Executor):
                 )
             finally:
                 for k, v in saved.items():
-                    setattr(strategy, k, v)
+                    setattr(targets[k], k, v)
 
         axes = (
             {k: 0 for k in attrs},
@@ -450,21 +617,25 @@ class SweepExecutor(Executor):
         return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
 
 
-EXECUTORS = ("local", "mesh", "sweep", "serve")
+EXECUTORS = ("local", "mesh", "multipod", "sweep", "serve")
 
 
 def make_executor(spec: str | Executor | None) -> Executor:
     """Resolve an executor spec: an ``Executor`` instance, ``None``/"local",
     "mesh" (nodes over all local devices / the active mesh context),
-    "serve" (local fit, finalized model handed to a ``ServeEngine``), or a
-    configured ``MeshExecutor(mesh)`` / ``SweepExecutor(params)`` /
-    ``ServingExecutor(...)``."""
+    "multipod" (the ``("pod", "data")`` hierarchical placement with
+    per-hop ledger pricing), "serve" (local fit, finalized model handed
+    to a ``ServeEngine``), or a configured ``MeshExecutor(mesh)`` /
+    ``MultiPodExecutor(mesh, intra_price=, inter_price=)`` /
+    ``SweepExecutor(params)`` / ``ServingExecutor(...)``."""
     if isinstance(spec, Executor):
         return spec
     if spec is None or spec == "local":
         return LocalExecutor()
     if spec == "mesh":
         return MeshExecutor()
+    if spec == "multipod":
+        return MultiPodExecutor()
     if spec == "serve":
         return ServingExecutor()
     if spec == "sweep":

@@ -41,11 +41,18 @@ class Strategy:
     #: gradient Allreduce) — the engine adds them to the ledger
     init_rounds: int = 0
     #: reduction applied over the node axis by the base ``aggregate``
-    #: ("sum" / "mean" / "max").  Executors that place nodes on a mesh
-    #: complete this op with the native collective — strategies that
-    #: instead *override* ``aggregate`` (semantic aggregation, e.g. the
-    #: cascade SVM's mask union) stay local/sweep-only.
+    #: ("sum" / "mean" / "max" / "any" — ``any`` is the psum-of-bools set
+    #: union, e.g. the cascade SVM's SV-mask union).  Executors that
+    #: place nodes on a mesh complete this op with the native collective
+    #: — strategies that instead *override* ``aggregate`` with arbitrary
+    #: Python stay local/sweep-only.
     aggregate_op: str = "sum"
+    #: mesh placement: False (default) shards the data's leading node
+    #: axis across devices; True replicates the FULL data on every shard
+    #: — for strategies whose per-node computation reads the whole
+    #: dataset (cascade SVM's shared SV pool).  Replicating strategies
+    #: reconstruct their node slice from ``executor.node_shard_index()``.
+    replicate_data: bool = False
     #: whether ``predict`` is a pure jittable function of (θ, X).  The
     #: serve engine compiles jittable predicts once per request shape;
     #: strategies whose predict drives its own Python loop (LM decode)

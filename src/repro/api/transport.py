@@ -239,6 +239,7 @@ class UpdateTransport(Transport):
         carry, (traj, ups, downs) = executor.run_update(
             strategy=strategy, data=data, carry=carry,
             make_carry=make_carry, make_step=make_step, xs=xs, length=T,
+            wire=wire,
         )
         theta, sstate = carry[0], carry[1]
         theta = executor.finalize(strategy, theta, sstate, data)

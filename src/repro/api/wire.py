@@ -32,7 +32,12 @@ from typing import Any, Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core.compression import Compressed, int8_compress, topk_compress
+from repro.core.compression import (
+    Compressed,
+    int8_compress,
+    threshold_compress,
+    topk_compress,
+)
 from repro.utils.tree import tree_add, tree_bytes, tree_sub
 
 PyTree = Any
@@ -149,13 +154,45 @@ class CompressedWire(Wire):
         return wstate, comp.tree, jnp.sum(comp.wire_bytes)
 
 
+class ThresholdWire(CompressedWire):
+    """Magnitude-threshold sparsifier: keep entries with ``|x| ≥ tau``.
+
+    The kept COUNT is value-dependent but every compiled shape is static
+    (dense-with-zeros on device; only the metered byte count traces), so
+    — unlike ``topk:<f>``, whose k is baked into compiled shapes — the
+    compression ratio is sweepable: ``tau`` is a plain attribute the
+    sweep executor rebinds per scenario
+    (``SweepExecutor({"tau": jnp.asarray([...])})``), and S thresholds
+    share ONE executable.  The per-push byte cost is data-dependent, so
+    the ledger takes the traced per-round counts instead of a static
+    price.
+    """
+
+    def __init__(self, tau: float, *, error_feedback: bool = False):
+        super().__init__(
+            self._compress,
+            error_feedback=error_feedback,
+            name=f"thresh:{tau}" + ("+ef" if error_feedback else ""),
+        )
+        self.tau = tau
+
+    def _compress(self, tree):
+        # reads self.tau at trace time, so a swept (traced) threshold
+        # flows straight into the codec
+        return threshold_compress(tree, self.tau)
+
+    def push_bytes(self, theta: PyTree) -> int | None:
+        return None  # value-dependent — no static per-push cost
+
+
 def make_wire(spec: str | Wire | None) -> Wire:
     """Resolve a wire spec.
 
     Accepts a ``Wire`` instance, ``None``/"dense", or a string of the form
-    ``"<codec>[+ef]"`` with codecs ``topk:<fraction>`` and ``int8`` — e.g.
-    ``"topk:0.05+ef"`` is top-5% magnitude sparsification with error
-    feedback.
+    ``"<codec>[+ef]"`` with codecs ``topk:<fraction>``, ``thresh:<tau>``
+    and ``int8`` — e.g. ``"topk:0.05+ef"`` is top-5% magnitude
+    sparsification with error feedback; ``"thresh:0.01"`` keeps entries
+    with magnitude ≥ 0.01 (value-dependent ratio, sweepable).
     """
     if spec is None:
         return DenseWire()
@@ -167,6 +204,8 @@ def make_wire(spec: str | Wire | None) -> Wire:
         return DenseWire()
     ef = spec.endswith("+ef")
     base = spec[:-3] if ef else spec
+    if base.startswith("thresh:"):
+        return ThresholdWire(float(base.split(":", 1)[1]), error_feedback=ef)
     if base.startswith("topk:"):
         fraction = float(base.split(":", 1)[1])
         compressor = partial(topk_compress, fraction=fraction)
@@ -174,7 +213,7 @@ def make_wire(spec: str | Wire | None) -> Wire:
         compressor = int8_compress
     else:
         raise ValueError(
-            f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]' "
-            "or 'int8[+ef]'"
+            f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]', "
+            "'thresh:<tau>[+ef]' or 'int8[+ef]'"
         )
     return CompressedWire(compressor, error_feedback=ef, name=spec)

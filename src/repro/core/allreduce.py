@@ -12,11 +12,18 @@ central server in its exact-aggregation limit.  Both forms are provided:
 * ``server_allreduce`` — the literal two-phase simulation over a stacked
   node axis (gather-to-server + broadcast), used by the classical ``ml/``
   algorithms which model K logical nodes on one host.
+* ``hierarchical_allreduce`` — the topology-aware generalization: staged
+  psum per reduction hop (intra-pod first, inter-pod last), following an
+  ordered ``core.topology`` hop list.  A flat single-hop topology IS
+  ``mesh_allreduce``.
 
 ``CommLedger`` counts bytes moved under the paper's client-server cost model
 (uplink: K·|θ| to the server, downlink: K·|θ| back), so every surveyed
 algorithm can report its communication overhead — the paper's recurring
-evaluation axis.
+evaluation axis.  Under a hierarchical topology the same totals decompose
+by tier (``record_hop`` / ``attribute_hops``): which LINK a byte crossed
+— the cheap intra-pod reduction or the expensive inter-pod round trip —
+is the paper's §3/§5 pricing distinction.
 """
 
 from __future__ import annotations
@@ -46,14 +53,53 @@ def mesh_allreduce(
 ) -> PyTree:
     """Native collective with the same ``op`` vocabulary as
     ``server_allreduce`` — the §3.1 equivalence made literal: the mesh
-    executor swaps one for the other without touching the algorithm."""
+    executor swaps one for the other without touching the algorithm.
+    ``op="any"`` is the semantic union reduction (cascade SVM's SV-mask
+    union), expressed as psum-of-bools so it runs as a native collective.
+    """
     if op == "sum":
         return psum_allreduce(tree, axis_name)
     if op == "mean":
         return pmean_allreduce(tree, axis_name)
     if op == "max":
         return jax.tree.map(lambda x: jax.lax.pmax(x, axis_name), tree)
+    if op == "any":
+        return jax.tree.map(
+            lambda x: jax.lax.psum(x.astype(jnp.int32), axis_name) > 0, tree
+        )
     raise ValueError(f"unknown op: {op!r}")
+
+
+def hierarchical_allreduce(
+    tree: PyTree, hops, op: str = "sum"
+) -> PyTree:
+    """Topology-aware allreduce: one staged collective per reduction hop.
+
+    ``hops`` is an ordered sequence (innermost/cheapest first) of
+    ``core.topology.Hop``s — or bare axis names / axis-name tuples — each
+    reduced with its own ``psum``/``pmean``/``pmax``.  A single flat hop
+    over all node axes is exactly ``mesh_allreduce``; splitting the pod
+    axis into its own outermost hop is the paper's intra-pod-psum +
+    inter-pod-allreduce hierarchy.
+
+    ``op="mean"`` stages as psum-per-hop with ONE final division by the
+    total fan-in, so the result is independent of how the hops split the
+    axes (a staged pmean-of-pmeans would re-weight tiers).
+    """
+    axes_per_hop = [getattr(h, "axes", h) for h in hops]
+    if op == "mean":
+        for axes in axes_per_hop:
+            tree = psum_allreduce(tree, axes)
+        denom = 1.0
+        # divide once by the joint fan-in; axis sizes are trace-time static
+        for axes in axes_per_hop:
+            names = (axes,) if isinstance(axes, str) else tuple(axes)
+            for a in names:
+                denom *= jax.lax.psum(1, a)
+        return jax.tree.map(lambda x: x / denom, tree)
+    for axes in axes_per_hop:
+        tree = mesh_allreduce(tree, axes, op=op)
+    return tree
 
 
 def server_allreduce(stacked: PyTree, op: str = "sum") -> PyTree:
@@ -71,17 +117,29 @@ def server_allreduce(stacked: PyTree, op: str = "sum") -> PyTree:
         return jax.tree.map(lambda x: jnp.mean(x, axis=0), stacked)
     if op == "max":
         return jax.tree.map(lambda x: jnp.max(x, axis=0), stacked)
+    if op == "any":
+        return jax.tree.map(lambda x: jnp.any(x, axis=0), stacked)
     raise ValueError(f"unknown op: {op!r}")
 
 
 @dataclass
 class CommLedger:
-    """Byte accounting under the paper's strict client-server cost model."""
+    """Byte accounting under the paper's strict client-server cost model.
+
+    Totals optionally decompose by reduction tier (``hops``): which link a
+    byte crossed — the cheap intra-pod reduction or the expensive
+    inter-pod round trip — priced per byte per hop.  Tier bytes always
+    sum to the undifferentiated flat totals (the decomposition is an
+    attribution, never double counting).
+    """
 
     uplink_bytes: int = 0
     downlink_bytes: int = 0
     rounds: int = 0
     events: list = field(default_factory=list)
+    #: per-tier attribution: name -> {uplink_bytes, downlink_bytes,
+    #: price_per_byte}; empty for flat (single-tier) accounting
+    hops: dict = field(default_factory=dict)
 
     def record_allreduce(self, tree: PyTree, num_nodes: int, tag: str = "") -> None:
         """One Allreduce = K pushes of |θ| + K pulls of |θ|."""
@@ -90,6 +148,61 @@ class CommLedger:
         self.downlink_bytes += num_nodes * nbytes
         self.rounds += 1
         self.events.append(("allreduce", tag, num_nodes * nbytes * 2))
+
+    def _hop_add(
+        self, hop: str, up: int, down: int, price_per_byte: float = 1.0
+    ) -> None:
+        # cost accumulates per contribution, so merging ledgers priced
+        # under different link prices stays exact (the summary reports
+        # the byte-weighted effective price)
+        bucket = self.hops.setdefault(
+            hop, {"uplink_bytes": 0, "downlink_bytes": 0, "priced_cost": 0.0}
+        )
+        bucket["uplink_bytes"] += up
+        bucket["downlink_bytes"] += down
+        bucket["priced_cost"] += (up + down) * price_per_byte
+
+    def record_hop(
+        self,
+        tree: PyTree,
+        hop: str,
+        fanin: int,
+        *,
+        price_per_byte: float = 1.0,
+        tag: str = "",
+    ) -> None:
+        """One reduction stage of a hierarchical Allreduce: ``fanin``
+        messages of |tree| climb the tier (uplink) and ``fanin`` copies
+        come back down — charged to the hop's own bucket AND the global
+        totals, so a fully hop-recorded ledger decomposes exactly."""
+        nbytes = tree_bytes(tree) * fanin
+        self.uplink_bytes += nbytes
+        self.downlink_bytes += nbytes
+        self._hop_add(hop, nbytes, nbytes, price_per_byte)
+        self.events.append(("hop", tag or hop, nbytes * 2))
+
+    def attribute_hops(self, hop_messages) -> None:
+        """Decompose the ledger's CURRENT totals across tiers.
+
+        ``hop_messages`` is ``[(tier, messages, price_per_byte), ...]``
+        (see ``core.topology.Topology.hop_messages``); each tier is
+        attributed its message-weighted share, with any integer remainder
+        assigned to the outermost hop so tier bytes sum bit-for-bit to
+        the flat totals.
+        """
+        total_m = sum(m for _, m, _ in hop_messages)
+        if total_m <= 0:
+            raise ValueError("hop attribution needs a positive message count")
+        up_rem, down_rem = self.uplink_bytes, self.downlink_bytes
+        for i, (name, m, price) in enumerate(hop_messages):
+            if i == len(hop_messages) - 1:
+                up_h, down_h = up_rem, down_rem
+            else:
+                up_h = self.uplink_bytes * m // total_m
+                down_h = self.downlink_bytes * m // total_m
+                up_rem -= up_h
+                down_rem -= down_h
+            self._hop_add(name, up_h, down_h, price)
 
     def record_push(self, tree: PyTree, tag: str = "") -> None:
         """One node→server push (the §5 protocol is push+pull per contact)."""
@@ -118,15 +231,47 @@ class CommLedger:
         self.downlink_bytes += other.downlink_bytes
         self.rounds += other.rounds
         self.events.extend(other.events)
+        for name, b in other.hops.items():
+            bucket = self.hops.setdefault(
+                name,
+                {"uplink_bytes": 0, "downlink_bytes": 0, "priced_cost": 0.0},
+            )
+            bucket["uplink_bytes"] += b["uplink_bytes"]
+            bucket["downlink_bytes"] += b["downlink_bytes"]
+            bucket["priced_cost"] += b["priced_cost"]
 
     @property
     def total_bytes(self) -> int:
         return self.uplink_bytes + self.downlink_bytes
 
+    def priced_cost(self) -> float:
+        """Byte total weighted by per-hop link prices; bytes not
+        attributed to any tier are priced at 1.0 (the flat model)."""
+        attributed = 0
+        cost = 0.0
+        for b in self.hops.values():
+            attributed += b["uplink_bytes"] + b["downlink_bytes"]
+            cost += b["priced_cost"]
+        return cost + (self.total_bytes - attributed)
+
     def summary(self) -> dict:
+        def hop_entry(b):
+            nbytes = b["uplink_bytes"] + b["downlink_bytes"]
+            return {
+                "uplink_bytes": b["uplink_bytes"],
+                "downlink_bytes": b["downlink_bytes"],
+                "total_bytes": nbytes,
+                # byte-weighted effective price (exact when every
+                # contribution priced this hop identically)
+                "price_per_byte": b["priced_cost"] / nbytes if nbytes else 1.0,
+            }
+
+        by_hop = {name: hop_entry(b) for name, b in self.hops.items()}
         return {
             "uplink_bytes": self.uplink_bytes,
             "downlink_bytes": self.downlink_bytes,
             "total_bytes": self.total_bytes,
             "rounds": self.rounds,
+            "by_hop": by_hop,
+            "priced_cost": self.priced_cost(),
         }

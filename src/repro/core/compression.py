@@ -65,6 +65,32 @@ def topk_compress(tree: PyTree, fraction: float, *, use_kernel: bool = False) ->
     return Compressed(out, jnp.asarray(float(nbytes)))
 
 
+def threshold_compress(tree: PyTree, tau) -> Compressed:
+    """Magnitude-threshold sparsification: keep entries with |x| ≥ tau.
+
+    Unlike ``topk_compress`` (whose kept COUNT is baked into compiled
+    shapes), the threshold is a value-dependent, shape-static knob: the
+    on-device representation stays dense-with-zeros, only ``wire_bytes``
+    (a traced scalar counting survivors) depends on the data.  That makes
+    the compression RATIO sweepable — ``tau`` can be a traced per-scenario
+    scalar under the sweep executor, where per-scenario top-k fractions
+    would need a different static k per scenario.
+    """
+    tau = jnp.asarray(tau)
+
+    def leaf(x):
+        return jnp.where(jnp.abs(x) >= tau.astype(x.dtype), x, 0)
+
+    out = jax.tree.map(leaf, tree)
+    # wire: 4-byte index + value bytes per surviving entry (data-dependent)
+    nbytes = sum(
+        jnp.sum(jnp.abs(x) >= tau.astype(x.dtype)).astype(jnp.float32)
+        * (4 + x.dtype.itemsize)
+        for x in jax.tree.leaves(tree)
+    )
+    return Compressed(out, jnp.asarray(nbytes, jnp.float32))
+
+
 def randk_compress(key: jax.Array, tree: PyTree, fraction: float) -> Compressed:
     """Random-k sparsification, rescaled by 1/fraction to stay unbiased."""
     leaves, treedef = jax.tree.flatten(tree)

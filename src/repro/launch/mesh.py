@@ -31,6 +31,20 @@ def make_node_mesh(num_devices: int | None = None):
     return jax.make_mesh((n,), ("data",))
 
 
+def make_multipod_mesh(num_pods: int | None = None, num_devices: int | None = None):
+    """2-D ``("pod", "data")`` mesh over the host's devices — the multipod
+    executor's default placement: the pod axis carries the expensive
+    inter-pod tier, the data axis the cheap intra-pod reduction.  Defaults
+    to 2 pods when the device count splits evenly, else 1 (every topology
+    primitive degrades gracefully to a size-1 pod axis)."""
+    n = num_devices if num_devices is not None else len(jax.devices())
+    if num_pods is None:
+        num_pods = 2 if n % 2 == 0 else 1
+    if n % num_pods:
+        raise ValueError(f"{n} devices do not split into {num_pods} pods")
+    return jax.make_mesh((num_pods, n // num_pods), ("pod", "data"))
+
+
 def batch_axes(mesh) -> tuple:
     """The axes that carry data parallelism (the paper's 'nodes')."""
     return tuple(a for a in mesh.axis_names if a in ("pod", "data"))

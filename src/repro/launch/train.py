@@ -20,6 +20,11 @@ vmapped scenario batch (the sweep executor): every level shares one
 compiled step and one data stream, and the driver reports the loss
 trajectory per scenario — the cheapest way to pick D before a long run.
 
+``--multipod`` installs a ``("pod", "data")`` multipod ``MeshContext``
+(``launch.mesh.make_multipod_mesh``) so the model's activation-sharding
+constraints place the batch over pods × intra-pod data shards — the
+production placement, runnable on CPU with fake devices.
+
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
       --reduced --steps 50 --batch 8 --seq 128 --log-every 10
@@ -66,6 +71,13 @@ def main(argv=None):
         "sweep (overrides --staleness; incompatible with checkpointing)",
     )
     ap.add_argument("--compress-topk", type=float, default=0.0)
+    ap.add_argument(
+        "--multipod", action="store_true",
+        help="run under a ('pod', 'data') multipod MeshContext: activation "
+        "batches shard over pods × data shards (the production placement; "
+        "on CPU combine with XLA_FLAGS=--xla_force_host_platform_device_"
+        "count=N for N fake devices)",
+    )
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="")
@@ -97,10 +109,31 @@ def main(argv=None):
         sweep_levels = [int(s) for s in args.sweep_staleness.split(",")]
         executor = api.SweepExecutor({"staleness": jnp.asarray(sweep_levels)})
 
+    mesh_note = ""
+    if args.multipod:
+        if args.sweep_staleness:
+            raise SystemExit("--multipod is incompatible with --sweep-staleness")
+        from repro.launch.mesh import make_multipod_mesh
+        from repro.sharding.rules import MeshContext, set_mesh_context
+
+        mesh = make_multipod_mesh()
+        ndev = mesh.shape["pod"] * mesh.shape["data"]
+        if args.batch % ndev:
+            raise SystemExit(
+                f"--batch {args.batch} must divide over the "
+                f"{mesh.shape['pod']}x{mesh.shape['data']} multipod mesh"
+            )
+        set_mesh_context(
+            MeshContext(mesh=mesh, logical={"batch": ("pod", "data")})
+        )
+        mesh_note = (
+            f", mesh=pod:{mesh.shape['pod']}x data:{mesh.shape['data']}"
+        )
+
     data = synthetic_lm_batches(args.seed, args.batch, args.seq, cfg.vocab_size)
     print(
         f"training {cfg.name} ({n_params/1e6:.1f}M params, "
-        f"staleness={sweep_levels or args.staleness}, wire={wire})"
+        f"staleness={sweep_levels or args.staleness}, wire={wire}{mesh_note})"
     )
     t0 = time.time()
     history = []

@@ -28,6 +28,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import fit
+from repro.api import executor as _exec
 from repro.api.strategy import ProxStrategy, Strategy
 from repro.core.admm import gradient_local_prox
 from repro.core.allreduce import CommLedger
@@ -124,14 +125,23 @@ class CascadeStrategy(Strategy):
 
     θ is the global-SV boolean mask over the pooled dataset; each round's
     message is the per-node SV mask (node k trains on its shard ∪ the
-    current global SVs), aggregation is the set UNION, and the apply step
-    is the server retrain on the union.  Masks (rather than point copies)
-    keep a point from being duplicated when it is both local to a node and
-    a global SV — duplication would split dual weight and inflate the SV
-    count.  The byte-accounting hooks charge only the actual SV points
-    pushed and broadcast — the algorithm's semantic compression, which a
-    generic wire codec cannot know about.
+    current global SVs), aggregation is the set UNION — declared as
+    ``aggregate_op="any"`` (psum-of-bools), so the mesh executor can
+    complete it with the native collective — and the apply step is the
+    server retrain on the union.  Masks (rather than point copies) keep a
+    point from being duplicated when it is both local to a node and a
+    global SV — duplication would split dual weight and inflate the SV
+    count.  Because every node's training set overlaps the shared global
+    SV pool, the strategy declares ``replicate_data``: under the mesh
+    executor each shard holds the full dataset and trains only its own
+    nodes (reconstructed from ``node_shard_index``).  The
+    byte-accounting hooks charge only the actual SV points pushed and
+    broadcast — the algorithm's semantic compression, which a generic
+    wire codec cannot know about.
     """
+
+    aggregate_op = "any"
+    replicate_data = True
 
     def __init__(self, *, C: float = 1.0, kernel=linear_kernel, iters: int = 500):
         self.C = C
@@ -161,14 +171,15 @@ class CascadeStrategy(Strategy):
         Xs, _ = data
         Knodes, Nk, _ = Xs.shape
         node_of = jnp.repeat(jnp.arange(Knodes), Nk)
+        # data is replicated across mesh shards; each shard trains only
+        # its own contiguous node slice (all K nodes locally)
+        K_local = Knodes // _exec.num_node_shards()
+        ks = _exec.node_shard_index() * K_local + jnp.arange(K_local)
         node_masks = jax.vmap(
             lambda k: ((node_of == k) | theta).astype(jnp.float32)
-        )(jnp.arange(Knodes))
+        )(ks)
         models = jax.vmap(lambda m: self._train(data, m))(node_masks)
         return models.sv_mask, state
-
-    def aggregate(self, msgs):
-        return jnp.any(msgs, axis=0)  # union of the pushed SV identities
 
     def apply_update(self, theta, pushed, state, data):
         model = self._train(data, pushed.astype(jnp.float32))
@@ -183,8 +194,11 @@ class CascadeStrategy(Strategy):
         return count.astype(jnp.float32) * (n + 1) * 4.0  # f32 point + label
 
     def uplink_bytes(self, msgs_hat, data):
-        # one union push per round: only the SV identities move
-        return self._point_bytes(data, jnp.sum(jnp.any(msgs_hat, axis=0)))
+        # one union push per round: only the SV identities move.  The
+        # union completes across mesh shards (identity locally) so every
+        # placement reports the same global SV count.
+        union = _exec.aggregate(msgs_hat, op="any")
+        return self._point_bytes(data, jnp.sum(union))
 
     def downlink_bytes(self, theta, data):
         # broadcast of the new global SV set

@@ -48,6 +48,25 @@ class MeshContext:
         parallelism) — what the mesh executor shards the node axis over."""
         return tuple(a for a in self.mesh.axis_names if a in ("pod", "data"))
 
+    @property
+    def pod_axis(self) -> str | None:
+        """The inter-pod tier's mesh axis, when this mesh spans pods."""
+        return "pod" if "pod" in self.mesh.axis_names else None
+
+    @property
+    def intra_pod_axes(self) -> tuple:
+        """Node axes below the pod tier (the cheap intra-pod reduction)."""
+        return tuple(a for a in self.node_axes if a != "pod")
+
+    def topology(self, **prices):
+        """The reduction ``core.topology.Topology`` this mesh implies:
+        hierarchical (intra-pod psum + inter-pod allreduce) when a pod
+        axis exists, flat otherwise.  ``prices`` forwards
+        ``intra_price``/``inter_price`` per-byte hop prices."""
+        from repro.core.topology import Topology
+
+        return Topology.from_mesh(self.node_axes, **prices)
+
 
 def set_mesh_context(ctx: MeshContext | None):
     _ctx.value = ctx

@@ -6,12 +6,21 @@ post-SPMD (per-device) HLO text and sum operand bytes of every
 ``collective-permute`` op.  Shapes in HLO are per-device after partitioning,
 so the sums are bytes moved per device — multiply by chip count for fleet
 totals (the roofline uses per-device directly).
+
+Per-axis attribution: every collective's ``replica_groups`` names which
+devices talk to each other.  Given a device→pod map (``mesh_pod_map``),
+``collective_stats(..., pod_of=...)`` classifies each collective as
+``intra_pod`` (every group stays inside one pod) or ``inter_pod`` (some
+group spans pods) — the measured counterpart of the ``CommLedger``'s
+per-hop predicted split.
 """
 
 from __future__ import annotations
 
 import re
 from collections import defaultdict
+
+import numpy as np
 
 _DTYPE_BYTES = {
     "pred": 1,
@@ -58,9 +67,76 @@ def _shape_bytes(shape_str: str) -> int:
     return total
 
 
-def collective_stats(hlo_text: str) -> dict:
-    """Per-collective-kind {count, bytes} from (per-device) HLO text."""
+_RG_RE = re.compile(
+    r"replica_groups="
+    r"(\{\{[\d,\{\} ]*\}\}"  # explicit lists: {{0,1},{2,3}}
+    r"|\[[\d,]+\]<=\[[\d,]+\](?:T\([\d,]+\))?)"  # iota form: [2,2]<=[4]T(1,0)
+)
+
+
+def parse_replica_groups(attr: str) -> list[list[int]] | None:
+    """Decode one ``replica_groups=`` attribute value into device groups.
+
+    Handles both the explicit-list form ``{{0,1},{2,3}}`` and the iota
+    form ``[G,S]<=[d0,d1,...]T(p0,p1,...)`` (arange over ∏d, reshaped to
+    (d…), transposed by the permutation, then regrouped as G rows of S).
+    Returns None for strings in neither form.
+    """
+    attr = attr.strip()
+    if attr.startswith("{{"):
+        groups = []
+        for grp in re.findall(r"\{([\d, ]*)\}", attr[1:-1]):
+            ids = [int(t) for t in grp.replace(" ", "").split(",") if t]
+            groups.append(ids)
+        return groups
+    m = re.match(r"\[([\d,]+)\]<=\[([\d,]+)\](?:T\(([\d,]+)\))?$", attr)
+    if not m:
+        return None
+    gshape = [int(t) for t in m.group(1).split(",")]
+    dims = [int(t) for t in m.group(2).split(",")]
+    src = np.arange(int(np.prod(dims))).reshape(dims)
+    if m.group(3):
+        perm = [int(t) for t in m.group(3).split(",")]
+        src = src.transpose(perm)
+    return src.reshape(gshape).tolist()
+
+
+def mesh_pod_map(mesh, pod_axes=("pod",)) -> dict:
+    """Map each mesh device's FLAT index (the SPMD partition id) to its
+    pod id, from the mesh axis coordinates — the ``pod_of`` input to
+    ``collective_stats``.  Meshes without a pod axis map everything to
+    pod 0 (every collective classifies as intra_pod)."""
+    names = list(mesh.axis_names)
+    shape = tuple(mesh.shape[a] for a in names)
+    n = int(np.prod(shape))
+    coords = np.unravel_index(np.arange(n), shape)
+    pod = np.zeros(n, dtype=int)
+    for a in pod_axes:
+        if a in names:
+            i = names.index(a)
+            pod = pod * shape[i] + coords[i]
+    return {i: int(p) for i, p in enumerate(pod)}
+
+
+def _classify_groups(groups, pod_of) -> str:
+    for grp in groups:
+        pods = {pod_of.get(d, d) for d in grp}
+        if len(pods) > 1:
+            return "inter_pod"
+    return "intra_pod"
+
+
+def collective_stats(hlo_text: str, *, pod_of: dict | None = None) -> dict:
+    """Per-collective-kind {count, bytes} from (per-device) HLO text.
+
+    With ``pod_of`` (device index → pod id, see ``mesh_pod_map``) the
+    result also carries ``by_tier``: the same bytes attributed to
+    ``intra_pod`` / ``inter_pod`` links by each collective's
+    ``replica_groups`` (collectives with unparseable groups land in
+    ``unattributed``) — comparable against the ledger's per-hop split.
+    """
     stats = defaultdict(lambda: {"count": 0, "bytes": 0})
+    tiers = defaultdict(lambda: {"count": 0, "bytes": 0})
     for line in hlo_text.splitlines():
         s = line.strip()
         # [ROOT] result-shape = opname(...) — match " = <shape> <op>(" forms
@@ -80,9 +156,21 @@ def collective_stats(hlo_text: str) -> dict:
         nbytes = _shape_bytes(shape_str)
         stats[base]["count"] += 1
         stats[base]["bytes"] += nbytes
+        if pod_of is not None:
+            rg = _RG_RE.search(s)
+            groups = parse_replica_groups(rg.group(1)) if rg else None
+            tier = (
+                _classify_groups(groups, pod_of)
+                if groups is not None
+                else "unattributed"
+            )
+            tiers[tier]["count"] += 1
+            tiers[tier]["bytes"] += nbytes
     out = dict(stats)
     out["total_bytes"] = sum(v["bytes"] for v in stats.values())
     out["total_count"] = sum(v["count"] for v in stats.values())
+    if pod_of is not None:
+        out["by_tier"] = dict(tiers)
     return out
 
 

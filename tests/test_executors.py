@@ -8,6 +8,11 @@ produce the same fit under every placement.
   tolerance (reduction order differs), with IDENTICAL ledgers; exercised
   on however many devices the process has (the CI mesh job forces 8 fake
   CPU devices via XLA_FLAGS) plus an explicit 8-device subprocess check.
+* ``multipod`` — the hierarchical ``("pod", "data")`` placement is
+  BIT-EXACT with the flat mesh executor on the same mesh (both stage the
+  reduction through the same mesh-derived topology; only the ledger
+  accounting differs), and the per-hop ledger decomposition sums to the
+  flat totals.
 * ``sweep`` — a vmapped S-scenario batch matches S independent ``fit``
   calls, with per-scenario ledgers bit-for-bit equal on byte totals.
 """
@@ -116,16 +121,18 @@ class TestMeshValidation:
                     transport="admm_consensus", steps=5, g="l1", g_lam=0.1,
                     executor="mesh")
 
-    def test_semantic_aggregate_rejected(self):
-        """Strategies that override aggregate() (cascade SVM's mask union)
-        cannot be placed on a mesh — only op-based reductions psum."""
-        from repro.ml.svm import CascadeStrategy
+    def test_python_aggregate_override_rejected(self):
+        """Strategies that override aggregate() with arbitrary Python
+        cannot be placed on a mesh — only op-based reductions psum
+        (set aggregate_op, e.g. the cascade SVM's "any" union)."""
 
-        rng = np.random.default_rng(3)
-        Xs = jnp.asarray(rng.normal(size=(4, 6, 2)))
-        ys = jnp.asarray(np.sign(rng.normal(size=(4, 6))))
+        class Weird(api.GradientDescent):
+            def aggregate(self, msgs):
+                return jnp.median(msgs, axis=0)
+
+        X, y, w, n = _make_problem()
         with pytest.raises(NotImplementedError, match="aggregate"):
-            api.fit(CascadeStrategy(C=1.0, iters=10), (Xs, ys),
+            api.fit(Weird(lsq_loss, lr=0.1), (X, y),
                     transport="allreduce", steps=2, executor="mesh")
 
     def test_uneven_placement_rejected(self):
@@ -213,6 +220,455 @@ print(json.dumps(out))
             assert out[transport] == {
                 "theta_close": True, "traj_close": True, "ledger_equal": True
             }, out
+
+
+class TestMultiPodEquivalence:
+    """multipod (hierarchical + per-hop pricing) ≡ mesh (flat) on the SAME
+    mesh: both executors derive the same staged reduction topology from
+    the mesh, so theta/trajectory are BIT-EXACT; only the ledger
+    attribution differs.  Runs on however many devices the process has
+    (the multipod mesh degrades to (1, 1) on one device — the hop split
+    stays nonzero because the server tier always exists)."""
+
+    @pytest.mark.parametrize(
+        "transport,kw,wire",
+        [
+            ("allreduce", {}, "dense"),
+            ("allreduce", {}, "topk:0.5+ef"),
+            ("delay_line", {"staleness": 2}, "dense"),
+            ("delay_line", {"staleness": 2}, "topk:0.5+ef"),
+        ],
+    )
+    def test_bit_exact_with_flat_mesh(self, transport, kw, wire):
+        from repro.launch.mesh import make_multipod_mesh
+
+        X, y, w, n = _make_problem()
+        mesh = make_multipod_mesh()
+        strat = lambda: api.GradientDescent(lsq_loss, lr=0.1)  # noqa: E731
+        flat = api.fit(strat(), (X, y), transport=transport, wire=wire,
+                       steps=30, executor=api.MeshExecutor(mesh), **kw)
+        hier = api.fit(strat(), (X, y), transport=transport, wire=wire,
+                       steps=30, executor=api.MultiPodExecutor(mesh), **kw)
+        np.testing.assert_array_equal(np.asarray(flat.theta),
+                                      np.asarray(hier.theta))
+        np.testing.assert_array_equal(np.asarray(flat.trajectory),
+                                      np.asarray(hier.trajectory))
+        # same flat totals; the hierarchical run decomposes them by tier
+        assert hier.ledger.total_bytes == flat.ledger.total_bytes
+        assert hier.ledger.uplink_bytes == flat.ledger.uplink_bytes
+        by_hop = hier.ledger.summary()["by_hop"]
+        assert set(by_hop) == {"intra_pod", "inter_pod"}
+        assert all(v["total_bytes"] > 0 for v in by_hop.values())
+        assert sum(v["total_bytes"] for v in by_hop.values()) \
+            == flat.ledger.total_bytes
+        assert flat.ledger.summary()["by_hop"] == {}
+        assert hier.metrics["executor"] == "multipod"
+
+    def test_matches_local_and_ledger_totals(self):
+        X, y, w, n = _make_problem()
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=40)
+        mp = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="allreduce", steps=40, executor="multipod")
+        np.testing.assert_allclose(np.asarray(mp.theta), np.asarray(loc.theta),
+                                   rtol=1e-5, atol=1e-6)
+        assert mp.ledger.total_bytes == loc.ledger.total_bytes
+
+    def test_priced_cost_weights_inter_pod(self):
+        """The expensive tier is priced above the cheap one, so the priced
+        cost exceeds the flat byte count whenever inter-pod traffic
+        exists (and custom prices flow through)."""
+        X, y, w, n = _make_problem()
+        mp = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="allreduce", steps=10,
+                     executor=api.MultiPodExecutor(
+                         intra_price=1.0, inter_price=5.0))
+        s = mp.ledger.summary()
+        inter = s["by_hop"]["inter_pod"]
+        assert inter["price_per_byte"] == 5.0
+        assert s["priced_cost"] == pytest.approx(
+            s["total_bytes"] + 4.0 * inter["total_bytes"]
+        )
+
+    def test_pod_axis_required(self):
+        from repro.launch.mesh import make_node_mesh
+
+        X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="pod"):
+            api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="allreduce", steps=2,
+                    executor=api.MultiPodExecutor(make_node_mesh()))
+
+    def test_resume_carry_crosses_to_local(self):
+        X, y, w, n = _make_problem()
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", steps=30)
+        first = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                        transport="allreduce", steps=15, executor="multipod")
+        second = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                         transport="allreduce", steps=15,
+                         carry=first.metrics["carry"])
+        np.testing.assert_allclose(np.asarray(second.theta),
+                                   np.asarray(full.theta),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestMultiPodEightDevices:
+    """The hierarchical≡flat acceptance suite on a REAL multi-shard
+    placement: 8 fake CPU devices in a subprocess, a 2×4 ``("pod",
+    "data")`` mesh for the transport×wire equivalence matrix and the
+    2×2×2 ``("pod", "data", "model")`` production shape for the
+    acceptance check proper (bit-exact theta, nonzero per-hop split
+    summing to the flat total).  The CI ``multipod-2x4`` job runs this
+    file under the same XLA_FLAGS."""
+
+    SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import api
+from repro.ml.linear import lsq_loss
+from repro.ml.svm import CascadeStrategy
+
+def bitwise(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return bool(a.shape == b.shape and
+                (a.view(np.uint32) == b.view(np.uint32)).all())
+
+rng = np.random.default_rng(0)
+X = jnp.asarray(rng.normal(size=(8, 10, 5)))
+w = jnp.asarray(rng.normal(size=(5,)))
+y = jnp.einsum("kni,i->kn", X, w)
+out = {"num_devices": jax.device_count()}
+
+mesh24 = jax.make_mesh((2, 4), ("pod", "data"))
+for transport, kw in [("allreduce", {}), ("delay_line", {"staleness": 2})]:
+    for wire in ("dense", "topk:0.5+ef"):
+        flat = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, wire=wire, steps=40,
+                       executor=api.MeshExecutor(mesh24), **kw)
+        hier = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, wire=wire, steps=40,
+                       executor=api.MultiPodExecutor(mesh24), **kw)
+        by_hop = hier.ledger.summary()["by_hop"]
+        out[f"{transport}/{wire}"] = {
+            "theta_bitwise": bitwise(flat.theta, hier.theta),
+            "traj_bitwise": bitwise(flat.trajectory, hier.trajectory),
+            "totals_equal": flat.ledger.total_bytes == hier.ledger.total_bytes,
+            "split_nonzero": all(v["total_bytes"] > 0 for v in by_hop.values())
+                             and set(by_hop) == {"intra_pod", "inter_pod"},
+            "split_sums_to_flat": sum(v["total_bytes"] for v in by_hop.values())
+                                  == flat.ledger.total_bytes,
+        }
+
+# acceptance: the (2, 2, 2) ("pod", "data", "model") production shape
+mesh222 = jax.make_mesh((2, 2, 2), ("pod", "data", "model"))
+flat = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+               transport="allreduce", steps=40,
+               executor=api.MeshExecutor(mesh222))
+hier = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+               transport="allreduce", steps=40,
+               executor=api.MultiPodExecutor(mesh222))
+by_hop = hier.ledger.summary()["by_hop"]
+out["mesh_2x2x2"] = {
+    "theta_bitwise": bitwise(flat.theta, hier.theta),
+    "traj_bitwise": bitwise(flat.trajectory, hier.trajectory),
+    "split_nonzero": all(v["total_bytes"] > 0 for v in by_hop.values())
+                     and len(by_hop) == 2,
+    "split_sums_to_flat": sum(v["total_bytes"] for v in by_hop.values())
+                          == flat.ledger.total_bytes,
+}
+
+# cascade SVM: the "any" union on a real multi-shard mesh (replicated data)
+rng = np.random.default_rng(3)
+Xs = jnp.asarray(rng.normal(size=(8, 6, 2)))
+ys = jnp.asarray(np.sign(rng.normal(size=(8, 6))))
+cl = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+             transport="allreduce", steps=3)
+cm = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+             transport="allreduce", steps=3,
+             executor=api.MeshExecutor(mesh24))
+out["cascade"] = {
+    "mask_equal": bool((np.asarray(cl.theta.sv_mask)
+                        == np.asarray(cm.theta.sv_mask)).all()),
+    "ledger_equal": cl.ledger.summary() == cm.ledger.summary(),
+}
+print(json.dumps(out))
+"""
+
+    def test_hierarchical_matches_flat_on_8_devices(self):
+        src = os.path.dirname(
+            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
+        )
+        env = dict(os.environ)
+        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+        env["JAX_PLATFORMS"] = "cpu"
+        proc = subprocess.run(
+            [sys.executable, "-c", self.SCRIPT],
+            capture_output=True, text=True, env=env, timeout=600,
+        )
+        assert proc.returncode == 0, proc.stderr[-2000:]
+        out = json.loads(proc.stdout.strip().splitlines()[-1])
+        assert out["num_devices"] == 8
+        for transport in ("allreduce", "delay_line"):
+            for wire in ("dense", "topk:0.5+ef"):
+                assert out[f"{transport}/{wire}"] == {
+                    "theta_bitwise": True, "traj_bitwise": True,
+                    "totals_equal": True, "split_nonzero": True,
+                    "split_sums_to_flat": True,
+                }, out
+        assert out["mesh_2x2x2"] == {
+            "theta_bitwise": True, "traj_bitwise": True,
+            "split_nonzero": True, "split_sums_to_flat": True,
+        }, out
+        assert out["cascade"] == {"mask_equal": True, "ledger_equal": True}, out
+
+
+class TestCascadeAnyReduction:
+    """The cascade SVM's SV-mask union is an ``any``-reduction
+    (psum-of-bools) — it now places on the mesh executors (with
+    replicated data) instead of rejecting them."""
+
+    def _problem(self, K=4):
+        rng = np.random.default_rng(3)
+        Xs = jnp.asarray(rng.normal(size=(K, 6, 2)))
+        ys = jnp.asarray(np.sign(rng.normal(size=(K, 6))))
+        return Xs, ys
+
+    def test_local_mesh_equivalence(self):
+        from repro.ml.svm import CascadeStrategy
+
+        K = 4 if jax.device_count() == 1 else jax.device_count()
+        Xs, ys = self._problem(K)
+        loc = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+                      transport="allreduce", steps=3)
+        mesh = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+                       transport="allreduce", steps=3, executor="mesh")
+        np.testing.assert_array_equal(np.asarray(loc.theta.sv_mask),
+                                      np.asarray(mesh.theta.sv_mask))
+        np.testing.assert_allclose(np.asarray(loc.theta.alpha),
+                                   np.asarray(mesh.theta.alpha),
+                                   rtol=1e-5, atol=1e-6)
+        np.testing.assert_array_equal(np.asarray(loc.trajectory),
+                                      np.asarray(mesh.trajectory))
+        # semantic (SVs-only) byte accounting completes across shards
+        assert mesh.ledger.summary() == loc.ledger.summary()
+
+    def test_multipod_decomposes_semantic_bytes(self):
+        from repro.ml.svm import CascadeStrategy
+
+        Xs, ys = self._problem(K=4 if jax.device_count() == 1 else
+                               jax.device_count())
+        loc = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+                      transport="allreduce", steps=3)
+        mp = api.fit(CascadeStrategy(C=1.0, iters=60), (Xs, ys),
+                     transport="allreduce", steps=3, executor="multipod")
+        np.testing.assert_array_equal(np.asarray(loc.theta.sv_mask),
+                                      np.asarray(mp.theta.sv_mask))
+        s = mp.ledger.summary()
+        assert sum(v["total_bytes"] for v in s["by_hop"].values()) \
+            == loc.ledger.total_bytes
+
+    def test_any_op_primitives(self):
+        from repro.core.allreduce import server_allreduce
+
+        m = jnp.asarray([[True, False, False], [False, False, True]])
+        np.testing.assert_array_equal(
+            np.asarray(server_allreduce(m, op="any")),
+            np.array([True, False, True]),
+        )
+
+
+class TestThresholdWire:
+    """The threshold sparsifier: value-dependent ratio, shape-static
+    program — the knob that makes compression ratio sweepable."""
+
+    def test_spec_parsing(self):
+        w = api.make_wire("thresh:0.25")
+        assert isinstance(w, api.ThresholdWire)
+        assert w.tau == 0.25 and not w.error_feedback and not w.lossless
+        wef = api.make_wire("thresh:0.25+ef")
+        assert wef.error_feedback
+
+    def test_push_cost_is_dynamic(self):
+        w = api.make_wire("thresh:0.1")
+        assert w.push_bytes(jnp.zeros(8)) is None
+
+    def test_threshold_zero_meters_dense_count(self):
+        X, y, w, n = _make_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="thresh:0.0", steps=10)
+        dense_up = 10 * X.shape[0] * n * (4 + 4)  # index + f32 per entry
+        assert res.ledger.uplink_bytes == dense_up
+
+    def test_higher_tau_fewer_bytes(self):
+        X, y, w, n = _make_problem()
+        lo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="allreduce", wire="thresh:0.01", steps=20)
+        hi = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="allreduce", wire="thresh:0.3", steps=20)
+        assert hi.ledger.uplink_bytes < lo.ledger.uplink_bytes
+        assert float(hi.trajectory[-1]) < float(hi.trajectory[0])
+
+    def test_tau_sweeps_compression_ratio(self):
+        """One executable, S thresholds: per-scenario results and byte
+        totals match S independent fits — the ratio is now a swept axis
+        (per-scenario top-k fractions would each need a static k)."""
+        X, y, w, n = _make_problem()
+        taus = (0.0, 0.05, 0.2)
+        sw = api.SweepExecutor({"tau": jnp.asarray(taus)})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="thresh:0.1", steps=25,
+                      executor=sw)
+        totals = []
+        for i, tau in enumerate(taus):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                           transport="allreduce",
+                           wire=api.ThresholdWire(tau), steps=25)
+            np.testing.assert_allclose(np.asarray(res.theta[i]),
+                                       np.asarray(solo.theta),
+                                       rtol=1e-6, atol=1e-7)
+            assert res.ledger[i].total_bytes == solo.ledger.total_bytes
+            totals.append(res.ledger[i].total_bytes)
+        assert totals[0] > totals[1] > totals[2]  # ratio actually swept
+
+    def test_tau_sweep_with_error_feedback(self):
+        X, y, w, n = _make_problem()
+        sw = api.SweepExecutor({"tau": jnp.asarray([0.02, 0.2])})
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="thresh:0.1+ef", steps=20,
+                      executor=sw)
+        solo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce",
+                       wire=api.ThresholdWire(0.2, error_feedback=True),
+                       steps=20)
+        np.testing.assert_allclose(np.asarray(res.theta[1]),
+                                   np.asarray(solo.theta),
+                                   rtol=1e-6, atol=1e-7)
+        assert res.ledger[1].total_bytes == solo.ledger.total_bytes
+
+    def test_mesh_placement_matches_local(self):
+        X, y, w, n = _make_problem()
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="thresh:0.05+ef", steps=20)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", wire="thresh:0.05+ef", steps=20,
+                       executor="mesh")
+        np.testing.assert_allclose(np.asarray(mesh.theta), np.asarray(loc.theta),
+                                   rtol=1e-5, atol=1e-6)
+        assert mesh.ledger.summary() == loc.ledger.summary()
+
+    def test_admm_rejects_lossy_threshold(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(ValueError, match="lossless"):
+            api.fit(api.ProxStrategy(lasso_prox_builder), (X, y),
+                    transport="admm_consensus", steps=5, g="l1", g_lam=0.1,
+                    wire="thresh:0.1")
+
+
+class TestTopologyLedger:
+    """core.topology decomposition + CommLedger per-hop accounting."""
+
+    def test_hop_messages_telescope(self):
+        from repro.core.topology import Topology
+
+        topo = Topology.from_mesh(("pod", "data"))
+        msgs = topo.hop_messages(8, {"pod": 2, "data": 4})
+        assert [(n, m) for n, m, _ in msgs] == [
+            ("intra_pod", 6), ("inter_pod", 2)
+        ]
+        assert sum(m for _, m, _ in msgs) == 8
+
+    def test_flat_topology_single_tier(self):
+        from repro.core.topology import Topology
+
+        topo = Topology.from_mesh(("data",))
+        assert topo.tiers == ("flat",)
+        assert topo.hop_messages(8, {"data": 4}) == [("flat", 8, 1.0)]
+
+    def test_duplicate_axis_rejected(self):
+        from repro.core.topology import Hop, Topology
+
+        with pytest.raises(ValueError, match="more than one hop"):
+            Topology((Hop(("data",), "a"), Hop(("data",), "b")))
+
+    def test_record_hop(self):
+        from repro.core.allreduce import CommLedger
+
+        led = CommLedger()
+        led.record_hop(jnp.zeros(4), "intra_pod", fanin=6)
+        led.record_hop(jnp.zeros(4), "inter_pod", fanin=2,
+                       price_per_byte=10.0)
+        s = led.summary()
+        assert led.total_bytes == (6 + 2) * 16 * 2
+        assert s["by_hop"]["intra_pod"]["uplink_bytes"] == 96
+        assert s["by_hop"]["inter_pod"]["uplink_bytes"] == 32
+        assert s["priced_cost"] == 96 * 2 + 32 * 2 * 10.0
+
+    def test_attribute_hops_preserves_totals(self):
+        from repro.core.allreduce import CommLedger
+
+        led = CommLedger(uplink_bytes=1001, downlink_bytes=777)
+        led.attribute_hops([("intra_pod", 6, 1.0), ("inter_pod", 2, 10.0)])
+        s = led.summary()
+        assert sum(v["uplink_bytes"] for v in s["by_hop"].values()) == 1001
+        assert sum(v["downlink_bytes"] for v in s["by_hop"].values()) == 777
+
+    def test_merge_folds_hops(self):
+        from repro.core.allreduce import CommLedger
+
+        a, b = CommLedger(), CommLedger()
+        a.record_hop(jnp.zeros(2), "inter_pod", fanin=1)
+        b.record_hop(jnp.zeros(2), "inter_pod", fanin=3)
+        a.merge(b)
+        assert a.hops["inter_pod"]["uplink_bytes"] == 8 + 24
+
+    def test_merge_mixed_prices_stays_exact(self):
+        """Merging ledgers priced under different link prices keeps the
+        exact cost (per-contribution accumulation, not first-price-wins)."""
+        from repro.core.allreduce import CommLedger
+
+        a, b = CommLedger(), CommLedger()
+        a.record_hop(jnp.zeros(25), "inter_pod", fanin=1, price_per_byte=10.0)
+        b.record_hop(jnp.zeros(25), "inter_pod", fanin=1, price_per_byte=100.0)
+        a.merge(b)
+        # 200 bytes @ x10 + 200 bytes @ x100
+        assert a.priced_cost() == 200 * 10.0 + 200 * 100.0
+        # summary reports the byte-weighted effective price
+        assert a.summary()["by_hop"]["inter_pod"]["price_per_byte"] == 55.0
+
+    def test_hierarchical_allreduce_flat_hop_is_mesh_allreduce(self):
+        """A single flat hop over all node axes is exactly the joint
+        collective (the bit-exact degradation the refactor promises)."""
+        from jax.experimental.shard_map import shard_map
+        from jax.sharding import PartitionSpec as P
+
+        from repro.core.allreduce import hierarchical_allreduce, mesh_allreduce
+        from repro.core.topology import Topology
+        from repro.launch.mesh import make_node_mesh
+
+        mesh = make_node_mesh()
+        topo = Topology.flat(("data",))
+        x = jnp.arange(jax.device_count() * 3, dtype=jnp.float32)
+
+        def staged(v):
+            return hierarchical_allreduce(v, topo.hops)
+
+        def joint(v):
+            return mesh_allreduce(v, "data")
+
+        fa = shard_map(staged, mesh=mesh, in_specs=P("data"), out_specs=P())
+        fb = shard_map(joint, mesh=mesh, in_specs=P("data"), out_specs=P())
+        np.testing.assert_array_equal(np.asarray(fa(x)), np.asarray(fb(x)))
 
 
 class TestSweepEquivalence:
@@ -367,7 +823,9 @@ class TestExecutorErrors:
                     theta0=jnp.zeros(n), executor=sw)
 
     def test_all_executors_listed(self):
-        assert set(api.EXECUTORS) == {"local", "mesh", "sweep", "serve"}
+        assert set(api.EXECUTORS) == {
+            "local", "mesh", "multipod", "sweep", "serve"
+        }
 
     def test_explicit_local_is_default(self):
         X, y, w, n = _make_problem(K=4)

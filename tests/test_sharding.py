@@ -84,3 +84,47 @@ def test_cache_specs_structure():
     assert jax.tree.structure(
         jax.tree.map(lambda _: 0, cspecs, is_leaf=lambda s: isinstance(s, P))
     ) == jax.tree.structure(jax.tree.map(lambda _: 0, cache))
+
+
+def test_mesh_context_pod_axis_resolution():
+    """The pod axis is a first-class placement target: node_axes carries
+    it, pod_axis/intra_pod_axes split the tiers, and topology() derives
+    the hierarchical reduction plan."""
+    mesh = jax.make_mesh((1, 1, 1), ("pod", "data", "model"))
+    ctx = MeshContext(mesh=mesh, logical={})
+    assert ctx.node_axes == ("pod", "data")
+    assert ctx.pod_axis == "pod"
+    assert ctx.intra_pod_axes == ("data",)
+    topo = ctx.topology()
+    assert topo.tiers == ("intra_pod", "inter_pod")
+    assert topo.hops[0].axes == ("data",)
+    assert topo.hops[1].axes == ("pod",)
+
+    flat = MeshContext(mesh=jax.make_mesh((1, 1), ("data", "model")), logical={})
+    assert flat.pod_axis is None
+    assert flat.topology().tiers == ("flat",)
+
+
+def test_multipod_mesh_context_drives_mesh_executor():
+    """An active multipod MeshContext supplies the pod mesh to BOTH mesh
+    executors — fits resolve it without re-plumbing the mesh."""
+    import numpy as np
+
+    from repro import api
+    from repro.launch.mesh import make_multipod_mesh
+    from repro.ml.linear import lsq_loss
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(8, 10, 5)))
+    w = jnp.asarray(rng.normal(size=(5,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    set_mesh_context(MeshContext(mesh=make_multipod_mesh(), logical={}))
+    try:
+        flat = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", steps=10, executor="mesh")
+        hier = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="allreduce", steps=10, executor="multipod")
+    finally:
+        set_mesh_context(None)
+    np.testing.assert_array_equal(np.asarray(flat.theta), np.asarray(hier.theta))
+    assert hier.ledger.summary()["by_hop"] != {}
