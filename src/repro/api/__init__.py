@@ -15,7 +15,9 @@ package factors that observation into three orthogonal protocols:
   ``multipod`` hierarchical ``("pod", "data")`` placement with per-hop
   ``CommLedger`` pricing · ``sweep`` vmapped scenario batch · ``serve``
   local fit handed straight to a ``repro.serve.ServeEngine``
-  (train→serve as an executor swap).
+  (train→serve as an executor swap) · composed ``mesh+sweep`` /
+  ``multipod+sweep`` — the scenario vmap nested inside the shard
+  placement (see ``docs/EXECUTORS.md``).
 
 The single entry point::
 
@@ -31,6 +33,7 @@ migration guide from the historical per-algorithm entry points.
 
 from repro.api.engine import FitResult, fit
 from repro.api.executor import (
+    COMPOSED_EXECUTORS,
     EXECUTORS,
     Executor,
     LocalExecutor,
@@ -91,5 +94,6 @@ __all__ = [
     "ServingExecutor",
     "SweepExecutor",
     "EXECUTORS",
+    "COMPOSED_EXECUTORS",
     "make_executor",
 ]

@@ -5,8 +5,10 @@
 runs any (strategy × transport × wire) combination on a chosen executor
 (`local` stacked scan / `mesh` shard_map placement / `multipod`
 hierarchical pod placement with per-hop ledger pricing / `sweep` vmapped
-scenario batch — see ``repro.api.executor``) inside one jit/scan-able
-engine and returns a uniform ``FitResult``.  The engine owns what every
+scenario batch / composed `mesh+sweep` & `multipod+sweep` scenario vmaps
+nested inside the shard placement — see ``repro.api.executor`` and
+``docs/EXECUTORS.md``) inside one jit/scan-able engine and returns a
+uniform ``FitResult``.  The engine owns what every
 historical entry point used to reimplement by hand: the scan loop (via
 the transport + executor), message encoding (via the wire), and
 ``CommLedger`` byte accounting (materialized here from the per-round
@@ -70,6 +72,7 @@ def fit(
     transport: str | Transport = "sequential_server",
     wire: str | Wire = "dense",
     executor: str | Executor = "local",
+    sweep: dict | None = None,
     schedule=None,
     steps: int | None = None,
     stream: PyTree = None,
@@ -88,10 +91,18 @@ def fit(
       transport: one of ``sequential_server`` / ``stale_server`` /
         ``delay_line`` / ``allreduce`` / ``admm_consensus``, or a
         ``Transport`` instance.
-      wire: ``"dense"``, ``"topk:<f>[+ef]"``, ``"int8[+ef]"`` or a ``Wire``.
-      executor: ``"local"`` (stacked scan), ``"mesh"`` (shard_map node
-        placement; or a configured ``MeshExecutor(mesh)``), or an
-        ``api.SweepExecutor({...})`` scenario batch.
+      wire: ``"dense"``, ``"topk:<f>[+ef]"``, ``"thresh:<τ>[+ef]"``,
+        ``"int8[+ef]"`` or a ``Wire``.
+      executor: ``"local"`` (stacked scan), ``"mesh"`` / ``"multipod"``
+        (shard_map node placement; or a configured ``MeshExecutor(mesh)``
+        / ``MultiPodExecutor(mesh, ...)``), an
+        ``api.SweepExecutor({...}, inner=...)`` scenario batch, or the
+        composed spec strings ``"sweep"`` / ``"mesh+sweep"`` /
+        ``"multipod+sweep"`` whose scenario values arrive via ``sweep=``.
+        See ``docs/EXECUTORS.md`` for the compatibility matrix.
+      sweep: scenario parameters for the string sweep specs, e.g.
+        ``fit(..., executor="mesh+sweep", sweep={"lr": jnp.asarray(
+        [0.02, 0.1])})`` — same keys ``api.SweepExecutor`` accepts.
       schedule: int32 contact schedule (server transports; see
         ``repro.core.schedules``).
       steps: number of rounds (update/consensus transports).
@@ -104,7 +115,7 @@ def fit(
     """
     w = make_wire(wire)
     tr = make_transport(transport, **transport_options)
-    ex = make_executor(executor)
+    ex = make_executor(executor, sweep_params=sweep)
     raw = tr.run(
         strategy, data,
         wire=w, schedule=schedule, steps=steps, stream=stream,

@@ -22,17 +22,32 @@ a pure placement choice: the same transport step runs
   ONE executable and return a batched ``FitResult`` with per-scenario
   ``CommLedger``s.
 
+Executors COMPOSE: ``SweepExecutor(params, inner=MeshExecutor(...))``
+(spec strings ``"mesh+sweep"`` / ``"multipod+sweep"`` with the scenario
+values passed as ``fit(..., sweep={...})``) runs the scenario vmap
+*inside* the shard_map body — S scenarios train per shard in one
+executable, saturating the mesh, with per-scenario ``CommLedger``s (and,
+under a multipod inner, the per-hop decomposition preserved per
+scenario).  And the §5 *server* transports, which walk one sequential
+contact schedule, now place on the mesh executors too: each contact's
+``local_step`` runs masked on the shard owning the contacted node and
+the push is replicated to every shard with one ``psum``
+(``local_node`` / ``from_owner`` below) — local ≡ mesh bit-exact.
+
 Transports do not hard-code stacked-axis arithmetic anymore; they express
 their step against the executor-provided primitive set below —
 ``aggregate`` / ``broadcast`` / ``node_axis`` (+ the ``metric_mean`` /
-``sum_bytes`` / ``num_node_shards`` / ``node_shard_index`` helpers).  The
-primitives are ambient (a trace-time context installed by the running
-executor) and resolve against the context's ``core.topology.Topology``:
-a flat topology reduces every node axis in one hop (today's behavior,
-bit-exact), a hierarchical one stages the reduction intra-pod first and
-inter-pod last.  Under the local executor every primitive degrades to
-the identity / the stacked ``server_allreduce``, keeping historical
-results bit-exact.
+``sum_bytes`` / ``num_node_shards`` / ``node_shard_index`` /
+``node_global_index`` / ``local_node`` / ``from_owner`` /
+``commit_owner`` helpers).  The primitives are ambient (a trace-time
+context installed by the running executor) and resolve against the
+context's ``core.topology.Topology``: a flat topology reduces every node
+axis in one hop (today's behavior, bit-exact), a hierarchical one stages
+the reduction intra-pod first and inter-pod last.  Under the local
+executor every primitive degrades to the identity / the stacked
+``server_allreduce``, keeping historical results bit-exact.  See
+``docs/EXECUTORS.md`` for the full guide and the Transport × Executor
+compatibility matrix.
 """
 
 from __future__ import annotations
@@ -74,6 +89,8 @@ class ExecContext(NamedTuple):
     topology: Any = None
     #: per-axis shard counts in ``node_axis`` order (for shard indexing)
     axis_sizes: Any = None
+    #: logical nodes hosted per shard (K / num_shards); None locally
+    nodes_per_shard: int | None = None
 
 
 def current_exec_context() -> ExecContext | None:
@@ -130,6 +147,78 @@ def node_shard_index():
     return idx
 
 
+def node_global_index(k_local):
+    """Global node index of shard-local node ``k_local`` (identity
+    locally).  Server-family strategies that index REPLICATED per-node
+    structures — a pooled θ slot block, a stacked per-node RNG key array
+    — recover the global position with this while still reading their
+    data shard at the local index (the k-windows strategy is the
+    canonical user)::
+
+        def local_step(self, k, theta, state, data):
+            kg = _exec.node_global_index(k)      # slot into replicated pools
+            win = kwindows(state[kg], data[k], ...)
+    """
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return k_local
+    return node_shard_index() * ctx.nodes_per_shard + k_local
+
+
+def local_node(k):
+    """Resolve a GLOBAL node index against this shard: returns
+    ``(k_local, mine)`` where ``k_local`` indexes the shard's node slice
+    (clamped into range, so non-owners can still trace the computation)
+    and ``mine`` is True on exactly the shard hosting node ``k``.
+    Locally this is the identity ``(k, True)``.
+
+    This is how the §5 *sequential* schedule places on a mesh: a
+    ``lax.switch`` over shards is not expressible inside ``shard_map``
+    (every shard runs the same program), so each shard computes the
+    contacted node's ``local_step`` masked — only the owner's result is
+    real — and ``from_owner`` replicates it with one ``psum``.
+    """
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return k, jnp.asarray(True)
+    Kl = ctx.nodes_per_shard
+    off = k - node_shard_index() * Kl
+    mine = (off >= 0) & (off < Kl)
+    return jnp.clip(off, 0, Kl - 1), mine
+
+
+def from_owner(tree: PyTree, mine) -> PyTree:
+    """Replicate the owning shard's value to every shard (identity
+    locally).  ``mine`` must be True on exactly one shard along the node
+    axis; everyone else's contribution is zeroed, so the ``psum`` is an
+    exact (fp-addition-with-zeros) broadcast of the owner's ``tree``."""
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return tree
+
+    def sel(x):
+        if x.dtype == jnp.bool_:
+            masked = jnp.where(mine, x, False)
+            return jax.lax.psum(masked.astype(jnp.int32), ctx.node_axis) > 0
+        return jax.lax.psum(
+            jnp.where(mine, x, jnp.zeros_like(x)), ctx.node_axis
+        )
+
+    return jax.tree.map(sel, tree)
+
+
+def commit_owner(new: PyTree, old: PyTree, mine) -> PyTree:
+    """Commit a shard-LOCAL state update only on the owning shard: the
+    owner keeps ``new``, everyone else keeps ``old`` (locally: ``new``).
+    This is how per-node wire state (error-feedback residuals) stays
+    correct under a mesh-placed server transport — non-owner shards
+    trace the same encode but must not corrupt their rows."""
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return new
+    return jax.tree.map(lambda n, o: jnp.where(mine, n, o), new, old)
+
+
 def aggregate(stacked: PyTree, op: str = "sum") -> PyTree:
     """Reduce per-node messages over the node axis, wherever it lives:
     the (shard-local) stacked axis 0, then — under a mesh placement — the
@@ -184,11 +273,22 @@ def sum_bytes(x):
 class Executor:
     """Owns where a fit's per-round loop runs.
 
-    Transports hand the executor a ``make_carry`` thunk, a
-    ``make_step(shard_data, sweep_delay)`` step factory and the scan
-    inputs; the executor decides placement (stacked scan, shard_map'd
-    scan, vmapped scan) and installs the ambient primitive context the
-    step body's ``aggregate``/``metric_mean``/… calls resolve against.
+    Transports hand the executor ``make_carry`` / ``make_step`` factories
+    plus the scan inputs; the executor decides placement (stacked scan,
+    shard_map'd scan, vmapped scan — or a nesting of those) and installs
+    the ambient primitive context the step body's
+    ``aggregate``/``metric_mean``/… calls resolve against.  Two run
+    hooks, one per transport family:
+
+    * ``run_update(make_carry, make_step, …)`` — update-family
+      transports (``allreduce`` / ``delay_line``): every round all nodes
+      step, so the loop places anywhere (sharded, vmapped, or both).
+      ``make_step(shard_data, sweep_delay)`` builds the per-round step
+      against whatever node slice the executor placed here.
+    * ``run_server(make_step, schedule, …)`` — server-family transports
+      (``sequential_server`` / ``stale_server``): ONE node steps per
+      contact.  Local and mesh executors place this (the mesh masks the
+      pusher's compute onto its own shard); batching executors raise.
     """
 
     name = "executor"
@@ -205,6 +305,9 @@ class Executor:
         return tree
 
     def finalize(self, strategy, theta, state, data):
+        """Strategy finalize under this executor's batching (vmapped per
+        scenario by the sweep executor; the serving executor additionally
+        stands the result up behind an engine)."""
         return strategy.finalize(theta, state, data)
 
     def extra_metrics(self) -> dict:
@@ -225,18 +328,27 @@ class Executor:
     ):
         raise NotImplementedError
 
-    def run_server(self, *, step, carry, schedule):
+    def run_server(self, *, strategy, data, carry, make_step, schedule,
+                   wire=None):
         raise ValueError(
             "server transports walk one contact schedule sequentially — "
-            f"executor {self.name!r} cannot place them; use executor='local'"
+            f"executor {self.name!r} cannot place them; use "
+            "executor='local' (or 'mesh'/'multipod' to run each contact's "
+            "local_step on the shard owning the contacted node)"
         )
 
 
 class LocalExecutor(Executor):
-    """Today's engine: K logical nodes stacked on one host, one
-    ``lax.scan``.  No ambient context is installed, so every primitive is
-    the stacked identity and results are bit-exact with the historical
-    loops."""
+    """K logical nodes stacked on one host, one ``lax.scan``.
+
+    No ambient context is installed, so every primitive is the stacked
+    identity and results are bit-exact with the historical loops::
+
+        res = api.fit(strategy, data, transport="allreduce", steps=100)
+        # executor="local" is the default — these are the same run
+        res = api.fit(strategy, data, transport="allreduce", steps=100,
+                      executor="local")
+    """
 
     name = "local"
 
@@ -249,8 +361,9 @@ class LocalExecutor(Executor):
         step = make_step(data, None)
         return jax.lax.scan(step, carry, xs, length=length)
 
-    def run_server(self, *, step, carry, schedule):
-        return jax.lax.scan(step, carry, schedule)
+    def run_server(self, *, strategy, data, carry, make_step, schedule,
+                   wire=None):
+        return jax.lax.scan(make_step(data), carry, schedule)
 
 
 class ServingExecutor(LocalExecutor):
@@ -309,25 +422,38 @@ class ResolvedPlacement(NamedTuple):
 class MeshExecutor(Executor):
     """Place the K nodes on the data axis of a ``jax.sharding.Mesh``.
 
-    The whole scan runs inside one ``shard_map``: each device hosts
-    K/ndev nodes of the data (and the wire's per-node state, e.g. EF
-    residuals), θ and the strategy state stay replicated, and
-    ``aggregate`` completes shard-local reductions with
+    For update transports the whole scan runs inside one ``shard_map``:
+    each device hosts K/ndev nodes of the data (and the wire's per-node
+    state, e.g. EF residuals), θ and the strategy state stay
+    replicated, and ``aggregate`` completes shard-local reductions with
     ``psum``/``pmean`` over the mesh axes — the §3.1 equivalence run in
     the native direction, staged hop by hop through the mesh's implied
     ``Topology`` (pod meshes reduce intra-pod first, then inter-pod;
     1-D meshes keep the single-collective behavior bit-exact).  Wire
     encode/decode executes per shard, so a compressed wire's kernels
     (Pallas ``topk_compress``) sit on the real per-device hot path.
+    Server transports place too (``run_server``): the sequential
+    schedule walks unchanged, with each contact's local_step masked
+    onto the shard owning the contacted node — bit-exact with local.
+    A ``SweepExecutor(..., inner=MeshExecutor(...))`` nests its
+    scenario vmap inside the shard_map body via ``place_update``.
+
+    ::
+
+        res = api.fit(strategy, data, transport="allreduce", steps=100,
+                      executor="mesh")            # all local devices
+        res = api.fit(strategy, data, transport="allreduce", steps=100,
+                      executor=api.MeshExecutor(mesh))   # explicit mesh
 
     Strategies with ``replicate_data=True`` (the cascade SVM, whose
     per-node training sets overlap through the shared global-SV pool)
     receive the FULL data on every shard and reconstruct their node
-    slice from ``node_shard_index()`` instead.
+    slice from ``node_shard_index()`` instead (update transports only).
 
     Mesh resolution order: explicit ``mesh=`` → the active
     ``sharding.rules.MeshContext`` (its ``node_axes``) → a fresh 1-D
-    ``("data",)`` mesh over all local devices (``launch.mesh``).
+    ``("data",)`` mesh over all local devices (``launch.mesh``).  See
+    ``docs/EXECUTORS.md``.
     """
 
     name = "mesh"
@@ -373,10 +499,31 @@ class MeshExecutor(Executor):
             mesh=mesh, axes=axes, axis=axis, num_shards=ndev, topology=topology
         )
 
-    def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
-    ):
+    def _placement_context(self, r: ResolvedPlacement, K: int) -> ExecContext:
+        return ExecContext(
+            node_axis=r.axis, num_shards=r.num_shards, topology=r.topology,
+            axis_sizes=tuple(r.mesh.shape[a] for a in r.axes),
+            nodes_per_shard=K // r.num_shards,
+        )
+
+    def _check_divisible(self, K: int, ndev: int) -> None:
+        if K % ndev != 0:
+            raise ValueError(
+                f"{K} nodes cannot be placed evenly on {ndev} mesh shards"
+            )
+
+    def place_update(self, *, strategy, data, carry, body, xs,
+                     scenario_axis: bool = False):
+        """Shard-map an update-family loop body onto the resolved mesh.
+
+        ``body(carry, shard_data, xs)`` runs per shard with the ambient
+        primitive context installed — a plain scan for the bare mesh
+        executor, or a scenario-vmapped scan when a ``SweepExecutor``
+        composes with this placement (``scenario_axis=True``: every
+        carry component then has a leading S axis, so the per-node wire
+        state shards on its SECOND axis).  This is the inner-vmap hook
+        ``run_update`` is built on.
+        """
         from repro.api.strategy import Strategy
 
         r = self.resolve()
@@ -397,44 +544,93 @@ class MeshExecutor(Executor):
                 "to 'sum'/'mean'/'max'/'any' instead)"
             )
         K = strategy.num_nodes(data)
-        if K % ndev != 0:
-            raise ValueError(
-                f"{K} nodes cannot be placed evenly on {ndev} mesh shards"
-            )
-        if carry is None:
-            carry = make_carry()
-        ctx = ExecContext(
-            node_axis=axis, num_shards=ndev, topology=r.topology,
-            axis_sizes=tuple(mesh.shape[a] for a in r.axes),
-        )
+        self._check_divisible(K, ndev)
+        ctx = self._placement_context(r, K)
         # carry = (theta, strategy state, wire state, delay line): everything
         # replicated except the per-node wire state, which lives with its node
-        cspec = (P(), P(), P(axis), P())
+        wspec = P(None, axis) if scenario_axis else P(axis)
+        cspec = (P(), P(), wspec, P())
         # replicate-data strategies see the whole dataset on every shard
         # and slice their own nodes out via node_shard_index()
         dspec = P() if strategy.replicate_data else P(axis)
 
+        def shard_body(c, d, x):
+            with executing(ctx):
+                return body(c, d, x)
+
         if xs is None:
-
-            def body(c, d):
-                with executing(ctx):
-                    return jax.lax.scan(make_step(d, None), c, None, length=length)
-
             fn = shard_map(
-                body, mesh=mesh, in_specs=(cspec, dspec),
-                out_specs=(cspec, P()), check_rep=False,
+                lambda c, d: shard_body(c, d, None), mesh=mesh,
+                in_specs=(cspec, dspec), out_specs=(cspec, P()),
+                check_rep=False,
             )
             return fn(carry, data)
-
-        def body(c, d, x):
-            with executing(ctx):
-                return jax.lax.scan(make_step(d, None), c, x, length=length)
-
         fn = shard_map(
-            body, mesh=mesh, in_specs=(cspec, dspec, P()),
+            shard_body, mesh=mesh, in_specs=(cspec, dspec, P()),
             out_specs=(cspec, P()), check_rep=False,
         )
         return fn(carry, data, xs)
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
+    ):
+        if carry is None:
+            carry = make_carry()
+
+        def body(c, d, x):
+            return jax.lax.scan(make_step(d, None), c, x, length=length)
+
+        return self.place_update(
+            strategy=strategy, data=data, carry=carry, body=body, xs=xs
+        )
+
+    def run_server(self, *, strategy, data, carry, make_step, schedule,
+                   wire=None):
+        """Place the §5 sequential schedule on the mesh: data shards over
+        the node axis, every contact's ``local_step`` runs masked on each
+        shard (``local_node`` resolves the contacted node against the
+        shard's slice) and only the owner's push survives the
+        ``from_owner`` psum — bit-exact with the local walk, because
+        adding the non-owners' zeros is exact in fp.
+
+        The strategy's ``state`` stays REPLICATED here: ``local_step``
+        must either pass it through or update it identically on every
+        shard (true for every in-repo server strategy; per-node mutable
+        state belongs in the wire state, which shards with its node and
+        commits owner-only).
+        """
+        if data is None:
+            raise ValueError(
+                "mesh-placed server transports need data with a leading "
+                "node axis to shard; closure-based strategies "
+                "(FunctionStrategy over captured data) run executor='local'"
+            )
+        if strategy.replicate_data:
+            raise ValueError(
+                f"{type(strategy).__name__} declares replicate_data=True — "
+                "its contacts read the whole dataset, so there is nothing "
+                "to place; use executor='local' for server transports"
+            )
+        r = self.resolve()
+        mesh, axis, ndev = r.mesh, r.axis, r.num_shards
+        K = strategy.num_nodes(data)
+        self._check_divisible(K, ndev)
+        ctx = self._placement_context(r, K)
+        # carry = (server state, strategy state, wire state): the server
+        # and strategy state are replicated, the per-node wire state
+        # (EF residuals) lives with its node's shard
+        cspec = (P(), P(), P(axis))
+
+        def body(c, d, sched):
+            with executing(ctx):
+                return jax.lax.scan(make_step(d), c, sched)
+
+        fn = shard_map(
+            body, mesh=mesh, in_specs=(cspec, P(axis), P()),
+            out_specs=(cspec, P()), check_rep=False,
+        )
+        return fn(carry, data, schedule)
 
 
 class MultiPodExecutor(MeshExecutor):
@@ -519,6 +715,22 @@ class SweepExecutor(Executor):
     change compiled shapes and cannot ride one executable — run those as
     separate ``fit`` calls.
 
+    ``inner=`` composes the sweep with a mesh placement: with
+    ``SweepExecutor(params, inner=MeshExecutor(...))`` (spec strings
+    ``"mesh+sweep"`` / ``"multipod+sweep"`` + ``fit(..., sweep=params)``)
+    the scenario vmap runs INSIDE the shard_map body — each device hosts
+    its node slice and trains all S scenarios on it in one executable,
+    so a hyperparameter search saturates the mesh instead of idling it::
+
+        sw = api.SweepExecutor({"lr": jnp.asarray([0.02, 0.1])},
+                               inner=api.MeshExecutor(mesh))
+        res = api.fit(strategy, data, transport="allreduce", steps=200,
+                      executor=sw)   # == executor="mesh+sweep", sweep={...}
+
+    Results are bit-exact with S independent fits on the same inner
+    executor, and a ``MultiPodExecutor`` inner keeps its per-hop ledger
+    decomposition — per scenario.
+
     The engine materializes one ``CommLedger`` per scenario from the
     batched byte counts; ``FitResult.theta`` / ``.trajectory`` /
     ``metrics["carry"]`` all gain a leading S axis (the carry resumes a
@@ -528,7 +740,7 @@ class SweepExecutor(Executor):
     name = "sweep"
     RESERVED = ("staleness", "theta0")
 
-    def __init__(self, params: dict):
+    def __init__(self, params: dict, *, inner: "Executor | str | None" = None):
         if not params:
             raise ValueError("sweep executor needs at least one swept parameter")
         # values may be pytrees (a batched theta0 for model-pytree
@@ -552,6 +764,24 @@ class SweepExecutor(Executor):
                 f"swept parameters disagree on scenario count: {counts}"
             )
         self.num_scenarios = next(iter(counts.values()))
+        if inner is not None and not isinstance(inner, Executor):
+            inner = make_executor(inner)
+        if isinstance(inner, (ServingExecutor, SweepExecutor)):
+            raise ValueError(
+                f"sweep cannot nest a {inner.name!r} executor — inner= "
+                "takes a mesh placement (MeshExecutor/MultiPodExecutor) "
+                "or None/local"
+            )
+        if isinstance(inner, LocalExecutor):
+            inner = None  # local inner ≡ the plain vmapped sweep
+        if inner is not None and not isinstance(inner, MeshExecutor):
+            raise ValueError(
+                f"unsupported sweep inner executor {inner.name!r} — use "
+                "MeshExecutor/MultiPodExecutor (or None for the local vmap)"
+            )
+        self.inner = inner
+        if inner is not None:
+            self.name = f"{inner.name}+sweep"
 
     def swept(self, key: str):
         return self.params.get(key)
@@ -568,10 +798,14 @@ class SweepExecutor(Executor):
             theta, state
         )
 
-    def run_update(
-        self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
-    ):
+    def ledger_hops(self, strategy, data):
+        # a multipod inner keeps its per-hop pricing — applied by the
+        # engine to every scenario's ledger
+        if self.inner is None:
+            return None
+        return self.inner.ledger_hops(strategy, data)
+
+    def _resolve_targets(self, strategy, wire):
         attrs = {
             k: v for k, v in self.params.items() if k not in self.RESERVED
         }
@@ -587,49 +821,172 @@ class SweepExecutor(Executor):
                     f"{type(strategy).__name__} or the wire (reserved keys: "
                     f"{self.RESERVED})"
                 )
+        return attrs, targets
+
+    @staticmethod
+    @contextmanager
+    def _rebound(targets, vals):
+        """Rebind swept strategy/wire attributes for the duration of one
+        scenario's trace (the saved Python values are restored after)."""
+        saved = {k: getattr(targets[k], k) for k in vals}
+        try:
+            for k, v in vals.items():
+                setattr(targets[k], k, v)
+            yield
+        finally:
+            for k, v in saved.items():
+                setattr(targets[k], k, v)
+
+    def run_update(
+        self, *, strategy, data, carry, make_carry, make_step, xs, length,
+        wire=None,
+    ):
+        attrs, targets = self._resolve_targets(strategy, wire)
         stal = self.params.get("staleness")
         theta0s = self.params.get("theta0")
 
-        def one(vals, d, th0, c):
-            saved = {k: getattr(targets[k], k) for k in vals}
-            try:
-                for k, v in vals.items():
-                    setattr(targets[k], k, v)
-                if c is not None:
-                    c0 = c
-                elif th0 is None:
-                    c0 = make_carry()
-                else:
-                    c0 = make_carry(theta0=th0)
-                return jax.lax.scan(
-                    make_step(data, d), c0, xs, length=length
-                )
-            finally:
-                for k, v in saved.items():
-                    setattr(targets[k], k, v)
+        if self.inner is None:
 
-        axes = (
-            {k: 0 for k in attrs},
-            None if stal is None else 0,
-            None if theta0s is None else 0,
-            None if carry is None else 0,
+            def one(vals, d, th0, c):
+                with self._rebound(targets, vals):
+                    if c is not None:
+                        c0 = c
+                    elif th0 is None:
+                        c0 = make_carry()
+                    else:
+                        c0 = make_carry(theta0=th0)
+                    return jax.lax.scan(
+                        make_step(data, d), c0, xs, length=length
+                    )
+
+            axes = (
+                {k: 0 for k in attrs},
+                None if stal is None else 0,
+                None if theta0s is None else 0,
+                None if carry is None else 0,
+            )
+            return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
+
+        # --- mesh-composed: scenario vmap INSIDE the shard_map body ---
+        # The scenario-batched carry is built OUTSIDE the mesh (global
+        # node layout, same trace the local sweep would run), sharded on
+        # entry; each shard then vmaps the scan over scenarios, so the
+        # executable is shard_map(vmap(scan)) — S scenarios per device.
+        if carry is None:
+            if attrs or theta0s is not None:
+
+                def build(vals, th0):
+                    with self._rebound(targets, vals):
+                        return (
+                            make_carry() if th0 is None
+                            else make_carry(theta0=th0)
+                        )
+
+                carry = jax.vmap(
+                    build,
+                    in_axes=(
+                        {k: 0 for k in attrs},
+                        None if theta0s is None else 0,
+                    ),
+                )(attrs, theta0s)
+            else:
+                # only "staleness" swept: every scenario starts from the
+                # same carry; the lanes diverge through the read index
+                c0 = make_carry()
+                S = self.num_scenarios
+                carry = jax.tree.map(
+                    lambda x: jnp.broadcast_to(x, (S,) + x.shape), c0
+                )
+
+        def body(c, d, x):
+            def one(vals, st, c1):
+                with self._rebound(targets, vals):
+                    return jax.lax.scan(
+                        make_step(d, st), c1, x, length=length
+                    )
+
+            return jax.vmap(
+                one,
+                in_axes=({k: 0 for k in attrs}, None if stal is None else 0, 0),
+            )(attrs, stal, c)
+
+        return self.inner.place_update(
+            strategy=strategy, data=data, carry=carry, body=body, xs=xs,
+            scenario_axis=True,
         )
-        return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
+
+    def run_server(self, *, strategy, data, carry, make_step, schedule,
+                   wire=None):
+        raise ValueError(
+            "server transports walk one contact schedule sequentially — "
+            "the sweep executor cannot batch them; use executor='local' "
+            "(or 'mesh'/'multipod' for shard placement)"
+        )
 
 
 EXECUTORS = ("local", "mesh", "multipod", "sweep", "serve")
+#: composed spec strings: the sweep's scenario vmap nested inside a mesh
+#: placement (scenario values via ``fit(..., sweep={...})``)
+COMPOSED_EXECUTORS = ("mesh+sweep", "multipod+sweep")
 
 
-def make_executor(spec: str | Executor | None) -> Executor:
-    """Resolve an executor spec: an ``Executor`` instance, ``None``/"local",
-    "mesh" (nodes over all local devices / the active mesh context),
-    "multipod" (the ``("pod", "data")`` hierarchical placement with
-    per-hop ledger pricing), "serve" (local fit, finalized model handed
-    to a ``ServeEngine``), or a configured ``MeshExecutor(mesh)`` /
-    ``MultiPodExecutor(mesh, intra_price=, inter_price=)`` /
-    ``SweepExecutor(params)`` / ``ServingExecutor(...)``."""
+def make_executor(
+    spec: str | Executor | None, sweep_params: dict | None = None
+) -> Executor:
+    """Resolve an executor spec.
+
+    ``spec`` is an ``Executor`` instance, ``None``/``"local"``, ``"mesh"``
+    (nodes over all local devices / the active mesh context),
+    ``"multipod"`` (the ``("pod", "data")`` hierarchical placement with
+    per-hop ledger pricing), ``"serve"`` (local fit, finalized model
+    handed to a ``ServeEngine``), ``"sweep"``, or a composed
+    ``"mesh+sweep"`` / ``"multipod+sweep"`` — the scenario vmap nested
+    inside the shard_map body.  The sweep spec strings need their
+    scenario values supplied as ``sweep_params`` (what ``fit``'s
+    ``sweep=`` kwarg forwards)::
+
+        make_executor("mesh+sweep", {"lr": jnp.asarray([0.02, 0.1])})
+        # ≡ SweepExecutor({"lr": ...}, inner=MeshExecutor())
+
+    Configured instances (``MeshExecutor(mesh)``, ``MultiPodExecutor(
+    mesh, intra_price=, inter_price=)``, ``SweepExecutor(params,
+    inner=)``, ``ServingExecutor(...)``) pass through unchanged.
+    """
     if isinstance(spec, Executor):
+        if sweep_params is not None:
+            raise ValueError(
+                "sweep= only applies to string executor specs — configure "
+                "SweepExecutor(params, inner=...) directly instead"
+            )
         return spec
+    parts = tuple((spec or "local").split("+"))
+    if "sweep" in parts:
+        inner_parts = tuple(p for p in parts if p != "sweep")
+        if len(inner_parts) + 1 != len(parts) or inner_parts not in (
+            (), ("local",), ("mesh",), ("multipod",)
+        ):
+            raise ValueError(
+                f"unknown executor {spec!r} — sweep composes as "
+                f"{COMPOSED_EXECUTORS}"
+            )
+        if sweep_params is None:
+            raise ValueError(
+                "the sweep executor needs scenario parameters — pass "
+                "fit(..., sweep={'lr': [...], ...}) alongside the spec "
+                "string, or a configured api.SweepExecutor({...})"
+            )
+        inner = inner_parts[0] if inner_parts else None
+        return SweepExecutor(sweep_params, inner=inner)
+    if sweep_params is not None:
+        base = spec or "local"
+        hint = (
+            f"executor='{base}+sweep' (or 'sweep')"
+            if base in ("local", "mesh", "multipod")
+            else f"one of {COMPOSED_EXECUTORS} or 'sweep'"
+        )
+        raise ValueError(
+            f"sweep= scenario parameters need a sweep executor — {hint}"
+        )
     if spec is None or spec == "local":
         return LocalExecutor()
     if spec == "mesh":
@@ -638,9 +995,4 @@ def make_executor(spec: str | Executor | None) -> Executor:
         return MultiPodExecutor()
     if spec == "serve":
         return ServingExecutor()
-    if spec == "sweep":
-        raise ValueError(
-            "the sweep executor needs scenario parameters — pass "
-            "api.SweepExecutor({'lr': [...], ...}) instead of the bare string"
-        )
     raise ValueError(f"unknown executor {spec!r} — one of {EXECUTORS}")

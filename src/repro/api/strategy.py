@@ -156,7 +156,15 @@ class Strategy:
 
 class FunctionStrategy(Strategy):
     """Wrap a bare update function ``F(k, θ) -> θ'`` (the paper's notation)
-    as a server-family strategy — the 3-line path from ``run_protocol``."""
+    as a server-family strategy — the 3-line path from ``run_protocol``::
+
+        strategy = api.FunctionStrategy(F, num_nodes=K)
+        res = api.fit(strategy, transport="sequential_server",
+                      schedule=schedules.round_robin(K, 50), theta0=theta0)
+
+    ``F`` closes over its data, so this strategy has nothing for a mesh
+    executor to shard — server runs stay on ``executor="local"``.
+    """
 
     def __init__(self, F: Callable, *, num_nodes: int, metric: Callable | None = None):
         self._F = F
@@ -186,7 +194,16 @@ class GradientDescent(Strategy):
     Under ``allreduce`` this is the [47]/[5] pattern (push local gradient,
     receive the global aggregate) — bit-identical to the historical
     ``ml.linear.distributed_gd``.  Under the server transports each contact
-    is one local gradient step (the §5 quickstart learner).
+    is one local gradient step (the §5 quickstart learner)::
+
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (Xs, ys),
+                      transport="allreduce", steps=100)
+        res.metrics["loss"]            # final mean loss over all nodes
+
+    Placement-oblivious by construction: the per-node weights normalize
+    by the GLOBAL node count (``num_node_shards``) and the round metric
+    completes across shards (``metric_mean``), so the same instance runs
+    under every executor, server transports included.
     """
 
     def __init__(
@@ -289,7 +306,16 @@ def _two_loop(g, S, Y, rho, valid):
 class LBFGS(Strategy):
     """[5]'s distributed L-BFGS: ONE gradient Allreduce per iteration; the
     (s, y) rank-1 history and the two-loop recursion run locally — and
-    deterministically identically — on every node."""
+    deterministically identically — on every node.
+
+    ``aggregate_op = "mean"`` declares the reduction, so mesh executors
+    complete it with a native ``pmean`` instead of a Python override;
+    ``init_rounds = 1`` charges the initial global gradient to the
+    ledger::
+
+        res = api.fit(api.LBFGS(lsq_loss), (Xs, ys),
+                      transport="allreduce", steps=25, executor="mesh")
+    """
 
     init_rounds = 1  # the initial global gradient
     aggregate_op = "mean"
@@ -373,7 +399,16 @@ class ProxStrategy(Strategy):
     """Consensus-family strategy: per-node proximity operators for the
     ``admm_consensus`` transport (the paper's Douglas-Rachford three-stage
     algorithm).  ``make_prox(data)`` builds the vectorized local prox
-    ``(v, u, rho) -> (K, n)`` — closed form or inner gradient loop."""
+    ``(v, u, rho) -> (K, n)`` — closed form or inner gradient loop::
+
+        res = api.fit(api.ProxStrategy(lasso_prox_builder), (Xs, ys),
+                      transport="admm_consensus", steps=50,
+                      g="l1", g_lam=0.1)
+
+    Consensus runs wrap ``core.admm``'s own loop, so they are one-shot
+    (no warm start / resume), require a lossless wire, and run on the
+    local executor only.
+    """
 
     def __init__(self, make_prox: Callable, *, dim: int | None = None):
         self._make_prox = make_prox
@@ -394,7 +429,18 @@ class OptimizerStrategy(Strategy):
     one logical push per step whose message is the gradient of ``loss_fn``
     on the per-round batch, applied through a ``repro.optim`` optimizer.
     Compose with ``delay_line`` for §5 bounded staleness and a compressed
-    wire for the low-communication push."""
+    wire for the low-communication push::
+
+        strategy = api.OptimizerStrategy(loss_fn, adam(3e-4))
+        res = api.fit(strategy, None, transport="delay_line", staleness=1,
+                      wire="topk:0.05+ef", stream=batches, theta0=params)
+
+    One logical node (``num_nodes == 1``, ``stacked_msgs = False``), so
+    mesh executors do not apply; a swept ``{"staleness": ...}`` does —
+    including under a multipod ``MeshContext``, where the activation
+    sharding nests inside the scenario vmap
+    (``launch/train.py --sweep-staleness --multipod``).
+    """
 
     stacked_msgs = False
 

@@ -19,10 +19,13 @@ A transport's ``run`` builds the per-round step; it calls back into the
 strategy for local computation, into the wire for message encoding and
 byte metering, and into the executor-provided primitive set
 (``repro.api.executor``: ``aggregate`` / ``broadcast`` / ``metric_mean`` /
-``sum_bytes``) for everything that depends on WHERE the nodes live — the
-executor owns the loop placement (stacked scan, ``shard_map``'d scan,
-vmapped scenario sweep) and returns what the transport wraps into a
-``RawRun`` for the engine.
+``sum_bytes`` — and, for the server family, ``local_node`` /
+``from_owner`` / ``commit_owner``) for everything that depends on WHERE
+the nodes live — the executor owns the loop placement (stacked scan,
+``shard_map``'d scan, vmapped scenario sweep, or shard_map(vmap(scan))
+for the composed ``mesh+sweep``) and returns what the transport wraps
+into a ``RawRun`` for the engine.  See ``docs/EXECUTORS.md`` for the
+Transport × Executor compatibility matrix.
 """
 
 from __future__ import annotations
@@ -69,7 +72,23 @@ def _resolve_theta0(strategy, data, theta0):
 
 
 class ServerTransport(Transport):
-    """The §5 central information server under a contact schedule."""
+    """The §5 central information server under a contact schedule.
+
+    The per-contact step is written against the executor primitive set,
+    so the same program places anywhere ``run_server`` can put it: on
+    the local executor ``local_node``/``from_owner``/``commit_owner``
+    are identities and the walk is the historical sequential scan
+    (bit-exact with ``core.server.run_protocol``); on a mesh executor
+    the schedule stays sequential but each contact's ``local_step``
+    runs on the shard OWNING the contacted node — every shard traces
+    the step masked, the owner's push is replicated by one ``psum``,
+    and per-node wire state commits owner-only::
+
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (Xs, ys),
+                      transport="sequential_server",
+                      schedule=schedules.round_robin(K, rounds),
+                      executor="mesh")     # local ≡ mesh, bit-exact
+    """
 
     def __init__(self, handoff: str):
         if handoff not in ("sequential", "stale"):
@@ -99,20 +118,38 @@ class ServerTransport(Transport):
         down_const = wire.measure(theta_template)  # dense θ handed back
         static_up = wire.push_bytes(theta_template)
 
-        def step(c, k):
-            server, sstate, wstate = c
-            theta_start = (
-                server.theta if handoff == "sequential" else server.theta_prev
-            )
-            theta_new, sstate = strategy.local_step(k, theta_start, sstate, data)
-            wstate, theta_push, up = wire.encode_push(
-                wstate, k, theta_start, theta_new
-            )
-            server, received = contact(server, theta_push, handoff=handoff)
-            return (server, sstate, wstate), (received, up)
+        def make_step(shard_data):
+            """Per-contact step over whatever node slice the executor
+            placed here (the full stack locally, a shard under a mesh)."""
+
+            def step(c, k):
+                server, sstate, wstate = c
+                theta_start = (
+                    server.theta if handoff == "sequential"
+                    else server.theta_prev
+                )
+                k_loc, mine = _exec.local_node(k)
+                # masked compute: every shard traces the pusher's local
+                # run at its own (clamped) slice index; only the owner's
+                # result is real.  The strategy state stays replicated
+                # (see MeshExecutor.run_server), so it is NOT selected.
+                theta_new, sstate = strategy.local_step(
+                    k_loc, theta_start, sstate, shard_data
+                )
+                wstate_new, theta_push, up = wire.encode_push(
+                    wstate, k_loc, theta_start, theta_new
+                )
+                theta_push = _exec.from_owner(theta_push, mine)
+                up = _exec.from_owner(up, mine)
+                wstate = _exec.commit_owner(wstate_new, wstate, mine)
+                server, received = contact(server, theta_push, handoff=handoff)
+                return (server, sstate, wstate), (received, up)
+
+            return step
 
         (server, sstate, wstate), (traj, ups) = executor.run_server(
-            step=step, carry=carry, schedule=schedule
+            strategy=strategy, data=data, carry=carry, make_step=make_step,
+            schedule=schedule, wire=wire,
         )
         theta = executor.finalize(strategy, server.theta, sstate, data)
         T = len(schedule)
@@ -135,7 +172,18 @@ class ServerTransport(Transport):
 class UpdateTransport(Transport):
     """Synchronous Allreduce (staleness=0) or the bounded-staleness delay
     line (staleness=D>0): every round all nodes push an update message;
-    the aggregate is applied — possibly D rounds late."""
+    the aggregate is applied — possibly D rounds late.
+
+    Every round all nodes work, so the loop places on EVERY executor:
+    the stacked scan, the mesh/multipod shard_map, the scenario sweep,
+    and the composed ``mesh+sweep`` (a swept ``"staleness"`` supersedes
+    the transport's own D — one depth-max(D) delay line shared by all
+    scenarios, read at a batched per-scenario index)::
+
+        api.fit(strategy, data, transport="allreduce", steps=100)
+        api.fit(strategy, data, transport="delay_line", staleness=2,
+                steps=100, executor="mesh")
+    """
 
     def __init__(self, staleness: int = 0):
         if staleness < 0:
@@ -276,7 +324,14 @@ class UpdateTransport(Transport):
 class AdmmTransport(Transport):
     """Global-variable-consensus ADMM: the strategy supplies the per-node
     prox; every iteration costs two Allreduces of the consensus variable
-    (z-update mean + residual norms), which is what the ledger charges."""
+    (z-update mean + residual norms), which is what the ledger charges.
+
+    Wraps ``core.admm.consensus_admm``'s own three-stage loop rather
+    than the executor step protocol, so runs are one-shot (no
+    ``theta0=``/``carry=``), need a LOSSLESS wire (``Wire.lossless`` —
+    compressing consensus pushes would change the algorithm), and run
+    on the local executor only.
+    """
 
     name = "admm_consensus"
 

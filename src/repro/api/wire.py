@@ -44,7 +44,18 @@ PyTree = Any
 
 
 class Wire:
-    """Base wire: dense — push exactly what the strategy produced."""
+    """Base wire: dense — push exactly what the strategy produced.
+
+    A wire is stateless Python configuration + a per-run pytree state
+    (``init_state``); the encode entry points run INSIDE the executor's
+    placed program, so under a mesh executor compression executes per
+    shard and under a sweep a rebindable attribute (``ThresholdWire.tau``)
+    can differ per scenario within one executable::
+
+        res = api.fit(strategy, data, transport="allreduce", steps=100,
+                      wire="topk:0.1+ef")
+        res.ledger.uplink_bytes    # metered through the wire, not by hand
+    """
 
     name = "dense"
     #: capability flag: True when encode is the identity (no information
@@ -87,7 +98,10 @@ class CompressedWire(Wire):
     ``compressor`` maps a pytree to a ``Compressed`` (decoded tree + wire
     bytes).  With ``error_feedback`` the residual of whatever the
     compressor dropped is carried per node and added to the next push —
-    the EF-SGD construction that preserves the non-distributed rate.
+    the EF-SGD construction that preserves the non-distributed rate::
+
+        wire = api.make_wire("topk:0.05+ef")   # or int8[+ef], thresh:<τ>[+ef]
+        wire = api.CompressedWire(my_codec, error_feedback=True, name="mine")
     """
 
     lossless = False

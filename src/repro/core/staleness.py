@@ -68,7 +68,10 @@ def delay_push_read(
     reads the fresh push (synchronous).  This is what lets a vmapped
     scenario sweep compile S different staleness levels into ONE executable:
     every scenario shares the depth-D_max buffer and differs only in the
-    (batched) read index.
+    (batched) read index.  The read is a plain ``dynamic_index_in_dim``,
+    so it batches (vmap) and shards (shard_map) freely — the composed
+    ``mesh+sweep`` executor runs it inside the shard_map body with the
+    buffer replicated and the index per scenario lane.
     """
     ext = jax.tree.map(
         lambda b, g: jnp.concatenate([b, g[None]], axis=0), state.buffer, grads

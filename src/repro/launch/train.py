@@ -23,7 +23,11 @@ trajectory per scenario — the cheapest way to pick D before a long run.
 ``--multipod`` installs a ``("pod", "data")`` multipod ``MeshContext``
 (``launch.mesh.make_multipod_mesh``) so the model's activation-sharding
 constraints place the batch over pods × intra-pod data shards — the
-production placement, runnable on CPU with fake devices.
+production placement, runnable on CPU with fake devices.  The two flags
+COMPOSE: ``--sweep-staleness --multipod`` nests the activation sharding
+inside the scenario vmap, so every staleness level trains mesh-placed in
+the one executable (the executor-composition story of
+``docs/EXECUTORS.md``, driven from the CLI).
 
 Example (CPU smoke):
   PYTHONPATH=src python -m repro.launch.train --arch tinyllama-1.1b \
@@ -68,7 +72,9 @@ def main(argv=None):
     ap.add_argument(
         "--sweep-staleness", default="",
         help="comma-separated staleness levels batched into one vmapped "
-        "sweep (overrides --staleness; incompatible with checkpointing)",
+        "sweep (overrides --staleness; incompatible with checkpointing; "
+        "composes with --multipod: the sweep then trains every level "
+        "mesh-placed in one executable)",
     )
     ap.add_argument("--compress-topk", type=float, default=0.0)
     ap.add_argument(
@@ -111,8 +117,6 @@ def main(argv=None):
 
     mesh_note = ""
     if args.multipod:
-        if args.sweep_staleness:
-            raise SystemExit("--multipod is incompatible with --sweep-staleness")
         from repro.launch.mesh import make_multipod_mesh
         from repro.sharding.rules import MeshContext, set_mesh_context
 

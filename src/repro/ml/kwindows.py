@@ -37,6 +37,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.api import executor as _exec
 from repro.api.strategy import Strategy
 
 
@@ -302,10 +303,15 @@ class KWindowsStrategy(Strategy):
         return jax.random.split(self.key, data.shape[0])
 
     def local_step(self, k, theta, state, data):
+        # ``k`` indexes this executor's DATA slice; the pooled θ slots and
+        # the stacked per-node keys are replicated, so they are indexed at
+        # the node's global position (identical locally, where kg == k —
+        # this is what lets the sequential schedule place on a mesh)
+        kg = _exec.node_global_index(k)
         win = kwindows(
-            state[k], data[k], num_windows=self.num_windows, r=self.r, **self.kw
+            state[kg], data[k], num_windows=self.num_windows, r=self.r, **self.kw
         )
-        start = k * self.num_windows
+        start = kg * self.num_windows
         pool = KWindows(
             centers=jax.lax.dynamic_update_slice(theta.centers, win.centers, (start, 0)),
             halfwidths=jax.lax.dynamic_update_slice(

@@ -15,6 +15,15 @@ produce the same fit under every placement.
   flat totals.
 * ``sweep`` — a vmapped S-scenario batch matches S independent ``fit``
   calls, with per-scenario ledgers bit-for-bit equal on byte totals.
+* ``mesh+sweep`` / ``multipod+sweep`` — the composed executor (scenario
+  vmap INSIDE the shard_map body) matches S independent fits on the
+  same inner executor: theta and per-scenario ledger totals bit-exact,
+  trajectory to fp tolerance (the vmapped loss-metric reduction orders
+  differently).
+* mesh-placed SERVER transports — ``sequential_server``/``stale_server``
+  under ``executor="mesh"`` walk the same sequential schedule with each
+  contact's ``local_step`` masked onto the owning shard; bit-exact with
+  the local walk (the ``from_owner`` psum adds only zeros).
 """
 
 import json
@@ -104,7 +113,10 @@ class TestMeshEquivalence:
 
 
 class TestMeshValidation:
-    def test_server_transport_rejected(self):
+    def test_server_transport_needs_shardable_data(self):
+        """Closure-based strategies (no data to shard) cannot mesh-place
+        a server transport — the masked-compute placement needs a data
+        shard per node."""
         X, y, w, n = _make_problem(K=4)
         with pytest.raises(ValueError, match="local"):
             api.fit(api.FunctionStrategy(lambda k, t: t, num_nodes=4),
@@ -162,10 +174,123 @@ class TestMeshValidation:
                                    rtol=1e-5, atol=1e-6)
 
 
+class TestMeshServerTransports:
+    """The §5 sequential schedule placed on the mesh: each contact's
+    local_step runs masked on the shard owning the contacted node, the
+    push is replicated with one psum — BIT-exact with the local walk
+    (summing the non-owners' zeros is exact in fp)."""
+
+    @pytest.mark.parametrize("transport", ["sequential_server", "stale_server"])
+    @pytest.mark.parametrize("wire", ["dense", "topk:0.5+ef"])
+    def test_matches_local(self, transport, wire):
+        X, y, w, n = _make_problem()
+        sched = schedules.round_robin(8, 5)
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport=transport, schedule=sched, wire=wire)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, schedule=sched, wire=wire,
+                       executor="mesh")
+        np.testing.assert_array_equal(np.asarray(loc.theta),
+                                      np.asarray(mesh.theta))
+        np.testing.assert_array_equal(np.asarray(loc.trajectory),
+                                      np.asarray(mesh.trajectory))
+        assert mesh.ledger.summary() == loc.ledger.summary()
+        assert mesh.metrics["executor"] == "mesh"
+
+    def test_random_schedule_matches_local(self):
+        X, y, w, n = _make_problem()
+        sched = schedules.asynchronous(jax.random.PRNGKey(0), 8, 40)
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="sequential_server", schedule=sched)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="sequential_server", schedule=sched,
+                       executor="mesh")
+        np.testing.assert_array_equal(np.asarray(loc.theta),
+                                      np.asarray(mesh.theta))
+
+    def test_multipod_decomposes_server_bytes(self):
+        """The multipod placement accepts server transports too, with
+        the contact traffic attributed across tiers (summing exactly to
+        the flat totals)."""
+        X, y, w, n = _make_problem()
+        sched = schedules.round_robin(8, 5)
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="sequential_server", schedule=sched)
+        mp = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="sequential_server", schedule=sched,
+                     executor="multipod")
+        np.testing.assert_array_equal(np.asarray(loc.theta),
+                                      np.asarray(mp.theta))
+        s = mp.ledger.summary()
+        assert set(s["by_hop"]) == {"intra_pod", "inter_pod"}
+        assert sum(v["total_bytes"] for v in s["by_hop"].values()) \
+            == loc.ledger.total_bytes
+
+    def test_kwindows_server_on_mesh(self):
+        """A server strategy that mixes shard-local data indexing with
+        global slot/key indexing (node_global_index) places bit-exactly."""
+        from repro.ml.kwindows import KWindowsStrategy
+
+        rng = np.random.default_rng(0)
+        pts = np.concatenate([rng.normal(loc=c, scale=0.3, size=(80, 2))
+                              for c in [(0, 0), (3, 3), (-3, 2)]])
+        rng.shuffle(pts)
+        Xs = jnp.asarray(pts.reshape(8, 30, 2))
+        sched = schedules.round_robin(8, 1)
+
+        def strat():
+            return KWindowsStrategy(jax.random.PRNGKey(0), num_windows=3, r=1.0)
+
+        loc = api.fit(strat(), Xs, transport="sequential_server",
+                      schedule=sched)
+        mesh = api.fit(strat(), Xs, transport="sequential_server",
+                       schedule=sched, executor="mesh")
+        for f in loc.theta._fields:
+            np.testing.assert_array_equal(
+                np.asarray(getattr(loc.theta, f)),
+                np.asarray(getattr(mesh.theta, f)))
+        assert mesh.ledger.summary() == loc.ledger.summary()
+
+    def test_resume_carry_crosses_executors(self):
+        """A mesh server run's carry resumes on the local executor (the
+        wire state reassembles to its global layout at the shard_map
+        exit) and vice versa."""
+        X, y, w, n = _make_problem()
+        sched = schedules.round_robin(8, 6)
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport="sequential_server", schedule=sched,
+                       wire="topk:0.5+ef")
+        half = schedules.round_robin(8, 3)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="sequential_server", schedule=half,
+                    wire="topk:0.5+ef", executor="mesh")
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                    transport="sequential_server", schedule=half,
+                    wire="topk:0.5+ef", carry=a.metrics["carry"])
+        np.testing.assert_array_equal(np.asarray(b.theta),
+                                      np.asarray(full.theta))
+
+    def test_replicate_data_strategy_rejected(self):
+        """Replicate-data strategies have nothing to place — every shard
+        reads the whole dataset — so the mesh server path refuses them."""
+        class Rep(api.GradientDescent):
+            replicate_data = True
+
+        X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="replicate_data"):
+            api.fit(Rep(lsq_loss, lr=0.1), (X, y),
+                    transport="sequential_server",
+                    schedule=schedules.round_robin(8, 2), executor="mesh")
+
+
 class TestMeshEightDevices:
     """The acceptance check proper: 8 fake CPU devices in a subprocess
     (XLA device count is fixed at jax init, so in-process tests can't
-    force it)."""
+    force it).  Covers the update transports, the mesh-placed SERVER
+    transports (bitwise vs local), and the composed ``mesh+sweep``
+    executor (S=4 scenarios bit-exact vs 4 independent mesh fits on
+    theta and per-scenario ledger totals; trajectory to fp tolerance —
+    the vmapped metric mean reduces in a different order)."""
 
     SCRIPT = r"""
 import os
@@ -178,7 +303,13 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 from repro import api
+from repro.core import schedules
 from repro.ml.linear import lsq_loss
+
+def bitwise(a, b):
+    a, b = np.asarray(a), np.asarray(b)
+    return bool(a.shape == b.shape and
+                (a.view(np.uint32) == b.view(np.uint32)).all())
 
 rng = np.random.default_rng(0)
 X = jnp.asarray(rng.normal(size=(8, 10, 5)))
@@ -197,6 +328,53 @@ for transport, kw in [("allreduce", {}), ("delay_line", {"staleness": 2})]:
                                        rtol=1e-5, atol=1e-6)),
         "ledger_equal": loc.ledger.summary() == mesh.ledger.summary(),
     }
+
+# mesh-placed server transports: bitwise vs the local sequential walk
+sched = schedules.round_robin(8, 5)
+for transport in ("sequential_server", "stale_server"):
+    for wire in ("dense", "topk:0.5+ef"):
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport=transport, schedule=sched, wire=wire)
+        mesh = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                       transport=transport, schedule=sched, wire=wire,
+                       executor="mesh")
+        out[f"{transport}/{wire}"] = {
+            "theta_bitwise": bitwise(loc.theta, mesh.theta),
+            "traj_bitwise": bitwise(loc.trajectory, mesh.trajectory),
+            "ledger_equal": loc.ledger.summary() == mesh.ledger.summary(),
+        }
+
+# ACCEPTANCE — mesh+sweep: S=4 scenarios vs 4 independent mesh fits
+LRS = (0.02, 0.05, 0.1, 0.2)
+res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+              transport="allreduce", steps=40, executor="mesh+sweep",
+              sweep={"lr": jnp.asarray(LRS)})
+acc = {"theta_bitwise": True, "traj_close": True, "ledger_equal": True,
+       "executor_name": res.metrics["executor"]}
+for i, lr in enumerate(LRS):
+    solo = api.fit(api.GradientDescent(lsq_loss, lr=lr), (X, y),
+                   transport="allreduce", steps=40, executor="mesh")
+    acc["theta_bitwise"] &= bitwise(res.theta[i], solo.theta)
+    acc["traj_close"] &= bool(np.allclose(res.trajectory[i], solo.trajectory,
+                                          rtol=1e-5, atol=1e-7))
+    acc["ledger_equal"] &= (
+        res.ledger[i].uplink_bytes == solo.ledger.uplink_bytes
+        and res.ledger[i].downlink_bytes == solo.ledger.downlink_bytes
+        and res.ledger[i].rounds == solo.ledger.rounds)
+out["mesh+sweep"] = acc
+
+# multipod inner: per-hop split preserved per scenario
+res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+              transport="delay_line", staleness=1, steps=30,
+              executor="multipod+sweep", sweep={"lr": jnp.asarray(LRS)})
+split_ok = True
+for led in res.ledger:
+    s = led.summary()
+    split_ok &= set(s["by_hop"]) == {"intra_pod", "inter_pod"}
+    split_ok &= all(v["total_bytes"] > 0 for v in s["by_hop"].values())
+    split_ok &= sum(v["total_bytes"] for v in s["by_hop"].values()) \
+        == led.total_bytes
+out["multipod+sweep"] = {"split_per_scenario": bool(split_ok)}
 print(json.dumps(out))
 """
 
@@ -220,6 +398,17 @@ print(json.dumps(out))
             assert out[transport] == {
                 "theta_close": True, "traj_close": True, "ledger_equal": True
             }, out
+        for transport in ("sequential_server", "stale_server"):
+            for wire in ("dense", "topk:0.5+ef"):
+                assert out[f"{transport}/{wire}"] == {
+                    "theta_bitwise": True, "traj_bitwise": True,
+                    "ledger_equal": True,
+                }, out
+        assert out["mesh+sweep"] == {
+            "theta_bitwise": True, "traj_close": True, "ledger_equal": True,
+            "executor_name": "mesh+sweep",
+        }, out
+        assert out["multipod+sweep"] == {"split_per_scenario": True}, out
 
 
 class TestMultiPodEquivalence:
@@ -787,6 +976,147 @@ class TestSweepEquivalence:
                                    np.asarray(solo.theta),
                                    rtol=1e-6, atol=1e-7)
         assert res.ledger[0].total_bytes == solo.ledger.total_bytes
+
+
+class TestMeshSweepComposition:
+    """mesh+sweep (scenario vmap INSIDE the shard_map body) ≡ S
+    independent fits on the inner mesh executor: theta and per-scenario
+    ledger byte totals BIT-exact, trajectory to fp tolerance (the
+    vmapped loss-metric mean reduces in a different order)."""
+
+    LRS = (0.02, 0.05, 0.1, 0.2)
+
+    def test_lr_sweep_matches_independent_mesh_fits(self):
+        X, y, w, n = _make_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=30,
+                      executor="mesh+sweep",
+                      sweep={"lr": jnp.asarray(self.LRS)})
+        assert res.metrics["executor"] == "mesh+sweep"
+        assert np.asarray(res.theta).shape == (4, n)
+        assert isinstance(res.ledger, list) and len(res.ledger) == 4
+        for i, lr in enumerate(self.LRS):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=lr), (X, y),
+                           transport="allreduce", steps=30, executor="mesh")
+            np.testing.assert_array_equal(np.asarray(res.theta[i]),
+                                          np.asarray(solo.theta))
+            np.testing.assert_allclose(np.asarray(res.trajectory[i]),
+                                       np.asarray(solo.trajectory),
+                                       rtol=1e-5, atol=1e-7)
+            assert res.ledger[i].uplink_bytes == solo.ledger.uplink_bytes
+            assert res.ledger[i].downlink_bytes == solo.ledger.downlink_bytes
+            assert res.ledger[i].rounds == solo.ledger.rounds
+
+    def test_staleness_sweep_composes_with_mesh(self):
+        """The shared depth-max(D) delay line reads at a per-scenario
+        index inside the shard_map body — D levels × mesh placement in
+        one executable."""
+        X, y, w, n = _make_problem()
+        Ds = (0, 1, 3)
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                      transport="delay_line", steps=25,
+                      executor=api.SweepExecutor({"staleness": jnp.asarray(Ds)},
+                                                 inner=api.MeshExecutor()))
+        for i, D in enumerate(Ds):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                           transport="delay_line", staleness=D, steps=25,
+                           executor="mesh")
+            np.testing.assert_array_equal(np.asarray(res.theta[i]),
+                                          np.asarray(solo.theta))
+            assert res.ledger[i].total_bytes == solo.ledger.total_bytes
+
+    def test_tau_sweep_composes_with_mesh(self):
+        """Swept WIRE attributes (the threshold sparsifier's τ) ride the
+        composed executable; the traced per-scenario byte counts psum
+        across shards and still match independent mesh fits exactly."""
+        X, y, w, n = _make_problem()
+        taus = (0.0, 0.05, 0.2)
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", wire="thresh:0.1", steps=25,
+                      executor="mesh+sweep", sweep={"tau": jnp.asarray(taus)})
+        totals = []
+        for i, tau in enumerate(taus):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                           transport="allreduce",
+                           wire=api.ThresholdWire(tau), steps=25,
+                           executor="mesh")
+            np.testing.assert_array_equal(np.asarray(res.theta[i]),
+                                          np.asarray(solo.theta))
+            assert res.ledger[i].total_bytes == solo.ledger.total_bytes
+            totals.append(res.ledger[i].total_bytes)
+        assert totals[0] > totals[1] > totals[2]  # ratio actually swept
+
+    def test_multipod_inner_keeps_per_hop_split(self):
+        """Under a multipod inner every scenario's ledger decomposes per
+        hop, each split summing exactly to that scenario's flat total."""
+        X, y, w, n = _make_problem()
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=20,
+                      executor="multipod+sweep",
+                      sweep={"lr": jnp.asarray(self.LRS)})
+        assert res.metrics["executor"] == "multipod+sweep"
+        for i in range(len(self.LRS)):
+            s = res.ledger[i].summary()
+            assert set(s["by_hop"]) == {"intra_pod", "inter_pod"}
+            assert all(v["total_bytes"] > 0 for v in s["by_hop"].values())
+            assert sum(v["total_bytes"] for v in s["by_hop"].values()) \
+                == res.ledger[i].total_bytes
+
+    def test_composed_resume(self):
+        """A composed run's batched carry resumes a later composed fit —
+        EF wire state included — matching one uninterrupted run."""
+        X, y, w, n = _make_problem()
+        kw = dict(executor="mesh+sweep",
+                  sweep={"staleness": jnp.asarray([0, 2])},
+                  transport="delay_line", wire="topk:0.5+ef")
+        full = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                       steps=30, **kw)
+        a = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                    steps=15, **kw)
+        b = api.fit(api.GradientDescent(lsq_loss, lr=0.05), (X, y),
+                    steps=15, carry=a.metrics["carry"], **kw)
+        np.testing.assert_array_equal(np.asarray(b.theta),
+                                      np.asarray(full.theta))
+
+    def test_theta0_sweep_composes(self):
+        X, y, w, n = _make_problem()
+        theta0s = jnp.asarray(np.random.default_rng(1).normal(size=(3, n)))
+        res = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=20,
+                      executor=api.SweepExecutor({"theta0": theta0s},
+                                                 inner=api.MeshExecutor()))
+        for i in range(3):
+            solo = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                           transport="allreduce", steps=20,
+                           theta0=theta0s[i], executor="mesh")
+            np.testing.assert_array_equal(np.asarray(res.theta[i]),
+                                          np.asarray(solo.theta))
+
+    def test_spec_strings_and_sweep_kwarg(self):
+        sw = {"lr": jnp.asarray([0.1, 0.2])}
+        ex = api.make_executor("mesh+sweep", sw)
+        assert isinstance(ex, api.SweepExecutor)
+        assert isinstance(ex.inner, api.MeshExecutor)
+        assert ex.name == "mesh+sweep"
+        ex = api.make_executor("multipod+sweep", sw)
+        assert isinstance(ex.inner, api.MultiPodExecutor)
+        assert api.make_executor("sweep", sw).inner is None
+        # local inner collapses to the plain vmapped sweep
+        assert api.SweepExecutor(sw, inner="local").inner is None
+        assert set(api.COMPOSED_EXECUTORS) == {"mesh+sweep", "multipod+sweep"}
+
+    def test_composition_errors(self):
+        sw = {"lr": jnp.asarray([0.1, 0.2])}
+        with pytest.raises(ValueError, match="scenario parameters"):
+            api.make_executor("mesh+sweep")
+        with pytest.raises(ValueError, match="sweep"):
+            api.make_executor("mesh", sw)  # params without a sweep spec
+        with pytest.raises(ValueError, match="sweep"):
+            api.make_executor(api.MeshExecutor(), sw)  # instance + sweep=
+        with pytest.raises(ValueError, match="nest"):
+            api.SweepExecutor(sw, inner=api.ServingExecutor())
+        with pytest.raises(ValueError, match="unknown executor"):
+            api.make_executor("serve+sweep", sw)
 
 
 class TestExecutorErrors:

@@ -1,0 +1,179 @@
+"""Docs checker — keep the documentation from rotting silently.
+
+Two checks, both run by the ``docs-check`` CI job (and by
+``tests/test_docs.py``, so a broken snippet fails tier-1 locally too):
+
+1. **Snippet execution** — every fenced ```python block in ``docs/*.md``
+   and ``README.md`` is executed on CPU jax, per file, in one shared
+   namespace seeded with a small prelude (an 8-node least-squares
+   problem, a ``strategy``, a ``key``, …) so quickstart-style snippets
+   can reference conventional names without re-deriving them.  Files run
+   in a subprocess with 8 fake CPU devices, so mesh/multipod demos
+   exercise a real multi-shard placement.  A block preceded by an HTML
+   comment ``<!-- docs-check: skip -->`` is skipped (use sparingly: for
+   snippets that need hardware the CI host cannot fake, e.g. the
+   512-chip production mesh).
+
+2. **Intra-repo links** — markdown links whose target is a relative
+   path, plus backticked repo paths (``docs/FOO.md``, ``src/repro/…``,
+   ``examples/…``, …), must point at files that exist.
+
+Run everything:   python tools/check_docs.py
+Links only:       python tools/check_docs.py --links-only
+One file:         python tools/check_docs.py docs/EXECUTORS.md
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+#: documentation files whose python blocks must execute
+SNIPPET_FILES = ("README.md", "docs/API.md", "docs/EXECUTORS.md",
+                 "docs/SERVING.md")
+#: files whose intra-repo references must resolve
+LINK_FILES = SNIPPET_FILES + ("ROADMAP.md", "CHANGES.md", "PAPER.md")
+
+SKIP_MARK = "<!-- docs-check: skip -->"
+
+#: names quickstart-style snippets may assume — a tiny 8-node
+#: least-squares problem plus the conventional handles
+PRELUDE = """\
+import os
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import api
+from repro.core import schedules
+from repro.ml.linear import lsq_loss
+
+_rng = np.random.default_rng(0)
+Xs = jnp.asarray(_rng.normal(size=(8, 10, 5)))
+_w = jnp.asarray(_rng.normal(size=(5,)))
+ys = jnp.einsum("kni,i->kn", Xs, _w)
+X, y = Xs, ys
+Xq = jnp.asarray(_rng.normal(size=(4, 5)))
+data = (Xs, ys)
+strategy = api.GradientDescent(lsq_loss, lr=0.1)
+key = jax.random.key(0)
+K = 8
+"""
+
+
+def extract_blocks(text: str) -> list[tuple[int, str, bool]]:
+    """Fenced ```python blocks as ``(first_line_no, source, skipped)``."""
+    blocks = []
+    lines = text.splitlines()
+    i = 0
+    while i < len(lines):
+        stripped = lines[i].strip()
+        if stripped in ("```python", "```py"):
+            skip = any(
+                SKIP_MARK in lines[j]
+                for j in range(max(0, i - 2), i)
+            )
+            start = i + 1
+            j = start
+            while j < len(lines) and lines[j].strip() != "```":
+                j += 1
+            blocks.append((start + 1, "\n".join(lines[start:j]), skip))
+            i = j
+        i += 1
+    return blocks
+
+
+def run_snippets(md_path: str) -> list[str]:
+    """Execute one file's python blocks sequentially in a subprocess
+    (shared namespace, 8 fake CPU devices, tmpdir cwd so snippets that
+    write — e.g. a model registry — stay contained)."""
+    with open(os.path.join(REPO, md_path)) as f:
+        blocks = extract_blocks(f.read())
+    runnable = [(ln, src) for ln, src, skip in blocks if not skip]
+    if not runnable:
+        return []
+    parts = [PRELUDE]
+    for ln, src in runnable:
+        parts.append(f"print('--- {md_path}:{ln}', flush=True)")
+        parts.append(src)
+    program = "\n".join(parts)
+    env = dict(os.environ)
+    env["PYTHONPATH"] = (
+        os.path.join(REPO, "src") + os.pathsep + env.get("PYTHONPATH", "")
+    )
+    env["XLA_FLAGS"] = (
+        env.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+    ).strip()
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    with tempfile.TemporaryDirectory() as tmp:
+        proc = subprocess.run(
+            [sys.executable, "-c", program], capture_output=True, text=True,
+            env=env, cwd=tmp, timeout=900,
+        )
+    if proc.returncode != 0:
+        marker_lines = [
+            ln for ln in proc.stdout.splitlines() if ln.startswith("--- ")
+        ]
+        where = marker_lines[-1][4:] if marker_lines else md_path
+        return [f"{where}: snippet failed\n{proc.stderr.strip()[-2000:]}"]
+    return []
+
+
+_MD_LINK = re.compile(r"\[[^\]]*\]\(([^)#\s]+)(?:#[^)\s]*)?\)")
+_TICK_PATH = re.compile(
+    r"`((?:docs|examples|benchmarks|tests|tools|src/repro)/[\w./-]+?"
+    r"\.(?:md|py|json|yml))`"
+)
+
+
+def check_links(md_path: str) -> list[str]:
+    errors = []
+    base = os.path.dirname(os.path.join(REPO, md_path))
+    with open(os.path.join(REPO, md_path)) as f:
+        text = f.read()
+    refs = set()
+    for m in _MD_LINK.finditer(text):
+        target = m.group(1)
+        if "://" in target or target.startswith("mailto:"):
+            continue
+        refs.add(target)
+    refs.update(m.group(1) for m in _TICK_PATH.finditer(text))
+    for target in sorted(refs):
+        # resolve relative to the doc AND to the repo root (both styles
+        # appear; either resolving counts)
+        if not (os.path.exists(os.path.join(base, target))
+                or os.path.exists(os.path.join(REPO, target))):
+            errors.append(f"{md_path}: broken intra-repo reference {target!r}")
+    return errors
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("files", nargs="*", help="markdown files (default: all)")
+    ap.add_argument("--links-only", action="store_true")
+    args = ap.parse_args(argv)
+
+    errors = []
+    link_files = args.files or LINK_FILES
+    for md in link_files:
+        if os.path.exists(os.path.join(REPO, md)):
+            errors.extend(check_links(md))
+    if not args.links_only:
+        for md in args.files or SNIPPET_FILES:
+            print(f"running snippets: {md}", flush=True)
+            errors.extend(run_snippets(md))
+    for e in errors:
+        print(f"ERROR: {e}", file=sys.stderr)
+    print(f"docs-check: {'FAIL' if errors else 'OK'} "
+          f"({len(link_files)} files linked-checked)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
