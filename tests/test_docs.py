@@ -14,11 +14,48 @@ sys.path.insert(0, os.path.join(REPO, "tools"))
 import check_docs  # noqa: E402
 
 
-@pytest.mark.parametrize("md", check_docs.LINK_FILES)
+@pytest.mark.parametrize("md", check_docs.link_files())
 def test_intra_repo_references_resolve(md):
     if not os.path.exists(os.path.join(REPO, md)):
         pytest.skip(f"{md} not present")
     assert check_docs.check_links(md) == []
+
+
+def test_link_files_discovers_root_and_docs():
+    found = check_docs.link_files()
+    assert "README.md" in found
+    assert any(f.startswith("docs" + os.sep) for f in found)
+
+
+def test_check_links_reports_every_broken_ref(tmp_path):
+    """Unit test on a fixture tree: one run reports ALL broken refs with
+    line numbers, and resolving either doc-relative or repo-root-relative
+    counts as good."""
+    (tmp_path / "docs").mkdir()
+    (tmp_path / "docs" / "REAL.md").write_text("# real\n")
+    (tmp_path / "tools").mkdir()
+    (tmp_path / "tools" / "real.py").write_text("")
+    (tmp_path / "docs" / "GUIDE.md").write_text(
+        "see [real](REAL.md) and [also real](../tools/real.py)\n"
+        "and `tools/real.py` (root-relative)\n"
+        "but [gone](MISSING.md) is broken\n"
+        "and so is `tools/nope.py` plus [dead](../dead.md)\n"
+        "[external](https://example.com/x.md) is ignored\n"
+    )
+    errors = check_docs.check_links(
+        os.path.join("docs", "GUIDE.md"), repo=str(tmp_path)
+    )
+    assert errors == [
+        f"docs{os.sep}GUIDE.md:3: broken intra-repo reference 'MISSING.md'",
+        f"docs{os.sep}GUIDE.md:4: broken intra-repo reference '../dead.md'",
+        f"docs{os.sep}GUIDE.md:4: broken intra-repo reference "
+        "'tools/nope.py'",
+    ]
+
+
+def test_check_links_isolates_unreadable_files(tmp_path):
+    errors = check_docs.check_links("docs/ABSENT.md", repo=str(tmp_path))
+    assert len(errors) == 1 and "unreadable" in errors[0]
 
 
 def test_extract_blocks_and_skip_marker():

@@ -835,6 +835,71 @@ class TestTopologyLedger:
         # summary reports the byte-weighted effective price
         assert a.summary()["by_hop"]["inter_pod"]["price_per_byte"] == 55.0
 
+    def test_merge_empty_ledger_is_identity(self):
+        """Folding a fresh ledger in (either direction) changes nothing —
+        the executor merge path hits this every time a shard was idle."""
+        from repro.core.allreduce import CommLedger
+
+        a = CommLedger()
+        a.record_hop(jnp.zeros(4), "inter_pod", fanin=2, price_per_byte=3.0)
+        before = a.summary()
+        a.merge(CommLedger())
+        assert a.summary() == before
+
+        empty = CommLedger()
+        empty.merge(a)
+        assert empty.summary() == before
+
+    def test_zero_byte_hop_keeps_decomposition_consistent(self):
+        """A hop that moved nothing (empty tree / fanin 0) must neither
+        poison priced_cost nor divide-by-zero in the summary."""
+        from repro.core.allreduce import CommLedger
+
+        led = CommLedger()
+        led.record_hop(jnp.zeros(4), "intra_pod", fanin=0,
+                       price_per_byte=10.0)
+        assert led.total_bytes == 0
+        assert led.priced_cost() == 0.0
+        s = led.summary()
+        assert s["by_hop"]["intra_pod"]["total_bytes"] == 0
+        # effective price of zero bytes reports the flat default, not NaN
+        assert s["by_hop"]["intra_pod"]["price_per_byte"] == 1.0
+
+    def test_merge_disjoint_hop_sets_unions(self):
+        """Ledgers recorded on different tiers (e.g. one pod's intra-pod
+        stage, another's inter-pod stage) merge to the union with each
+        bucket intact."""
+        from repro.core.allreduce import CommLedger
+
+        a, b = CommLedger(), CommLedger()
+        a.record_hop(jnp.zeros(4), "intra_pod", fanin=6)
+        b.record_hop(jnp.zeros(4), "inter_pod", fanin=2,
+                     price_per_byte=10.0)
+        a.merge(b)
+        assert set(a.hops) == {"intra_pod", "inter_pod"}
+        assert a.hops["intra_pod"]["uplink_bytes"] == 96
+        assert a.hops["inter_pod"]["uplink_bytes"] == 32
+        assert a.priced_cost() == 96 * 2 + 32 * 2 * 10.0
+        # and the flat totals still cover exactly the attributed bytes
+        assert a.total_bytes == sum(
+            h["uplink_bytes"] + h["downlink_bytes"] for h in a.hops.values()
+        )
+
+    def test_attribute_hops_on_empty_ledger(self):
+        """Attributing zero recorded bytes is legal (tiers all get 0);
+        a non-positive message count is the caller bug that raises."""
+        from repro.core.allreduce import CommLedger
+
+        led = CommLedger()
+        led.attribute_hops([("intra_pod", 6, 1.0), ("inter_pod", 2, 10.0)])
+        assert led.total_bytes == 0
+        assert all(
+            h["uplink_bytes"] == h["downlink_bytes"] == 0
+            for h in led.hops.values()
+        )
+        with pytest.raises(ValueError, match="positive message count"):
+            CommLedger(uplink_bytes=8).attribute_hops([("flat", 0, 1.0)])
+
     def test_hierarchical_allreduce_flat_hop_is_mesh_allreduce(self):
         """A single flat hop over all node axes is exactly the joint
         collective (the bit-exact degradation the refactor promises)."""

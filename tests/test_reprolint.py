@@ -1,0 +1,512 @@
+"""repro-lint: every rule catches its staged defect, idiomatic repo code
+stays clean, suppressions need a justification, and the compat-matrix
+pass fails when docs and code disagree (verified on a mutated fixture
+copy of the real matrix).
+
+Pure stdlib — none of these tests import jax, mirroring the CI ``lint``
+job which runs without an accelerator runtime.
+"""
+
+import json
+import os
+import shutil
+import subprocess
+import sys
+import textwrap
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+sys.path.insert(0, REPO)
+
+from tools.reprolint import run_lint  # noqa: E402
+from tools.reprolint.passes import ALL_RULES  # noqa: E402
+
+
+def lint_src(tmp_path, source, name="mod.py", **kw):
+    f = tmp_path / name
+    f.parent.mkdir(parents=True, exist_ok=True)
+    f.write_text(textwrap.dedent(source))
+    return run_lint([tmp_path], **kw)
+
+
+def rules_of(findings):
+    return [f.rule for f in findings]
+
+
+# -- tracer-hygiene -----------------------------------------------------------
+
+
+class TestTracerHygiene:
+    def test_flags_branch_cast_and_host_sync_in_jit(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                if x > 0:
+                    x = x + 1
+                while x < 3:
+                    x = x * 2
+                y = float(x)
+                return x.item() + y
+        """)
+        msgs = [f.message for f in fs if f.rule == "tracer-hygiene"]
+        assert len(msgs) == 4
+        assert any("if x > 0" in m for m in msgs)
+        assert any("while x < 3" in m for m in msgs)
+        assert any("float()" in m for m in msgs)
+        assert any(".item()" in m for m in msgs)
+
+    def test_scan_body_and_lambda_positions_are_traced(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from jax import lax
+
+            def outer(xs):
+                def body(c, x):
+                    if x > 0:
+                        c = c + x
+                    return c, c
+                return lax.scan(body, 0.0, xs)
+        """)
+        assert rules_of(fs) == ["tracer-hygiene"]
+        assert "scan body" in fs[0].message
+
+    def test_static_args_shapes_and_none_checks_stay_clean(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from functools import partial
+            import jax
+
+            @partial(jax.jit, static_argnums=(1,), static_argnames=("mode",))
+            def f(x, n, mode="fast", scale=None):
+                if n > 3:                 # static_argnums -> concrete
+                    x = x * n
+                if mode == "fast":        # static_argnames -> concrete
+                    x = x + 1
+                if scale is not None:     # None-check is trace-static
+                    x = x * scale
+                if x.shape[0] > 8:        # shapes are trace-static
+                    x = x[:8]
+                for _ in range(x.ndim):   # ndim is trace-static
+                    x = x.sum()
+                return x
+        """)
+        assert fs == []
+
+    def test_defaulted_params_are_closure_idiom_not_tracers(self, tmp_path):
+        # def body(c, x, seg=seg): scan never passes `seg`; it holds the
+        # concrete default (the sanctioned closure-avoidance idiom)
+        fs = lint_src(tmp_path, """
+            from jax import lax
+
+            def outer(xs, segs):
+                for seg in segs:
+                    def body(c, x, seg=seg):
+                        for u in seg.unit:
+                            c = c + u
+                        return c, c
+                    c, _ = lax.scan(body, 0.0, xs)
+                return c
+        """)
+        assert fs == []
+
+    def test_untraced_functions_are_free(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            def host(x):
+                if x > 0:
+                    return float(x)
+                return bool(x)
+        """)
+        assert fs == []
+
+
+# -- collective-discipline ----------------------------------------------------
+
+
+class TestCollectiveDiscipline:
+    def test_raw_collective_outside_executor_layer(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from jax import lax
+
+            def aggregate(x):
+                return lax.psum(x, "data")
+        """, name="src/repro/strategies/bad.py")
+        assert rules_of(fs) == ["collective-discipline"]
+        assert "jax.lax.psum" in fs[0].message
+
+    def test_executor_layer_files_are_allowed(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from jax import lax
+
+            def aggregate(x):
+                return lax.psum(x, "data")
+        """, name="src/repro/api/executor.py")
+        assert fs == []
+
+    def test_undeclared_axis_literal_flagged_even_where_allowed(
+        self, tmp_path
+    ):
+        (tmp_path / "mesh.py").write_text(textwrap.dedent("""
+            import jax
+
+            def make(devs):
+                return jax.make_mesh((len(devs),), ("data",))
+        """))
+        fs = lint_src(tmp_path, """
+            from jax import lax
+
+            def aggregate(x):
+                return lax.psum(x, "datum")
+        """, name="src/repro/api/executor.py")
+        assert rules_of(fs) == ["collective-discipline"]
+        assert "'datum'" in fs[0].message and "'data'" in fs[0].message
+
+    def test_repo_wrappers_sharing_collective_names_are_not_raw(
+        self, tmp_path
+    ):
+        fs = lint_src(tmp_path, """
+            from repro.core.allreduce import psum_like as psum
+
+            def aggregate(x):
+                return psum(x, "data")
+        """, name="src/repro/strategies/ok.py")
+        assert fs == []
+
+
+# -- compat-matrix ------------------------------------------------------------
+
+
+def _fixture_repo(tmp_path):
+    """Copy the REAL api modules + executors doc into a fixture tree."""
+    api = tmp_path / "src" / "repro" / "api"
+    api.mkdir(parents=True)
+    docs = tmp_path / "docs"
+    docs.mkdir()
+    for mod in ("transport.py", "executor.py"):
+        shutil.copy(
+            os.path.join(REPO, "src", "repro", "api", mod), api / mod
+        )
+    shutil.copy(
+        os.path.join(REPO, "docs", "EXECUTORS.md"), docs / "EXECUTORS.md"
+    )
+    return tmp_path
+
+
+class TestCompatMatrix:
+    def test_real_matrix_agrees_with_code(self, tmp_path):
+        repo = _fixture_repo(tmp_path)
+        fs = run_lint(
+            [repo / "src"], rules=["compat-matrix"], repo=repo,
+            executors_doc=repo / "docs" / "EXECUTORS.md",
+        )
+        assert fs == []
+
+    def test_mutated_matrix_cell_is_drift(self, tmp_path):
+        repo = _fixture_repo(tmp_path)
+        doc = repo / "docs" / "EXECUTORS.md"
+        text = doc.read_text()
+        # flip sequential_server × sweep from documented-✗ to documented-✓
+        lines = text.splitlines()
+        for i, line in enumerate(lines):
+            if line.strip().startswith("| `sequential_server`"):
+                cells = line.split("|")
+                # flip the FIRST ✗ cell (the sweep column) to a ✓
+                for j, c in enumerate(cells):
+                    if "✗" in c:
+                        cells[j] = c.replace("✗", "✓")
+                        break
+                lines[i] = "|".join(cells)
+                break
+        else:
+            pytest.fail("sequential_server row not found in EXECUTORS.md")
+        doc.write_text("\n".join(lines))
+        fs = run_lint(
+            [repo / "src"], rules=["compat-matrix"], repo=repo,
+            executors_doc=doc,
+        )
+        assert len(fs) == 1
+        assert fs[0].rule == "compat-matrix"
+        assert "matrix drift" in fs[0].message
+        assert "'sequential_server'" in fs[0].message
+
+    def test_dropped_executor_column_is_reported(self, tmp_path):
+        repo = _fixture_repo(tmp_path)
+        ex = repo / "src" / "repro" / "api" / "executor.py"
+        ex.write_text(ex.read_text().replace(
+            'COMPOSED_EXECUTORS = ("mesh+sweep", "multipod+sweep")',
+            'COMPOSED_EXECUTORS = ("mesh+sweep", "multipod+sweep", '
+            '"serve+sweep")',
+        ))
+        fs = run_lint(
+            [repo / "src"], rules=["compat-matrix"], repo=repo,
+            executors_doc=repo / "docs" / "EXECUTORS.md",
+        )
+        assert any(
+            "serve+sweep" in f.message and "missing from" in f.message
+            for f in fs
+        )
+
+    def test_skipped_outside_a_repo(self, tmp_path):
+        fs = lint_src(tmp_path, "x = 1\n", rules=["compat-matrix"])
+        assert fs == []
+
+
+# -- pallas-kernel ------------------------------------------------------------
+
+
+class TestPallasKernel:
+    BAD = """
+        import jax
+        import jax.numpy as jnp
+        from jax.experimental import pallas as pl
+
+        def launch(x, big):
+            def kern(x_ref, o_ref):
+                print("trace-time only")
+                o_ref[...] = x_ref[...] + big
+            return pl.pallas_call(
+                kern,
+                grid=(4, 4),
+                in_specs=[pl.BlockSpec((8, 100), lambda i: (i, 0))],
+                out_specs=pl.BlockSpec((7, 128), lambda i, j: (i, j, 0)),
+                out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+                scratch_shapes=[((8, 128), jnp.float32)],
+            )(x)
+    """
+
+    def test_staged_kernel_defects_all_fire(self, tmp_path):
+        fs = lint_src(tmp_path, self.BAD)
+        msgs = [f.message for f in fs if f.rule == "pallas-kernel"]
+        assert any("print()" in m for m in msgs)
+        assert any("closes over 'big'" in m for m in msgs)
+        assert any("last dimension 100" in m for m in msgs)
+        assert any("second-to-last dimension 7" in m for m in msgs)
+        assert any("1 required parameter(s)" in m and "2 dimension(s)" in m
+                   for m in msgs)
+        assert any("returns 3 coordinate(s)" in m for m in msgs)
+        assert any("memory space" in m for m in msgs)
+
+    def test_real_kernels_are_clean(self):
+        fs = run_lint(
+            [os.path.join(REPO, "src", "repro", "kernels")],
+            rules=["pallas-kernel"],
+        )
+        assert fs == []
+
+    def test_partial_bound_kernel_and_defaulted_index_map_ok(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            import functools
+            import jax
+            from jax.experimental import pallas as pl
+            from jax.experimental.pallas import tpu as pltpu
+            import jax.numpy as jnp
+
+            BQ = 128
+            G = 4
+
+            def _kern(q_ref, o_ref, *, scale):
+                o_ref[...] = q_ref[...] * scale
+
+            def launch(q):
+                kernel = functools.partial(_kern, scale=2.0)
+                grid = (8, 4)
+                return pl.pallas_call(
+                    kernel,
+                    grid=grid,
+                    in_specs=[
+                        pl.BlockSpec((8, BQ), lambda i, j, G=G: (i, j // G)),
+                    ],
+                    out_specs=pl.BlockSpec((8, BQ), lambda i, j: (i, j)),
+                    out_shape=jax.ShapeDtypeStruct(q.shape, q.dtype),
+                    scratch_shapes=[pltpu.VMEM((8, BQ), jnp.float32)],
+                )(q)
+        """)
+        assert fs == []
+
+
+# -- ledger-completeness ------------------------------------------------------
+
+
+class TestLedgerCompleteness:
+    def test_dropped_byte_counts_and_dead_ledger(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from repro.core.allreduce import CommLedger
+
+            def round_trip(wire, wstate, msgs, theta):
+                wire.encode_updates(wstate, msgs)
+                wstate, payload, _ = wire.encode_push(wstate, 0, theta, theta)
+                wire.measure(theta)
+                led = CommLedger()
+                return payload
+        """)
+        msgs = [f.message for f in fs if f.rule == "ledger-completeness"]
+        assert len(msgs) == 4
+        assert any(".encode_updates(...) result discarded" in m for m in msgs)
+        assert any("bound to '_' and never read" in m for m in msgs)
+        assert any("byte measurement" in m for m in msgs)
+        assert any("CommLedger bound to 'led'" in m for m in msgs)
+
+    def test_accounted_flow_is_clean(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from repro.core.allreduce import CommLedger
+
+            def round_trip(wire, wstate, msgs, theta, _exec):
+                wstate, msgs_hat, up = wire.encode_updates(wstate, msgs)
+                up = _exec.sum_bytes(up)
+                led = CommLedger()
+                led.record_push(theta)
+                down = wire.measure(theta)
+                return msgs_hat, up, down, led
+        """)
+        assert fs == []
+
+
+# -- retrace-smell ------------------------------------------------------------
+
+
+class TestRetraceSmell:
+    def test_static_argnum_drift_and_mutable_default(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            import jax
+
+            fast = jax.jit(lambda a, b: a + b, static_argnums=(5,))
+            named = jax.jit(lambda a, b: a - b, static_argnames="nope")
+
+            @jax.jit
+            def f(x, opts={}):
+                for row in x:
+                    opts = row
+                return opts
+        """)
+        msgs = [f.message for f in fs if f.rule == "retrace-smell"]
+        assert any("static_argnums=5" in m for m in msgs)
+        assert any("'nope'" in m for m in msgs)
+        assert any("mutable (non-hashable) default" in m for m in msgs)
+        assert any("Python iteration over `x`" in m for m in msgs)
+
+    def test_valid_static_args_clean(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            import jax
+
+            fast = jax.jit(lambda a, b: a + b, static_argnums=(1,))
+
+            @jax.jit
+            def f(x, mode=None):
+                return x
+        """)
+        assert fs == []
+
+
+# -- suppressions -------------------------------------------------------------
+
+
+class TestSuppressions:
+    BAD_IF = """
+        import jax
+
+        @jax.jit
+        def f(x):
+            if x > 0:{comment}
+                x = x + 1
+            return x
+    """
+
+    def test_justified_suppression_silences(self, tmp_path):
+        fs = lint_src(tmp_path, self.BAD_IF.format(
+            comment="  # reprolint: disable=tracer-hygiene -- proven concrete"
+        ))
+        assert fs == []
+
+    def test_bare_suppression_stays_red(self, tmp_path):
+        fs = lint_src(tmp_path, self.BAD_IF.format(
+            comment="  # reprolint: disable=tracer-hygiene"
+        ))
+        assert rules_of(fs) == ["bare-suppression"]
+        assert "justification" in fs[0].message
+
+    def test_preceding_comment_line_suppresses(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            import jax
+
+            @jax.jit
+            def f(x):
+                # reprolint: disable=tracer-hygiene -- concrete by contract
+                if x > 0:
+                    x = x + 1
+                return x
+        """)
+        assert fs == []
+
+    def test_wrong_rule_does_not_suppress(self, tmp_path):
+        fs = lint_src(tmp_path, self.BAD_IF.format(
+            comment="  # reprolint: disable=retrace-smell -- wrong rule"
+        ))
+        assert rules_of(fs) == ["tracer-hygiene"]
+
+
+# -- driver / CLI -------------------------------------------------------------
+
+
+class TestDriver:
+    def test_parse_error_is_a_finding(self, tmp_path):
+        fs = lint_src(tmp_path, "def broken(:\n")
+        assert rules_of(fs) == ["parse-error"]
+
+    def test_unknown_rule_rejected(self, tmp_path):
+        with pytest.raises(ValueError, match="unknown rules"):
+            lint_src(tmp_path, "x = 1\n", rules=["no-such-rule"])
+
+    def test_all_rules_registered(self):
+        assert set(ALL_RULES) == {
+            "tracer-hygiene", "collective-discipline", "compat-matrix",
+            "pallas-kernel", "ledger-completeness", "retrace-smell",
+        }
+
+    def test_repo_tree_is_clean(self):
+        """The shipped tree lints clean — the CI gate this PR turns on."""
+        fs = run_lint([os.path.join(REPO, "src")], repo=REPO)
+        assert fs == []
+
+    def test_finding_render_format(self, tmp_path):
+        fs = lint_src(tmp_path, "from jax import lax\n\n"
+                                "def f(x):\n"
+                                "    return lax.psum(x, 'data')\n")
+        assert len(fs) == 1
+        rendered = fs[0].render()
+        assert rendered.startswith(fs[0].path)
+        assert ":4:" in rendered and "[collective-discipline]" in rendered
+
+
+class TestCli:
+    def _run(self, *argv):
+        return subprocess.run(
+            [sys.executable, "-m", "tools.reprolint", *argv],
+            capture_output=True, text=True, cwd=REPO, timeout=120,
+        )
+
+    def test_clean_tree_exits_zero(self):
+        p = self._run("src", "--rules", "collective-discipline")
+        assert p.returncode == 0, p.stdout + p.stderr
+        assert "0 findings" in p.stdout
+
+    def test_findings_exit_one_and_json_parses(self, tmp_path):
+        bad = tmp_path / "bad.py"
+        bad.write_text(
+            "from jax import lax\n\ndef f(x):\n"
+            "    return lax.psum(x, 'data')\n"
+        )
+        p = self._run(str(bad), "--format=json")
+        assert p.returncode == 1
+        out = json.loads(p.stdout)
+        assert out["count"] == 1
+        assert out["findings"][0]["rule"] == "collective-discipline"
+
+    def test_no_paths_is_usage_error(self):
+        p = self._run()
+        assert p.returncode == 2
+
+    def test_list_rules(self):
+        p = self._run("--list-rules")
+        assert p.returncode == 0
+        for rule in ALL_RULES:
+            assert rule in p.stdout

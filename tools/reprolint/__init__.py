@@ -1,0 +1,22 @@
+"""repro-lint — JAX/Pallas-aware static analysis for the executor-layer
+invariants.
+
+The PR 2–5 architecture rests on invariants that used to be prose:
+transports speak the executor primitive set (never raw collectives),
+collective axis names match declared mesh axes, the Transport × Executor
+compatibility matrix in ``docs/EXECUTORS.md`` matches the rejection code,
+Pallas kernel bodies stay pure and lane-aligned, every byte that moves is
+metered into a ``CommLedger``, and nothing inside a jit/scan/shard_map
+body branches on a tracer.  This package makes them machine-checked.
+
+Pure stdlib (``ast`` only — no jax import), so the lint job needs no
+accelerator runtime.  See ``docs/LINTING.md`` for the rule catalog.
+
+    python -m tools.reprolint src/ --format=text
+    python -m tools.reprolint src/repro/api/executor.py --rules tracer-hygiene
+"""
+
+from tools.reprolint.core import Finding, LintContext, run_lint  # noqa: F401
+from tools.reprolint.passes import ALL_RULES  # noqa: F401
+
+__all__ = ["Finding", "LintContext", "run_lint", "ALL_RULES"]

@@ -1,0 +1,108 @@
+"""Command line for repro-lint.
+
+::
+
+    python -m tools.reprolint src/                 # human-readable
+    python -m tools.reprolint src/ --format=json   # machine-readable (CI)
+    python -m tools.reprolint src/ --rules tracer-hygiene,compat-matrix
+    python -m tools.reprolint --list-rules
+
+Exit status: 0 clean, 1 findings, 2 usage error.  Pure stdlib — the
+linter never imports jax, so it runs anywhere (CI lint jobs need no
+accelerator runtime).
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from tools.reprolint.core import run_lint
+
+
+def _build_parser() -> argparse.ArgumentParser:
+    p = argparse.ArgumentParser(
+        prog="python -m tools.reprolint",
+        description=(
+            "JAX/Pallas-aware static analysis for the repro executor-layer "
+            "invariants"
+        ),
+    )
+    p.add_argument(
+        "paths", nargs="*",
+        help="files or directories to lint (e.g. src/)",
+    )
+    p.add_argument(
+        "--format", choices=("text", "json"), default="text",
+        help="output format (default: text)",
+    )
+    p.add_argument(
+        "--rules", default=None, metavar="RULE[,RULE...]",
+        help="comma-separated subset of rules to run (default: all)",
+    )
+    p.add_argument(
+        "--repo", default=None, metavar="DIR",
+        help="repo root (default: auto-detect by walking up to src/repro)",
+    )
+    p.add_argument(
+        "--executors-doc", default=None, metavar="FILE",
+        help=(
+            "executors doc for the compat-matrix pass (default: "
+            "<repo>/docs/EXECUTORS.md)"
+        ),
+    )
+    p.add_argument(
+        "--list-rules", action="store_true",
+        help="print the available rules and exit",
+    )
+    return p
+
+
+def main(argv=None) -> int:
+    args = _build_parser().parse_args(argv)
+    if args.list_rules:
+        from tools.reprolint.passes import _MODULES
+
+        for mod in _MODULES:
+            first = (mod.__doc__ or "").strip().splitlines()[0]
+            print(f"{mod.RULE:24s} {first}")
+        return 0
+    if not args.paths:
+        print("error: no lint targets given (try: src/)", file=sys.stderr)
+        return 2
+    rules = None
+    if args.rules is not None:
+        rules = [r.strip() for r in args.rules.split(",") if r.strip()]
+    try:
+        findings = run_lint(
+            args.paths,
+            rules=rules,
+            repo=Path(args.repo) if args.repo else None,
+            executors_doc=(
+                Path(args.executors_doc) if args.executors_doc else None
+            ),
+        )
+    except ValueError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return 2
+
+    if args.format == "json":
+        print(json.dumps(
+            {
+                "findings": [f.as_dict() for f in findings],
+                "count": len(findings),
+            },
+            indent=2,
+        ))
+    else:
+        for f in findings:
+            print(f.render())
+        n = len(findings)
+        print(f"reprolint: {n} finding{'s' if n != 1 else ''}")
+    return 1 if findings else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,244 @@
+"""Lint driver: file loading, suppressions, pass orchestration.
+
+A *pass* is a module exposing ``RULE`` (kebab-case id) and
+``run(ctx) -> list[Finding]``.  The driver parses every target file once,
+hands the shared ``LintContext`` to each pass, then filters findings
+through per-line suppression comments::
+
+    x = float(loss)  # reprolint: disable=tracer-hygiene -- host logging path
+
+The justification after ``--`` is REQUIRED: a bare ``# reprolint:
+disable=<rule>`` still suppresses the target finding but emits a
+``bare-suppression`` finding in its place, so CI stays red until the
+suppression says why.
+"""
+
+from __future__ import annotations
+
+import ast
+import os
+import re
+from dataclasses import dataclass, field
+from pathlib import Path
+
+
+@dataclass(frozen=True, order=True)
+class Finding:
+    path: str  # repo-relative (posix) when a repo root is known
+    line: int
+    col: int
+    rule: str
+    message: str
+
+    def render(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: [{self.rule}] {self.message}"
+
+    def as_dict(self) -> dict:
+        return {
+            "path": self.path,
+            "line": self.line,
+            "col": self.col,
+            "rule": self.rule,
+            "message": self.message,
+        }
+
+
+@dataclass
+class SourceFile:
+    path: Path  # absolute
+    rel: str  # repo-relative posix path (or the path as given)
+    text: str
+    tree: ast.Module | None  # None when the file failed to parse
+    parse_error: str | None = None
+    #: per-file scratch space for cross-pass shared analyses
+    cache: dict = field(default_factory=dict)
+
+    @property
+    def lines(self) -> list[str]:
+        if "lines" not in self.cache:
+            self.cache["lines"] = self.text.splitlines()
+        return self.cache["lines"]
+
+
+@dataclass
+class LintContext:
+    files: list
+    repo: Path | None  # repo root (dir containing src/repro), if detected
+    #: path to the executors doc the compat-matrix pass cross-checks;
+    #: overridable so tests can point at a mutated fixture copy
+    executors_doc: Path | None
+    cache: dict = field(default_factory=dict)
+
+    def file(self, rel_suffix: str) -> SourceFile | None:
+        """The loaded file whose repo-relative path ends with ``rel_suffix``."""
+        for sf in self.files:
+            if sf.rel.endswith(rel_suffix):
+                return sf
+        return None
+
+
+def find_repo_root(start: Path) -> Path | None:
+    """Walk up from ``start`` to the directory holding ``src/repro``."""
+    p = start.resolve()
+    if p.is_file():
+        p = p.parent
+    for cand in (p, *p.parents):
+        if (cand / "src" / "repro").is_dir() or (cand / ".git").is_dir():
+            return cand
+    return None
+
+
+def _iter_py(target: Path):
+    if target.is_file():
+        if target.suffix == ".py":
+            yield target
+        return
+    for root, dirs, names in os.walk(target):
+        dirs[:] = sorted(
+            d for d in dirs
+            if not d.startswith(".") and d != "__pycache__"
+        )
+        for name in sorted(names):
+            if name.endswith(".py"):
+                yield Path(root) / name
+
+
+def load_files(paths, repo: Path | None) -> list[SourceFile]:
+    out = []
+    seen = set()
+    for p in paths:
+        for f in _iter_py(Path(p)):
+            f = f.resolve()
+            if f in seen:
+                continue
+            seen.add(f)
+            text = f.read_text()
+            if repo is not None and f.is_relative_to(repo):
+                rel = f.relative_to(repo).as_posix()
+            else:
+                rel = f.as_posix()
+            try:
+                tree = ast.parse(text, filename=str(f))
+                err = None
+            except SyntaxError as e:
+                tree, err = None, f"{e.msg} (line {e.lineno})"
+            out.append(SourceFile(path=f, rel=rel, text=text, tree=tree,
+                                  parse_error=err))
+    return out
+
+
+# -- suppressions -------------------------------------------------------------
+
+_DISABLE = re.compile(
+    r"#\s*reprolint:\s*disable=([\w+,-]+)\s*(?:--\s*(\S.*))?$"
+)
+
+
+def _suppressions(sf: SourceFile) -> dict:
+    """line -> (set of rules disabled there, justified: bool, col)."""
+    if "suppressions" in sf.cache:
+        return sf.cache["suppressions"]
+    sup = {}
+    for i, line in enumerate(sf.lines, start=1):
+        m = _DISABLE.search(line)
+        if not m:
+            continue
+        rules = {r.strip() for r in m.group(1).split(",") if r.strip()}
+        justified = bool(m.group(2))
+        sup[i] = (rules, justified, m.start() + 1)
+    sf.cache["suppressions"] = sup
+    return sup
+
+
+def _suppressed(sf: SourceFile, finding: Finding) -> bool:
+    """A finding is suppressed by a disable comment on its own line, or on
+    an immediately preceding comment-only line."""
+    sup = _suppressions(sf)
+    for ln in (finding.line, finding.line - 1):
+        entry = sup.get(ln)
+        if entry is None:
+            continue
+        rules, _justified, _col = entry
+        if ln == finding.line - 1:
+            # only comment-only lines suppress the statement below them
+            if sf.lines[ln - 1].lstrip()[:1] != "#":
+                continue
+        if finding.rule in rules or "all" in rules:
+            return True
+    return False
+
+
+def apply_suppressions(files, findings) -> list[Finding]:
+    by_rel = {sf.rel: sf for sf in files}
+    kept = []
+    for f in findings:
+        sf = by_rel.get(f.path)
+        if sf is not None and _suppressed(sf, f):
+            continue
+        kept.append(f)
+    # a suppression without a justification is itself a finding — the
+    # disable still applies (above), but CI stays red until it says why
+    for sf in files:
+        for ln, (rules, justified, col) in sorted(_suppressions(sf).items()):
+            if not justified:
+                kept.append(Finding(
+                    path=sf.rel, line=ln, col=col, rule="bare-suppression",
+                    message=(
+                        "suppression without a justification — write "
+                        f"'# reprolint: disable={','.join(sorted(rules))} "
+                        "-- <why this is a false positive>'"
+                    ),
+                ))
+    return sorted(set(kept))
+
+
+# -- driver -------------------------------------------------------------------
+
+
+def run_lint(
+    paths,
+    *,
+    rules=None,
+    repo: Path | None = None,
+    executors_doc: Path | None = None,
+) -> list[Finding]:
+    """Run the (selected) passes over ``paths`` and return live findings.
+
+    ``repo`` defaults to auto-detection from the first target (walking up
+    to the directory containing ``src/repro``); repo-level passes
+    (compat-matrix) are skipped when no repo root or doc is found, so
+    fixture trees exercise only the rules they stage.
+    """
+    from tools.reprolint.passes import ALL_PASSES
+
+    paths = [Path(p) for p in paths]
+    if not paths:
+        raise ValueError("no lint targets given")
+    repo = Path(repo) if repo is not None else find_repo_root(paths[0])
+    if executors_doc is not None:
+        executors_doc = Path(executors_doc)
+    if executors_doc is None and repo is not None:
+        cand = repo / "docs" / "EXECUTORS.md"
+        executors_doc = cand if cand.exists() else None
+    files = load_files(paths, repo)
+    ctx = LintContext(files=files, repo=repo, executors_doc=executors_doc)
+
+    findings = []
+    for sf in files:
+        if sf.parse_error is not None:
+            findings.append(Finding(
+                path=sf.rel, line=1, col=1, rule="parse-error",
+                message=f"file does not parse: {sf.parse_error}",
+            ))
+    selected = dict(ALL_PASSES)
+    if rules is not None:
+        unknown = set(rules) - set(selected)
+        if unknown:
+            raise ValueError(
+                f"unknown rules {sorted(unknown)} — available: "
+                f"{sorted(selected)}"
+            )
+        selected = {k: v for k, v in selected.items() if k in rules}
+    for _rule, run in selected.items():
+        findings.extend(run(ctx))
+    return apply_suppressions(files, findings)

@@ -1,0 +1,22 @@
+"""Pass registry.  Each pass module exposes ``RULE`` and ``run(ctx)``."""
+
+from tools.reprolint.passes import (
+    collective_discipline,
+    compat_matrix,
+    ledger_completeness,
+    pallas_kernels,
+    retrace_smells,
+    tracer_hygiene,
+)
+
+_MODULES = (
+    tracer_hygiene,
+    collective_discipline,
+    compat_matrix,
+    pallas_kernels,
+    ledger_completeness,
+    retrace_smells,
+)
+
+ALL_PASSES = {m.RULE: m.run for m in _MODULES}
+ALL_RULES = tuple(ALL_PASSES)

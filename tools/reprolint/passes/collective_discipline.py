@@ -1,0 +1,160 @@
+"""collective-discipline — raw collectives stay behind the executor layer.
+
+Two invariants from ``docs/EXECUTORS.md``:
+
+1. Raw ``jax.lax`` collectives (``psum``/``pmean``/``ppermute``/
+   ``all_gather``/…) are only legal inside the executor layer itself —
+   ``api/executor.py`` (the primitive set) and ``core/allreduce.py`` /
+   ``core/topology.py`` (the staged reductions it is built on).  A
+   transport, strategy or serving path that calls one directly bypasses
+   topology staging AND the ``CommLedger`` accounting; it must go through
+   the executor primitive set (``aggregate`` / ``broadcast`` /
+   ``metric_mean`` / ``sum_bytes`` / ``from_owner`` / …).
+
+2. Any collective whose axis-name argument is a string literal must name
+   an axis some ``Mesh``/``Topology`` in the linted tree declares — a
+   typo'd axis name is a runtime ``NameError`` deep inside shard_map,
+   found only on the placement that exercises that code path.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import build_imports, qualify
+from tools.reprolint.core import Finding
+
+RULE = "collective-discipline"
+
+COLLECTIVES = {
+    "psum", "pmean", "pmax", "pmin", "ppermute", "pshuffle",
+    "all_gather", "all_to_all", "psum_scatter", "pbroadcast",
+}
+
+#: files allowed to speak raw collectives (repo-relative posix suffixes)
+ALLOWED_FILES = (
+    "src/repro/api/executor.py",
+    "src/repro/core/allreduce.py",
+    "src/repro/core/topology.py",
+)
+
+#: calls that declare mesh/topology axis names, with the argument that
+#: carries them (position, keyword)
+_AXIS_DECLS = {
+    "make_mesh": (1, "axis_names"),
+    "Mesh": (1, "axis_names"),
+    "AbstractMesh": (1, "axis_names"),
+    "Hop": (0, "axes"),
+    "flat": (0, None),  # Topology.flat(axes)
+}
+
+
+def _literal_strs(node) -> list | None:
+    """String literal / tuple-list of string literals -> names, else None."""
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return [node.value]
+    if isinstance(node, (ast.Tuple, ast.List)):
+        out = []
+        for elt in node.elts:
+            if not (isinstance(elt, ast.Constant)
+                    and isinstance(elt.value, str)):
+                return None
+            out.append(elt.value)
+        return out
+    return None
+
+
+def declared_axes(ctx) -> set:
+    """Axis names declared by any Mesh/Topology construction in the
+    linted tree (cached on the context)."""
+    if "declared_axes" in ctx.cache:
+        return ctx.cache["declared_axes"]
+    axes: set = set()
+    for sf in ctx.files:
+        if sf.tree is None:
+            continue
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            name = None
+            if isinstance(node.func, ast.Attribute):
+                name = node.func.attr
+            elif isinstance(node.func, ast.Name):
+                name = node.func.id
+            if name not in _AXIS_DECLS:
+                continue
+            pos, kw = _AXIS_DECLS[name]
+            arg = None
+            if kw is not None:
+                for k in node.keywords:
+                    if k.arg == kw:
+                        arg = k.value
+            if arg is None and pos < len(node.args):
+                arg = node.args[pos]
+            names = _literal_strs(arg) if arg is not None else None
+            if names:
+                axes.update(names)
+    ctx.cache["declared_axes"] = axes
+    return axes
+
+
+def _axis_arg(call: ast.Call):
+    """The axis-name argument of a collective call (2nd positional, or the
+    ``axis_name`` keyword)."""
+    for k in call.keywords:
+        if k.arg == "axis_name":
+            return k.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    return None
+
+
+def run(ctx) -> list:
+    findings = []
+    axes = declared_axes(ctx)
+    for sf in ctx.files:
+        if sf.tree is None:
+            continue
+        imports = build_imports(sf.tree)
+        allowed = any(sf.rel.endswith(suffix) for suffix in ALLOWED_FILES)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = qualify(node.func, imports) or ""
+            parts = q.split(".")
+            if parts[-1] not in COLLECTIVES:
+                continue
+            # a raw collective is a jax.lax.* call (or a name imported
+            # from jax.lax); same-named repo wrappers (mesh_allreduce)
+            # resolve to their own modules and are not raw
+            if not q.startswith("jax.lax."):
+                continue
+            name = parts[-1]
+            if not allowed:
+                findings.append(Finding(
+                    path=sf.rel, line=node.lineno, col=node.col_offset + 1,
+                    rule=RULE,
+                    message=(
+                        f"raw collective jax.lax.{name} outside the "
+                        "executor layer — transports/strategies must use "
+                        "the repro.api.executor primitive set (aggregate/"
+                        "broadcast/metric_mean/sum_bytes/from_owner/...), "
+                        "which stages through the ambient Topology and "
+                        "keeps CommLedger accounting complete"
+                    ),
+                ))
+            axis_names = _literal_strs(_axis_arg(node))
+            if axis_names and axes:
+                for a in axis_names:
+                    if a not in axes:
+                        findings.append(Finding(
+                            path=sf.rel, line=node.lineno,
+                            col=node.col_offset + 1, rule=RULE,
+                            message=(
+                                f"collective jax.lax.{name} over axis "
+                                f"{a!r}, which no Mesh/Topology in the "
+                                "linted tree declares (declared: "
+                                f"{sorted(axes)})"
+                            ),
+                        ))
+    return findings

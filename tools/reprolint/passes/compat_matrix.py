@@ -1,0 +1,369 @@
+"""compat-matrix — docs/EXECUTORS.md can never silently lie again.
+
+The Transport × Executor compatibility matrix used to be hand-maintained
+prose.  This pass derives the REAL matrix from the code and diffs it
+against the documented table:
+
+* transport families come from ``api/transport.py``: a transport whose
+  ``run`` calls ``executor.run_server`` is server-family, one that calls
+  ``executor.run_update`` is update-family, and one that guards
+  ``isinstance(executor, <Class>)`` before raising is local-only
+  (supported exactly on that class and its subclasses);
+* executor capabilities come from ``api/executor.py``: an executor
+  supports a family iff its (inherited) ``run_server``/``run_update``
+  implementation is not a bare ``raise``;
+* spec strings map through each executor class's ``name`` attribute and
+  the ``EXECUTORS``/``COMPOSED_EXECUTORS`` tuples (a composed
+  ``"<inner>+sweep"`` spec behaves as the outer sweep wrapper, exactly
+  as ``make_executor`` builds it).
+
+Any cell where the table and the derivation disagree — or a missing/extra
+row or column — is a finding anchored at the doc table.
+"""
+
+from __future__ import annotations
+
+import ast
+import re
+from pathlib import Path
+
+from tools.reprolint.core import Finding
+
+RULE = "compat-matrix"
+
+_CHECK, _CROSS = "✓", "✗"
+
+
+# -- code side ----------------------------------------------------------------
+
+
+def _parse(path: Path) -> ast.Module | None:
+    try:
+        return ast.parse(path.read_text(), filename=str(path))
+    except (OSError, SyntaxError):
+        return None
+
+
+def _calls_attr_on(fn: ast.FunctionDef, obj: str, attr: str) -> bool:
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Attribute)
+            and node.attr == attr
+            and isinstance(node.value, ast.Name)
+            and node.value.id == obj
+        ):
+            return True
+    return False
+
+
+def _isinstance_guard(fn: ast.FunctionDef, obj: str) -> str | None:
+    """Class name in an ``isinstance(<obj>, Cls)`` test inside ``fn``
+    (the local-only rejection idiom), if present."""
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id == "isinstance"
+            and len(node.args) == 2
+            and isinstance(node.args[0], ast.Name)
+            and node.args[0].id == obj
+            and isinstance(node.args[1], ast.Name)
+        ):
+            return node.args[1].id
+    return None
+
+
+def _module_tuple(tree: ast.Module, name: str) -> list:
+    for node in tree.body:
+        if isinstance(node, ast.Assign) and len(node.targets) == 1:
+            tgt = node.targets[0]
+            if isinstance(tgt, ast.Name) and tgt.id == name:
+                if isinstance(node.value, (ast.Tuple, ast.List)):
+                    return [
+                        e.value for e in node.value.elts
+                        if isinstance(e, ast.Constant)
+                    ]
+    return []
+
+
+class _Classes:
+    """Class table of one module: bases, string attrs, method defs."""
+
+    def __init__(self, tree: ast.Module):
+        self.info = {}
+        for node in tree.body:
+            if not isinstance(node, ast.ClassDef):
+                continue
+            bases = [b.id for b in node.bases if isinstance(b, ast.Name)]
+            attrs, methods = {}, {}
+            for stmt in node.body:
+                if isinstance(stmt, ast.Assign) and len(stmt.targets) == 1:
+                    t = stmt.targets[0]
+                    if isinstance(t, ast.Name) and isinstance(
+                        stmt.value, ast.Constant
+                    ):
+                        attrs[t.id] = stmt.value.value
+                elif isinstance(stmt, ast.FunctionDef):
+                    methods[stmt.name] = stmt
+            self.info[node.name] = {
+                "bases": bases, "attrs": attrs, "methods": methods,
+            }
+
+    def resolve_method(self, cls: str, name: str):
+        while cls in self.info:
+            m = self.info[cls]["methods"].get(name)
+            if m is not None:
+                return m
+            bases = self.info[cls]["bases"]
+            cls = bases[0] if bases else ""
+        return None
+
+    def is_subclass(self, cls: str, ancestor: str) -> bool:
+        while cls in self.info:
+            if cls == ancestor:
+                return True
+            bases = self.info[cls]["bases"]
+            cls = bases[0] if bases else ""
+        return cls == ancestor
+
+    def by_name_attr(self, value: str) -> str | None:
+        for cls, info in self.info.items():
+            if info["attrs"].get("name") == value:
+                return cls
+        return None
+
+
+def _raising_only(fn: ast.FunctionDef | None) -> bool:
+    if fn is None:
+        return True
+    body = fn.body
+    if (
+        body
+        and isinstance(body[0], ast.Expr)
+        and isinstance(body[0].value, ast.Constant)
+        and isinstance(body[0].value.value, str)
+    ):
+        body = body[1:]  # docstring
+    return bool(body) and all(isinstance(s, ast.Raise) for s in body)
+
+
+def derive_matrix(transport_py: Path, executor_py: Path):
+    """``(matrix, executor_specs, errors)`` where matrix maps
+    ``transport_spec -> {executor_spec: bool}`` as the code enforces it."""
+    errors: list = []
+    ttree, etree = _parse(transport_py), _parse(executor_py)
+    if ttree is None or etree is None:
+        return None, [], ["api transport/executor module failed to parse"]
+    tclasses, eclasses = _Classes(ttree), _Classes(etree)
+
+    # transport spec -> class, from make_transport's dispatch
+    spec_to_tclass = {}
+    mk = None
+    for node in ttree.body:
+        if isinstance(node, ast.FunctionDef) and node.name == "make_transport":
+            mk = node
+    if mk is not None:
+        for node in ast.walk(mk):
+            if not isinstance(node, ast.If):
+                continue
+            test = node.test
+            if not (
+                isinstance(test, ast.Compare)
+                and isinstance(test.left, ast.Name)
+                and test.left.id == "spec"
+                and len(test.comparators) == 1
+                and isinstance(test.comparators[0], ast.Constant)
+            ):
+                continue
+            spec = test.comparators[0].value
+            for sub in ast.walk(node):
+                if (
+                    isinstance(sub, ast.Return)
+                    and isinstance(sub.value, ast.Call)
+                    and isinstance(sub.value.func, ast.Name)
+                ):
+                    spec_to_tclass[spec] = sub.value.func.id
+                    break
+    if not spec_to_tclass:
+        errors.append(
+            f"{transport_py}: could not derive the transport spec table "
+            "from make_transport"
+        )
+
+    # executor spec -> class (composed specs behave as the sweep wrapper,
+    # exactly as make_executor builds them)
+    executor_specs = list(_module_tuple(etree, "EXECUTORS"))
+    composed = list(_module_tuple(etree, "COMPOSED_EXECUTORS"))
+    executor_specs += composed
+
+    def spec_to_eclass(spec: str) -> str | None:
+        if "+" in spec:
+            return eclasses.by_name_attr(spec.split("+")[-1])
+        return eclasses.by_name_attr(spec)
+
+    def executor_supports(spec: str, family: str) -> bool:
+        cls = spec_to_eclass(spec)
+        if cls is None:
+            return False
+        impl = eclasses.resolve_method(cls, f"run_{family}")
+        return not _raising_only(impl)
+
+    matrix = {}
+    for tspec, tcls in spec_to_tclass.items():
+        run = tclasses.resolve_method(tcls, "run")
+        if run is None:
+            errors.append(f"transport class {tcls} has no run method")
+            continue
+        guard = _isinstance_guard(run, "executor")
+        row = {}
+        for espec in executor_specs:
+            if guard is not None:
+                cls = spec_to_eclass(espec)
+                row[espec] = cls is not None and eclasses.is_subclass(
+                    cls, guard
+                )
+            elif _calls_attr_on(run, "executor", "run_server"):
+                row[espec] = executor_supports(espec, "server")
+            elif _calls_attr_on(run, "executor", "run_update"):
+                row[espec] = executor_supports(espec, "update")
+            else:
+                errors.append(
+                    f"transport class {tcls}: run() neither dispatches to "
+                    "executor.run_server/run_update nor guards the "
+                    "executor type — the compat matrix cannot be derived"
+                )
+                row = None
+                break
+        if row is not None:
+            matrix[tspec] = row
+    return matrix, executor_specs, errors
+
+
+# -- docs side ----------------------------------------------------------------
+
+
+def parse_doc_matrix(doc_path: Path):
+    """``(rows, line_of_row, errors)``: rows maps transport name ->
+    {executor spec -> True/False/None}."""
+    text = doc_path.read_text()
+    lines = text.splitlines()
+    header_idx = None
+    for i, line in enumerate(lines):
+        cells = [c.strip() for c in line.strip().strip("|").split("|")]
+        if cells and cells[0].strip("`* ") == "transport":
+            header_idx = i
+            columns = [
+                [s.strip().strip("`") for s in c.split(",")]
+                for c in cells[1:]
+            ]
+            break
+    if header_idx is None:
+        return None, {}, [
+            f"{doc_path.name}: no 'transport' compatibility table found"
+        ]
+    rows, row_lines, errors = {}, {}, []
+    for i in range(header_idx + 2, len(lines)):  # skip the |---| rule
+        line = lines[i].strip()
+        if not line.startswith("|"):
+            break
+        cells = [c.strip() for c in line.strip("|").split("|")]
+        if not cells:
+            continue
+        name = re.sub(r"[`*]", "", cells[0]).strip()
+        row = {}
+        for specs, cell in zip(columns, cells[1:]):
+            if _CHECK in cell:
+                val = True
+            elif _CROSS in cell:
+                val = False
+            else:
+                val = None
+                errors.append(
+                    f"row {name!r}: cell {cell!r} has neither "
+                    f"{_CHECK} nor {_CROSS}"
+                )
+            for spec in specs:
+                row[spec] = val
+        rows[name] = row
+        row_lines[name] = i + 1
+    return rows, row_lines, errors
+
+
+# -- the pass -----------------------------------------------------------------
+
+
+def run(ctx) -> list:
+    doc = ctx.executors_doc
+    if doc is None or ctx.repo is None:
+        return []
+    transport_py = ctx.repo / "src" / "repro" / "api" / "transport.py"
+    executor_py = ctx.repo / "src" / "repro" / "api" / "executor.py"
+    if not (doc.exists() and transport_py.exists() and executor_py.exists()):
+        return []
+    try:
+        doc_rel = doc.relative_to(ctx.repo).as_posix()
+    except ValueError:
+        doc_rel = doc.as_posix()
+
+    findings = []
+
+    def report(line, msg):
+        findings.append(
+            Finding(path=doc_rel, line=line, col=1, rule=RULE, message=msg)
+        )
+
+    code, executor_specs, errors = derive_matrix(transport_py, executor_py)
+    for e in errors:
+        report(1, e)
+    if code is None:
+        return findings
+    docm, row_lines, doc_errors = parse_doc_matrix(doc)
+    if docm is None:
+        for e in doc_errors:
+            report(1, e)
+        return findings
+    for e in doc_errors:
+        report(1, e)
+
+    for tspec in code:
+        if tspec not in docm:
+            report(1, (
+                f"transport {tspec!r} exists in api/transport.py but has "
+                "no row in the compatibility matrix"
+            ))
+    for tname in docm:
+        if tname not in code:
+            report(row_lines[tname], (
+                f"matrix row {tname!r} has no such transport in "
+                "api/transport.py (make_transport)"
+            ))
+    doc_cols = set().union(*(set(r) for r in docm.values())) if docm else set()
+    for espec in executor_specs:
+        if espec not in doc_cols:
+            report(1, (
+                f"executor {espec!r} is declared in api/executor.py but "
+                "missing from the compatibility matrix columns"
+            ))
+    for espec in doc_cols:
+        if espec not in executor_specs:
+            report(1, (
+                f"matrix column {espec!r} names no executor declared in "
+                "api/executor.py (EXECUTORS/COMPOSED_EXECUTORS)"
+            ))
+
+    for tspec, row in code.items():
+        if tspec not in docm:
+            continue
+        for espec, expected in row.items():
+            documented = docm[tspec].get(espec)
+            if documented is None or documented == expected:
+                continue
+            word = {True: "supported", False: "rejected"}
+            report(row_lines[tspec], (
+                f"matrix drift: {tspec!r} × {espec!r} is documented "
+                f"{_CHECK if documented else _CROSS} but the code says "
+                f"{word[expected]} (derived from the run_server/run_update/"
+                "isinstance rejection paths in api/transport.py + "
+                "api/executor.py)"
+            ))
+    return findings

@@ -1,0 +1,153 @@
+"""ledger-completeness — every byte the wire emits reaches the accounting.
+
+The cost model (§4) is only as honest as its plumbing: ``Wire.encode_push``
+and ``Wire.encode_updates`` return ``(wstate, payload, nbytes)`` and that
+third element must flow into the run's uplink accounting (``sum_bytes`` /
+``from_owner`` / the RawRun uplink column / a ``CommLedger.record_*``).
+A transport that drops it still *trains* correctly — the comm/accuracy
+trade-off plots just silently under-report, which is the worst failure
+mode a measurement repo can have.
+
+Flagged:
+
+* an ``encode_push``/``encode_updates`` call whose result is discarded
+  outright (bare expression statement);
+* a 3-way unpack of such a call whose byte element is bound to ``_`` or
+  to a name never read afterwards in the enclosing function;
+* a ``wire.measure(...)``/``wire.push_bytes(...)`` byte measurement used
+  as a bare statement (measured, then dropped);
+* a ``CommLedger()`` constructed and never touched again — dead ledgers
+  usually mean a refactor disconnected the recording path.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import FUNC_NODES
+from tools.reprolint.core import Finding
+
+RULE = "ledger-completeness"
+
+_ENCODERS = {"encode_push", "encode_updates"}
+_MEASURERS = {"measure", "push_bytes"}
+
+
+def _parents(tree):
+    out = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            out[child] = parent
+    return out
+
+
+def _enclosing_fn(node, parents):
+    p = parents.get(node)
+    while p is not None:
+        if isinstance(p, FUNC_NODES + (ast.Lambda,)):
+            return p
+        p = parents.get(p)
+    return None
+
+
+def _loads(scope_node, name: str) -> int:
+    n = 0
+    for node in ast.walk(scope_node):
+        if (
+            isinstance(node, ast.Name)
+            and node.id == name
+            and isinstance(node.ctx, ast.Load)
+        ):
+            n += 1
+    return n
+
+
+def _method_name(call: ast.Call) -> str | None:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    return None
+
+
+def run(ctx) -> list:
+    findings = []
+    for sf in ctx.files:
+        if sf.tree is None:
+            continue
+        parents = _parents(sf.tree)
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            meth = _method_name(node)
+
+            # constructor check: CommLedger() bound and never used again
+            if (
+                isinstance(node.func, ast.Name)
+                and node.func.id == "CommLedger"
+            ):
+                parent = parents.get(node)
+                if (
+                    isinstance(parent, ast.Assign)
+                    and len(parent.targets) == 1
+                    and isinstance(parent.targets[0], ast.Name)
+                ):
+                    name = parent.targets[0].id
+                    fn = _enclosing_fn(node, parents) or sf.tree
+                    if _loads(fn, name) == 0:
+                        findings.append(Finding(
+                            path=sf.rel, line=node.lineno,
+                            col=node.col_offset + 1, rule=RULE,
+                            message=(
+                                f"CommLedger bound to {name!r} but never "
+                                "read — nothing records into it, so the "
+                                "comm accounting it was meant to carry is "
+                                "silently lost"
+                            ),
+                        ))
+                continue
+
+            if meth in _ENCODERS or meth in _MEASURERS:
+                parent = parents.get(node)
+                if isinstance(parent, ast.Expr):
+                    what = (
+                        "wire payload and its byte count"
+                        if meth in _ENCODERS else "byte measurement"
+                    )
+                    findings.append(Finding(
+                        path=sf.rel, line=node.lineno,
+                        col=node.col_offset + 1, rule=RULE,
+                        message=(
+                            f".{meth}(...) result discarded — the {what} "
+                            "must flow into uplink/downlink accounting "
+                            "(sum_bytes / RawRun columns / "
+                            "CommLedger.record_*)"
+                        ),
+                    ))
+                    continue
+
+            if meth not in _ENCODERS:
+                continue
+            # 3-way unpack: (wstate, payload, nbytes) — audit the nbytes slot
+            parent = parents.get(node)
+            if not (
+                isinstance(parent, ast.Assign)
+                and len(parent.targets) == 1
+                and isinstance(parent.targets[0], (ast.Tuple, ast.List))
+                and len(parent.targets[0].elts) == 3
+            ):
+                continue
+            byte_tgt = parent.targets[0].elts[2]
+            if not isinstance(byte_tgt, ast.Name):
+                continue
+            fn = _enclosing_fn(node, parents) or sf.tree
+            if byte_tgt.id == "_" or _loads(fn, byte_tgt.id) == 0:
+                findings.append(Finding(
+                    path=sf.rel, line=byte_tgt.lineno,
+                    col=byte_tgt.col_offset + 1, rule=RULE,
+                    message=(
+                        f"byte count from .{meth}(...) bound to "
+                        f"{byte_tgt.id!r} and never read — wire bytes that "
+                        "skip the accounting under-report every "
+                        "comm/accuracy trade-off downstream"
+                    ),
+                ))
+    return findings

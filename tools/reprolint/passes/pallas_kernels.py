@@ -1,0 +1,303 @@
+"""pallas-kernel — TPU kernel structural checks (``kernels/*/kernel.py``).
+
+Checks, each only where the answer is statically decidable (a block size
+held in a module/local constant resolves; one computed from runtime shape
+arithmetic stays silent):
+
+* **tile alignment** — a ``BlockSpec`` block shape whose last dimension is
+  neither 1 nor a multiple of the 128-lane VPU/MXU width, or whose
+  second-to-last dimension is neither 1 nor a multiple of the 8-sublane
+  f32 tile, forces the compiler to pad every tile (``memory_space=...``
+  SMEM/scalar specs are exempt);
+* **index-map arity** — each ``BlockSpec`` index map must take exactly one
+  required parameter per grid dimension (extra *defaulted* params are the
+  sanctioned ``lambda ..., G=G:`` closure-avoidance idiom and are fine),
+  and must return one coordinate per block-shape dimension;
+* **kernel-body purity** — no ``print``/``open``/``breakpoint`` and no
+  ``global``/``nonlocal`` inside a kernel body: kernels run per grid step
+  on device, Python side effects fire once at trace time (use
+  ``pl.debug_print``);
+* **no closures over enclosing arguments** — a kernel that reads a
+  parameter of an enclosing function closes over what is usually a traced
+  array; route arrays through ``pallas_call`` operands and statics through
+  ``functools.partial`` / lambda defaults;
+* **scratch memory spaces** — every ``scratch_shapes`` entry must carry an
+  explicit ``pltpu.VMEM``/``pltpu.SMEM`` (or other ``pltpu.*``) space.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import (
+    FUNC_NODES,
+    build_imports,
+    build_scopes,
+    qualify,
+    resolve_int,
+)
+from tools.reprolint.core import Finding
+
+RULE = "pallas-kernel"
+
+LANE = 128
+SUBLANE = 8
+
+_SIDE_EFFECT_CALLS = {"print", "open", "breakpoint", "input"}
+
+
+def _parents(tree):
+    out = {}
+    for parent in ast.walk(tree):
+        for child in ast.iter_child_nodes(parent):
+            out[child] = parent
+    return out
+
+
+def _nearest_scope(node, parents, scopes, tree):
+    p = parents.get(node)
+    while p is not None:
+        if isinstance(p, FUNC_NODES + (ast.Lambda,)) and p in scopes:
+            return scopes[p]
+        p = parents.get(p)
+    return scopes[tree]
+
+
+def _kw(call: ast.Call, name: str):
+    for k in call.keywords:
+        if k.arg == name:
+            return k.value
+    return None
+
+
+def _grid_len(call: ast.Call, scope) -> int | None:
+    grid = _kw(call, "grid")
+    if isinstance(grid, ast.Name) and scope is not None:
+        grid = scope.lookup_const(grid.id)
+    if isinstance(grid, (ast.Tuple, ast.List)):
+        return len(grid.elts)
+    return None
+
+
+def _resolve_kernel_fn(arg, scope, imports):
+    """The kernel function node handed to pallas_call, unwrapping the
+    ``functools.partial(kernel, **statics)`` binding idiom."""
+    for _ in range(4):  # partial-of-partial chains, defensively bounded
+        if isinstance(arg, (ast.Lambda,) + FUNC_NODES):
+            return arg
+        if isinstance(arg, ast.Name) and scope is not None:
+            fn = scope.lookup(arg.id)
+            if fn is not None:
+                return fn
+            arg = scope.lookup_const(arg.id)
+            continue
+        if isinstance(arg, ast.Call):
+            q = qualify(arg.func, imports)
+            if q in ("functools.partial", "partial") and arg.args:
+                arg = arg.args[0]
+                continue
+        return None
+    return None
+
+
+def _local_bindings(fn) -> set:
+    """Every name bound anywhere inside ``fn`` (params, assignments,
+    loop targets, nested defs, comprehension targets)."""
+    names = set()
+    a = fn.args
+    for p in a.posonlyargs + a.args + a.kwonlyargs:
+        names.add(p.arg)
+    for p in (a.vararg, a.kwarg):
+        if p is not None:
+            names.add(p.arg)
+    for node in ast.walk(fn):
+        if isinstance(node, ast.Name) and isinstance(
+            node.ctx, (ast.Store, ast.Del)
+        ):
+            names.add(node.id)
+        elif isinstance(node, FUNC_NODES):
+            names.add(node.name)
+            if node is not fn:
+                sub = node.args
+                for p in sub.posonlyargs + sub.args + sub.kwonlyargs:
+                    names.add(p.arg)
+        elif isinstance(node, ast.Lambda):
+            for p in node.args.posonlyargs + node.args.args:
+                names.add(p.arg)
+    return names
+
+
+def _check_kernel_body(sf, fn, parents, findings):
+    # side effects
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Global, ast.Nonlocal)):
+            findings.append(Finding(
+                path=sf.rel, line=node.lineno, col=node.col_offset + 1,
+                rule=RULE,
+                message=(
+                    "global/nonlocal inside a pallas kernel body — kernels "
+                    "must be pure; carry state in VMEM/SMEM scratch refs"
+                ),
+            ))
+        elif (
+            isinstance(node, ast.Call)
+            and isinstance(node.func, ast.Name)
+            and node.func.id in _SIDE_EFFECT_CALLS
+        ):
+            findings.append(Finding(
+                path=sf.rel, line=node.lineno, col=node.col_offset + 1,
+                rule=RULE,
+                message=(
+                    f"Python {node.func.id}() inside a pallas kernel body "
+                    "— fires once at trace time, not per grid step; use "
+                    "pl.debug_print for on-device values"
+                ),
+            ))
+
+    # closures over enclosing-function parameters (likely traced arrays)
+    if not isinstance(fn, FUNC_NODES):
+        return
+    enclosing_params = {}
+    p = parents.get(fn)
+    while p is not None:
+        if isinstance(p, FUNC_NODES):
+            a = p.args
+            for prm in a.posonlyargs + a.args + a.kwonlyargs:
+                enclosing_params.setdefault(prm.arg, p.name)
+        p = parents.get(p)
+    if not enclosing_params:
+        return
+    local = _local_bindings(fn)
+    reported = set()
+    for node in ast.walk(fn):
+        if (
+            isinstance(node, ast.Name)
+            and isinstance(node.ctx, ast.Load)
+            and node.id in enclosing_params
+            and node.id not in local
+            and node.id not in reported
+        ):
+            reported.add(node.id)
+            findings.append(Finding(
+                path=sf.rel, line=node.lineno, col=node.col_offset + 1,
+                rule=RULE,
+                message=(
+                    f"kernel closes over {node.id!r}, a parameter of "
+                    f"enclosing {enclosing_params[node.id]}() — closed-over "
+                    "arrays are baked in as constants at trace time; pass "
+                    "arrays as pallas_call operands and statics via "
+                    "functools.partial or a lambda default"
+                ),
+            ))
+
+
+def _check_blockspec(sf, spec: ast.Call, scope, grid_len, findings):
+    if _kw(spec, "memory_space") is not None:
+        return  # SMEM/scalar specs follow different tiling rules
+    shape = spec.args[0] if spec.args else _kw(spec, "block_shape")
+    rank = None
+    if isinstance(shape, (ast.Tuple, ast.List)):
+        rank = len(shape.elts)
+        dims = [resolve_int(e, scope) for e in shape.elts]
+        checks = [
+            (-1, LANE, "last"),
+            (-2, SUBLANE, "second-to-last"),
+        ]
+        for idx, unit, label in checks:
+            if rank + idx < 0:
+                continue
+            v = dims[idx]
+            if v is None or v == 1 or v % unit == 0:
+                continue
+            findings.append(Finding(
+                path=sf.rel, line=shape.lineno, col=shape.col_offset + 1,
+                rule=RULE,
+                message=(
+                    f"BlockSpec {label} dimension {v} is neither 1 nor a "
+                    f"multiple of {unit} — TPU tiles are (8, 128); "
+                    "misaligned blocks are padded on every grid step"
+                ),
+            ))
+    imap = spec.args[1] if len(spec.args) > 1 else _kw(spec, "index_map")
+    if isinstance(imap, ast.Lambda):
+        required = (
+            len(imap.args.posonlyargs) + len(imap.args.args)
+            - len(imap.args.defaults)
+        )
+        if grid_len is not None and required != grid_len:
+            findings.append(Finding(
+                path=sf.rel, line=imap.lineno, col=imap.col_offset + 1,
+                rule=RULE,
+                message=(
+                    f"index_map takes {required} required parameter(s) but "
+                    f"the grid has {grid_len} dimension(s) — one grid index "
+                    "per dimension (defaulted extras like `G=G` are fine)"
+                ),
+            ))
+        if isinstance(imap.body, ast.Tuple) and rank is not None:
+            if len(imap.body.elts) != rank:
+                findings.append(Finding(
+                    path=sf.rel, line=imap.lineno, col=imap.col_offset + 1,
+                    rule=RULE,
+                    message=(
+                        f"index_map returns {len(imap.body.elts)} "
+                        f"coordinate(s) for a rank-{rank} block shape — "
+                        "must return one block coordinate per dimension"
+                    ),
+                ))
+
+
+def _check_scratch(sf, call: ast.Call, imports, findings):
+    scratch = _kw(call, "scratch_shapes")
+    if not isinstance(scratch, (ast.Tuple, ast.List)):
+        return
+    for entry in scratch.elts:
+        q = qualify(entry.func, imports) if isinstance(entry, ast.Call) else None
+        if q is not None and (
+            q.startswith("jax.experimental.pallas.tpu.")
+            or q.startswith("jax.experimental.pallas.")
+        ):
+            continue
+        findings.append(Finding(
+            path=sf.rel, line=entry.lineno, col=entry.col_offset + 1,
+            rule=RULE,
+            message=(
+                "scratch_shapes entry without an explicit memory space — "
+                "use pltpu.VMEM((...), dtype) / pltpu.SMEM(...) so the "
+                "working set is pinned where the kernel expects it"
+            ),
+        ))
+
+
+def run(ctx) -> list:
+    findings = []
+    for sf in ctx.files:
+        if sf.tree is None or "pallas_call" not in sf.text:
+            continue
+        imports = build_imports(sf.tree)
+        scopes = build_scopes(sf.tree)
+        parents = _parents(sf.tree)
+        checked_fns = set()
+        for node in ast.walk(sf.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            q = qualify(node.func, imports) or ""
+            if not q.endswith("pallas.pallas_call"):
+                continue
+            scope = _nearest_scope(node, parents, scopes, sf.tree)
+            grid_len = _grid_len(node, scope)
+            for sub in ast.walk(node):
+                if (
+                    isinstance(sub, ast.Call)
+                    and (qualify(sub.func, imports) or "").endswith(
+                        ".BlockSpec"
+                    )
+                ):
+                    _check_blockspec(sf, sub, scope, grid_len, findings)
+            _check_scratch(sf, node, imports, findings)
+            if node.args:
+                fn = _resolve_kernel_fn(node.args[0], scope, imports)
+                if fn is not None and id(fn) not in checked_fns:
+                    checked_fns.add(id(fn))
+                    _check_kernel_body(sf, fn, parents, findings)
+    return findings

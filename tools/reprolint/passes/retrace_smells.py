@@ -1,0 +1,142 @@
+"""retrace-smell — things that make jit recompile (or crash) on contact.
+
+Retraces are the silent tax of §5-style protocols: a transport that
+retraces per contact turns an O(1) compile into O(T).  Statically
+catchable smells:
+
+* **non-hashable defaults on a jitted function** — list/dict/set defaults
+  break jit's cache key the moment the parameter is marked static, and
+  mutable defaults are a latent aliasing bug regardless;
+* **static/donate argnum drift** — ``static_argnums``/``donate_argnums``
+  pointing past the parameter list, or ``static_argnames``/
+  ``donate_argnames`` naming a parameter that no longer exists: the
+  classic signature-change leftover, which either raises at first call or
+  silently stops marking the argument it used to;
+* **Python iteration over traced data** — a ``for`` loop (or
+  comprehension) over an argument-derived value inside a traced region
+  unrolls the loop into the graph at best and host-syncs at worst; use
+  ``lax.scan``/``lax.fori_loop``.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.astutil import find_traced, taint_events
+from tools.reprolint.core import Finding
+
+RULE = "retrace-smell"
+
+_MUTABLE_LITERALS = (ast.List, ast.Dict, ast.Set, ast.ListComp, ast.DictComp,
+                     ast.SetComp)
+
+
+def _positional_params(fn) -> list:
+    a = fn.args
+    return [p.arg for p in (a.posonlyargs + a.args)]
+
+
+def _all_params(fn) -> set:
+    a = fn.args
+    names = {p.arg for p in (a.posonlyargs + a.args + a.kwonlyargs)}
+    for p in (a.vararg, a.kwarg):
+        if p is not None:
+            names.add(p.arg)
+    return names
+
+
+def _int_elems(node):
+    vals = [node] if isinstance(node, ast.Constant) else list(
+        getattr(node, "elts", [])
+    )
+    return [
+        v.value for v in vals
+        if isinstance(v, ast.Constant) and isinstance(v.value, int)
+    ]
+
+
+def _str_elems(node):
+    vals = [node] if isinstance(node, ast.Constant) else list(
+        getattr(node, "elts", [])
+    )
+    return [
+        v.value for v in vals
+        if isinstance(v, ast.Constant) and isinstance(v.value, str)
+    ]
+
+
+def _check_jit_call(sf, fn, call: ast.Call, findings):
+    pos = _positional_params(fn)
+    names = _all_params(fn)
+    for kw in call.keywords:
+        if kw.arg in ("static_argnums", "donate_argnums"):
+            for v in _int_elems(kw.value):
+                if not (0 <= v < len(pos)):
+                    findings.append(Finding(
+                        path=sf.rel, line=kw.value.lineno,
+                        col=kw.value.col_offset + 1, rule=RULE,
+                        message=(
+                            f"{kw.arg}={v} but the jitted function has "
+                            f"only {len(pos)} positional parameter(s) "
+                            f"({', '.join(pos) or 'none'}) — stale index "
+                            "after a signature change"
+                        ),
+                    ))
+        elif kw.arg in ("static_argnames", "donate_argnames"):
+            for v in _str_elems(kw.value):
+                if v not in names:
+                    findings.append(Finding(
+                        path=sf.rel, line=kw.value.lineno,
+                        col=kw.value.col_offset + 1, rule=RULE,
+                        message=(
+                            f"{kw.arg} names {v!r}, which is not a "
+                            "parameter of the jitted function — stale "
+                            "name after a signature change"
+                        ),
+                    ))
+
+
+def run(ctx) -> list:
+    findings = []
+    for sf in ctx.files:
+        if sf.tree is None:
+            continue
+        traced = find_traced(sf)
+        for fn, use in traced.items():
+            if "jit" not in use.reason:
+                continue
+            if isinstance(fn, ast.Lambda):
+                defaults = fn.args.defaults
+            else:
+                defaults = fn.args.defaults + [
+                    d for d in fn.args.kw_defaults if d is not None
+                ]
+            for d in defaults:
+                if isinstance(d, _MUTABLE_LITERALS):
+                    findings.append(Finding(
+                        path=sf.rel, line=d.lineno, col=d.col_offset + 1,
+                        rule=RULE,
+                        message=(
+                            "mutable (non-hashable) default on a jitted "
+                            "function — breaks the jit cache key if the "
+                            "parameter is ever marked static, and aliases "
+                            "across calls regardless; default to None and "
+                            "materialize inside"
+                        ),
+                    ))
+            if isinstance(use.jit_call, ast.Call):
+                _check_jit_call(sf, fn, use.jit_call, findings)
+        for ev in taint_events(sf):
+            if ev.kind != "for-iter":
+                continue
+            findings.append(Finding(
+                path=sf.rel, line=ev.node.lineno, col=ev.node.col_offset + 1,
+                rule=RULE,
+                message=(
+                    f"Python iteration over `{ev.detail}` (argument-"
+                    f"derived) inside a {ev.reason} — unrolls into the "
+                    "traced graph and retraces when the length changes; "
+                    "use jax.lax.scan / fori_loop"
+                ),
+            ))
+    return findings

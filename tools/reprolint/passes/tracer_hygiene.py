@@ -1,0 +1,69 @@
+"""tracer-hygiene — no Python control flow or host syncs on traced values.
+
+Inside a traced region (a jit-decorated/-wrapped function, a
+scan/shard_map/cond/while_loop body, a pallas kernel), branching on a
+value derived from the function's arguments is either a
+``TracerBoolConversionError`` at trace time or — worse — a silent
+device→host sync and retrace when the value is concrete on the first
+call.  The §5 transports retrace per contact if this slips into a step
+body, which is exactly the class of coordination bug the surveys flag as
+dominant at scale.
+
+Flagged: ``if``/``while``/``assert`` on a tainted value,
+``bool()``/``float()``/``int()``/``complex()`` casts, ``.item()`` /
+``.tolist()`` / ``np.asarray(...)`` host syncs.  Taint starts at the
+traced function's parameters (minus jit static args) and stops at
+trace-time-static accessors (``.shape``/``.ndim``/``.dtype``, ``len``,
+``isinstance``, ``x is None``), so idiomatic shape-driven Python stays
+clean.
+"""
+
+from __future__ import annotations
+
+from tools.reprolint.astutil import taint_events
+from tools.reprolint.core import Finding
+
+RULE = "tracer-hygiene"
+
+_MESSAGES = {
+    "if": (
+        "Python `if {detail}` on an argument-derived value inside a "
+        "{reason} — this host-syncs or raises under trace; use "
+        "jax.lax.cond / jnp.where (or hoist the branch out of the traced "
+        "region)"
+    ),
+    "while": (
+        "Python `while {detail}` on an argument-derived value inside a "
+        "{reason} — use jax.lax.while_loop"
+    ),
+    "assert": (
+        "Python `assert {detail}` on an argument-derived value inside a "
+        "{reason} — asserts on tracers raise at trace time; use "
+        "checkify or validate outside the traced region"
+    ),
+    "bool-cast": (
+        "{detail} applied to an argument-derived value inside a {reason} "
+        "— forces a device→host sync (TracerBoolConversion hazard)"
+    ),
+    "host-sync": (
+        "{detail} on an argument-derived value inside a {reason} — "
+        "forces a device→host sync; keep the hot path on device"
+    ),
+}
+
+
+def run(ctx) -> list:
+    findings = []
+    for sf in ctx.files:
+        for ev in taint_events(sf):
+            msg = _MESSAGES.get(ev.kind)
+            if msg is None:
+                continue  # "for-iter" belongs to retrace-smell
+            findings.append(Finding(
+                path=sf.rel,
+                line=ev.node.lineno,
+                col=ev.node.col_offset + 1,
+                rule=RULE,
+                message=msg.format(detail=ev.detail, reason=ev.reason),
+            ))
+    return findings
