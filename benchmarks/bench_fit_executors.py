@@ -2,14 +2,23 @@
 mesh (shard_map node placement) vs sweep (vmapped S-scenario batch) vs
 the composed mesh+sweep (scenario vmap inside the shard_map body).
 
-Measures compiled wall-clock per fit and the ledger byte totals (which
-must agree across local/mesh — placement changes WHERE the program runs,
-not what crosses the wire), amortized per-scenario cost for the sweep
-against S sequential fits, and the composed executor's throughput
-against the local sweep (on ≥4 devices the sharded compute should win:
-each device trains all S scenarios on 1/ndev of the nodes).  Writes
-``BENCH_executors.json`` next to the repo root for the perf trajectory;
-also pluggable into ``benchmarks.run`` (rows of
+Measures compiled wall-clock per fit — COLD (first call: trace + compile
++ run, program cache empty) and WARM (repeat call riding the executor
+program cache) — and the ledger byte totals (which must agree across
+local/mesh — placement changes WHERE the program runs, not what crosses
+the wire), amortized per-scenario cost for the sweep against S
+sequential fits, and the composed executor's throughput against the
+local sweep (on ≥4 devices the sharded compute should win: each device
+trains all S scenarios on 1/ndev of the nodes).
+
+A separate per-phase decomposition isolates the three things a mesh
+round actually does — the dense local step (grads + apply), the wire
+encode (top-k select + EF residual), and the node-axis collective — as
+standalone jitted loops over the same shapes, so any residual local↔mesh
+gap can be attributed to a phase instead of guessed at.
+
+Writes ``BENCH_executors.json`` next to the repo root for the perf
+trajectory; also pluggable into ``benchmarks.run`` (rows of
 ``name,us_per_call,derived``).
 
 Run:
@@ -30,6 +39,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro import api
+from repro.api import executor as _exec
+from repro.api.wire import make_wire
 from repro.ml.linear import lsq_loss
 
 K, NK, N = 8, 64, 256
@@ -46,15 +57,104 @@ def _problem():
 
 
 def _timed(fn, repeats=3):
-    fn()  # compile + warm caches
-    best = float("inf")
-    out = None
+    """(cold_s, warm_s, out): cold = first call on an empty program cache
+    (trace + compile + run); warm = best repeat riding the cache."""
+    _exec.clear_program_cache()
+    t0 = time.perf_counter()
+    out = fn()
+    jax.block_until_ready(out.theta)
+    cold = time.perf_counter() - t0
+    warm = float("inf")
     for _ in range(repeats):
         t0 = time.perf_counter()
         out = fn()
         jax.block_until_ready(out.theta)
+        warm = min(warm, time.perf_counter() - t0)
+    return cold, warm, out
+
+
+def _timed_raw(prog, *args, repeats=3):
+    out = jax.block_until_ready(prog(*args))  # compile
+    best = float("inf")
+    for _ in range(repeats):
+        t0 = time.perf_counter()
+        out = jax.block_until_ready(prog(*args))
         best = min(best, time.perf_counter() - t0)
     return best, out
+
+
+def _phase_decomposition(data):
+    """Wall-time of each per-round phase, isolated at the benchmark's
+    own shapes and run STEPS times in a jitted loop:
+
+    * ``local_step`` — per-node grads + stack-sum + apply (no wire, no
+      mesh): the compute floor shared by every executor.
+    * ``encode_topk`` — the compressed wire's stacked encode (top-k
+      select + EF residual) on a fixed (K, n) message batch.
+    * ``collective`` — a shard_map'd per-round psum over the node axis
+      at the message shape: what placement itself adds.
+
+    The sum approximates one mesh_topk fit; the differences attribute
+    the local↔mesh gap to a phase.
+    """
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    st = api.GradientDescent(lsq_loss, lr=0.05)
+    theta0 = st.init_theta(data)
+
+    def local_prog(th, d):
+        def step(c, _):
+            msgs, _s = st.local_updates(c, (), d, None)
+            agg = jnp.sum(msgs, axis=0)  # the stack reduction, no mesh
+            c2, _s = st.apply_update(c, agg, (), d)
+            return c2, ()
+
+        return jax.lax.scan(step, th, None, length=STEPS)[0]
+
+    t_local, _ = _timed_raw(jax.jit(local_prog), theta0, data)
+
+    wire = make_wire("topk:0.1+ef")
+    wst = wire.init_state(theta0, K, stacked=True)
+    msgs = jnp.asarray(
+        np.random.default_rng(1).normal(size=(K, theta0.size)),
+        theta0.dtype,
+    )
+
+    def encode_prog(w0, m):
+        def step(c, _):
+            ws, acc = c
+            ws, m_hat, _up = wire.encode_updates(ws, m, stacked=True)
+            return (ws, acc + jnp.sum(m_hat)), ()  # consume: defeat DCE
+
+        return jax.lax.scan(step, (w0, jnp.zeros(())), None, length=STEPS)[0]
+
+    t_encode, _ = _timed_raw(jax.jit(encode_prog), wst, msgs)
+
+    r = api.MeshExecutor().resolve()
+
+    def coll_body(m):
+        def step(c, _):
+            return c + jax.lax.psum(jnp.sum(m, axis=0), r.axis), ()
+
+        return jax.lax.scan(
+            step, jnp.zeros(m.shape[1:], m.dtype), None, length=STEPS
+        )[0]
+
+    coll = jax.jit(
+        shard_map(
+            coll_body, mesh=r.mesh, in_specs=P(r.axis), out_specs=P(),
+            check_rep=False,
+        )
+    )
+    t_coll, _ = _timed_raw(coll, msgs)
+
+    return {
+        "steps": STEPS,
+        "local_step_s": t_local,
+        "encode_topk_s": t_encode,
+        "collective_s": t_coll,
+    }
 
 
 def run(rows):
@@ -62,9 +162,17 @@ def run(rows):
     data = (X, y)
     results = {
         "workload": {"K": K, "Nk": NK, "n": N, "steps": STEPS},
+        "env": {
+            "jax_version": jax.__version__,
+            "backend": jax.default_backend(),
+            "device_kind": jax.devices()[0].device_kind,
+            "num_devices": jax.device_count(),
+            # fake CPU devices oversubscribe the host's cores — the
+            # context for reading the mesh rows (each shard is NOT a
+            # physical chip)
+            "physical_cpus": os.cpu_count(),
+        },
         "num_devices": jax.device_count(),
-        # fake CPU devices oversubscribe the host's cores — the context
-        # for reading the mesh rows (each shard is NOT a physical chip)
         "physical_cpus": os.cpu_count(),
         "executors": {},
     }
@@ -75,23 +183,33 @@ def run(rows):
         ("local_topk", {"executor": "local", "wire": "topk:0.1+ef"}),
         ("mesh_topk", {"executor": "mesh", "wire": "topk:0.1+ef"}),
     ]:
-        dt, res = _timed(
+        cold, warm, res = _timed(
             lambda kw=kwargs: api.fit(
                 api.GradientDescent(lsq_loss, lr=0.05), data,
                 transport="allreduce", steps=STEPS, **kw,
             )
         )
-        results["executors"][name] = {
-            "wall_s": dt,
+        entry = {
+            "wall_s": warm,
+            "cold_wall_s": cold,
             "total_bytes": res.ledger.total_bytes,
             "final_loss": float(res.trajectory[-1]),
         }
-        rows.append((f"fit_executors/{name}", dt * 1e6 / STEPS,
+        if "wire_kernel_hits" in res.metrics:
+            entry["wire_kernel_hits"] = res.metrics["wire_kernel_hits"]
+        results["executors"][name] = entry
+        rows.append((f"fit_executors/{name}", warm * 1e6 / STEPS,
                      f"{float(res.trajectory[-1]):.4f}"))
+
+    # per-phase decomposition of what one round actually does
+    results["phases"] = _phase_decomposition(data)
+    for ph in ("local_step", "encode_topk", "collective"):
+        rows.append((f"fit_executors/phase_{ph}",
+                     results["phases"][f"{ph}_s"] * 1e6 / STEPS, ""))
 
     # sweep: S scenarios in one executable vs S sequential fits
     sweep = api.SweepExecutor({"lr": jnp.asarray(LRS)})
-    dt_sweep, res_sweep = _timed(
+    cold_sweep, dt_sweep, res_sweep = _timed(
         lambda: api.fit(api.GradientDescent(lsq_loss, lr=0.05), data,
                         transport="allreduce", steps=STEPS, executor=sweep)
     )
@@ -103,9 +221,10 @@ def run(rows):
                           transport="allreduce", steps=STEPS)
         return out
 
-    dt_seq, _ = _timed(_sequential)
+    _, dt_seq, _ = _timed(_sequential)
     results["executors"]["sweep"] = {
         "wall_s": dt_sweep,
+        "cold_wall_s": cold_sweep,
         "scenarios": len(LRS),
         "wall_s_sequential_equivalent": dt_seq,
         "speedup_vs_sequential": dt_seq / dt_sweep,
@@ -124,7 +243,7 @@ def run(rows):
     # the edge) and S sequential mesh fits (the mesh-resident
     # alternative the composition actually replaces: one executable
     # shares every psum across the S lanes, so this is the ~S× win).
-    dt_comp, res_comp = _timed(
+    cold_comp, dt_comp, res_comp = _timed(
         lambda: api.fit(api.GradientDescent(lsq_loss, lr=0.05), data,
                         transport="allreduce", steps=STEPS,
                         executor="mesh+sweep",
@@ -141,9 +260,10 @@ def run(rows):
                           executor="mesh")
         return out
 
-    dt_seq_mesh, _ = _timed(_sequential_mesh)
+    _, dt_seq_mesh, _ = _timed(_sequential_mesh)
     results["executors"]["mesh+sweep"] = {
         "wall_s": dt_comp,
+        "cold_wall_s": cold_comp,
         "scenarios": len(LRS),
         "wall_s_sweep_local": dt_sweep,
         "throughput_vs_sweep_local": dt_sweep / dt_comp,
@@ -154,6 +274,8 @@ def run(rows):
     rows.append((f"fit_executors/mesh+sweep_S{len(LRS)}",
                  dt_comp * 1e6 / STEPS,
                  f"{dt_seq_mesh / dt_comp:.2f}x_vs_seq_mesh"))
+
+    results["program_cache"] = _exec.program_cache_stats()
 
     out_path = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

@@ -47,6 +47,7 @@ from jax.sharding import PartitionSpec as P
 from repro import api
 from repro.api import executor as X
 from repro.core.allreduce import hierarchical_allreduce
+from repro.core.topology import calibrate_prices
 from repro.ml.linear import lsq_loss
 from repro.telemetry.hlo import collective_stats, mesh_pod_map
 
@@ -104,9 +105,45 @@ g = jax.jit(shard_map(
 txt = g.lower(jnp.ones((K, N))).compile().as_text()
 measured = collective_stats(txt, pod_of=mesh_pod_map(mesh))
 
+# per-hop wall-time decomposition at the message shape: each hop's psum
+# timed alone in a jitted shard_map loop — the measured cost ratio the
+# calibrated prices should reflect
+def hop_loop(axes):
+    def body(v):
+        def step(c, _):
+            return c + jax.lax.psum(v[0], axes), ()
+        return jax.lax.scan(
+            step, jnp.zeros(v.shape[1:], v.dtype), None, length=STEPS
+        )[0]
+    return jax.jit(shard_map(
+        body, mesh=mesh, in_specs=P(r.axis), out_specs=P(),
+        check_rep=False,
+    ))
+
+msg = jnp.ones((K, N))
+hop_times = {}
+for hop in r.topology.hops:
+    prog = hop_loop(hop.axes)
+    jax.block_until_ready(prog(msg))
+    best = float("inf")
+    for _ in range(3):
+        t0 = time.perf_counter()
+        jax.block_until_ready(prog(msg))
+        best = min(best, time.perf_counter() - t0)
+    hop_times[hop.name] = best
+
+# one-shot microbenchmark replacing the ×1/×10 default hop prices
+prices = calibrate_prices(mesh)
+
 out = {
     "workload": {"K": K, "Nk": NK, "n": N, "steps": STEPS},
     "mesh": {"pod": 2, "data": 4},
+    "env": {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_kind": jax.devices()[0].device_kind,
+        "num_devices": jax.device_count(),
+    },
     "equivalence": {"theta_bitwise_flat_vs_hierarchical": bitwise},
     "predicted": {
         "flat": flat.ledger.summary(),
@@ -117,7 +154,14 @@ out = {
         "total_bytes": measured["total_bytes"],
         "total_count": measured["total_count"],
     },
-    "timings": {"flat_wall_s": dt_flat, "hierarchical_wall_s": dt_hier},
+    "timings": {
+        "flat_wall_s": dt_flat,
+        "hierarchical_wall_s": dt_hier,
+        "per_hop_collective_s": hop_times,
+    },
+    "calibrated_prices": {
+        k: v for k, v in prices.items() if k != "seconds"
+    } | {"seconds": prices["seconds"]},
 }
 print(json.dumps(out))
 """ % {"steps": STEPS}

@@ -1,12 +1,32 @@
 """Benchmark harness — one module per paper claim/table (DESIGN.md §6).
 
-Prints ``name,us_per_call,derived`` CSV.  Run:
+Prints ``name,us_per_call,derived`` CSV.  Each bench module imports
+independently: an import failure (missing optional dep, broken
+accelerator stack) reports a ``SKIP(import)`` row and the rest of the
+suite still runs.  Run:
   PYTHONPATH=src python -m benchmarks.run [--only substring]
 """
 
 import argparse
+import importlib
 import sys
 import traceback
+
+#: name → module path; imported lazily one at a time so a single broken
+#: import cannot take down the whole harness
+MODULES = {
+    "async_vs_sync": "benchmarks.bench_async_vs_sync",
+    "staleness": "benchmarks.bench_staleness",
+    "admm": "benchmarks.bench_admm",
+    "compression": "benchmarks.bench_compression",
+    "fit_executors": "benchmarks.bench_fit_executors",
+    "multipod": "benchmarks.bench_multipod",
+    "serve": "benchmarks.bench_serve",
+    "cascade_svm": "benchmarks.bench_cascade_svm",
+    "gp_experts": "benchmarks.bench_gp_experts",
+    "clustering": "benchmarks.bench_clustering",
+    "kernels": "benchmarks.bench_kernels",
+}
 
 
 def main() -> None:
@@ -14,38 +34,17 @@ def main() -> None:
     ap.add_argument("--only", default="", help="run benches whose name contains this")
     args = ap.parse_args()
 
-    from benchmarks import (
-        bench_admm,
-        bench_async_vs_sync,
-        bench_cascade_svm,
-        bench_clustering,
-        bench_compression,
-        bench_fit_executors,
-        bench_gp_experts,
-        bench_kernels,
-        bench_multipod,
-        bench_serve,
-        bench_staleness,
-    )
-
-    modules = {
-        "async_vs_sync": bench_async_vs_sync,
-        "staleness": bench_staleness,
-        "admm": bench_admm,
-        "compression": bench_compression,
-        "fit_executors": bench_fit_executors,
-        "multipod": bench_multipod,
-        "serve": bench_serve,
-        "cascade_svm": bench_cascade_svm,
-        "gp_experts": bench_gp_experts,
-        "clustering": bench_clustering,
-        "kernels": bench_kernels,
-    }
-
     rows: list = []
     print("name,us_per_call,derived")
-    for name, mod in modules.items():
+    for name, modpath in MODULES.items():
         if args.only and args.only not in name:
+            continue
+        try:
+            mod = importlib.import_module(modpath)
+        except Exception:  # noqa: BLE001 — report the skip, keep going
+            err = traceback.format_exc().splitlines()[-1]
+            print(f"{name},SKIP(import),{err}")
+            sys.stdout.flush()
             continue
         try:
             start = len(rows)

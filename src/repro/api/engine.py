@@ -168,6 +168,12 @@ def fit(
     metrics["wire"] = w.name
     metrics["executor"] = ex.name
     metrics["carry"] = raw.carry
+    if hasattr(w, "kernel_report"):
+        # which leaves the wire's Pallas kernels actually covered vs the
+        # <256/non-f32 fallback — no more silent fallbacks
+        metrics["wire_kernel_hits"] = w.kernel_report(
+            ex.scenario_template(raw.theta)
+        )
     metrics.update(ex.extra_metrics())  # e.g. ServingExecutor's live engine
     return FitResult(
         theta=raw.theta, trajectory=raw.trajectory, ledger=ledger, metrics=metrics

@@ -52,7 +52,9 @@ compatibility matrix.
 
 from __future__ import annotations
 
+import os
 import threading
+from collections import OrderedDict
 from contextlib import contextmanager
 from typing import Any, NamedTuple
 
@@ -62,8 +64,10 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.core.allreduce import (
+    complete_allreduce,
     hierarchical_allreduce,
     mesh_allreduce,
+    partial_allreduce,
     server_allreduce,
 )
 from repro.core.topology import Topology
@@ -91,6 +95,10 @@ class ExecContext(NamedTuple):
     axis_sizes: Any = None
     #: logical nodes hosted per shard (K / num_shards); None locally
     nodes_per_shard: int | None = None
+    #: stage the innermost hop as reduce-scatter → reduce → all-gather so
+    #: each device reduces 1/K of the tree (set by the mesh executors'
+    #: ``reduce_scatter`` knob; bit-exact with the staged psum path)
+    reduce_scatter: bool = False
 
 
 def current_exec_context() -> ExecContext | None:
@@ -230,10 +238,85 @@ def aggregate(stacked: PyTree, op: str = "sum") -> PyTree:
     ctx = current_exec_context()
     if ctx is not None and ctx.node_axis is not None:
         if ctx.topology is not None:
-            reduced = hierarchical_allreduce(reduced, ctx.topology.hops, op=op)
+            reduced = hierarchical_allreduce(
+                reduced, ctx.topology.hops, op=op,
+                reduce_scatter=ctx.reduce_scatter,
+                axis_sizes=_ctx_size_map(ctx),
+            )
         else:
             reduced = mesh_allreduce(reduced, ctx.node_axis, op=op)
     return reduced
+
+
+def _ctx_size_map(ctx: ExecContext):
+    """axis → shard count mapping for the ambient placement (None when the
+    executor did not record sizes)."""
+    if ctx.axis_sizes is None:
+        return None
+    axes = (
+        (ctx.node_axis,) if isinstance(ctx.node_axis, str) else ctx.node_axis
+    )
+    return dict(zip(axes, ctx.axis_sizes))
+
+
+def _overlap_hops(ctx: ExecContext):
+    """The hop list the overlap split is defined over: the topology's
+    hops, or the whole node axis as one hop (flat meshes)."""
+    if ctx.topology is not None:
+        return ctx.topology.hops
+    return (ctx.node_axis,)
+
+
+def aggregate_partial(stacked: PyTree, op: str = "sum") -> PyTree:
+    """First half of the comm/compute-overlap split of ``aggregate``:
+    the shard-local stack sum plus every hop EXCEPT the outermost
+    (intra-pod under multipod; nothing extra on a flat mesh).  The
+    outermost (expensive, inter-pod) hop is deferred — apply
+    ``aggregate_complete`` one round later, so XLA can overlap the slow
+    collective with the next round's local compute.  Sum-only: splitting
+    a mean's final divide across rounds would break bit-exactness."""
+    if op != "sum":
+        raise ValueError(
+            f"aggregate_partial only supports op='sum' (got {op!r}) — the "
+            "overlap split defers the outermost hop, and a mean's final "
+            "divide cannot move across rounds bit-exactly"
+        )
+    reduced = server_allreduce(stacked, op="sum")
+    ctx = current_exec_context()
+    if ctx is not None and ctx.node_axis is not None:
+        reduced = partial_allreduce(reduced, _overlap_hops(ctx))
+    return reduced
+
+
+def aggregate_complete(pending: PyTree) -> PyTree:
+    """Second half of the overlap split: the outermost hop's psum over a
+    round-old ``aggregate_partial`` result.  Identity locally."""
+    ctx = current_exec_context()
+    if ctx is not None and ctx.node_axis is not None:
+        return complete_allreduce(pending, _overlap_hops(ctx))
+    return pending
+
+
+def mask_to_root(tree: PyTree) -> PyTree:
+    """Zero ``tree`` everywhere except the shards at index 0 of the
+    OUTERMOST hop's axes.  Converts an already-complete (replicated)
+    value into valid ``aggregate_complete`` input: the completing psum
+    re-adds one real copy plus zeros — exact in fp — so a standard delay
+    buffer slot can enter the overlapped schedule bit-exactly.  Identity
+    locally."""
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return tree
+    outer = _overlap_hops(ctx)[-1]
+    axes = getattr(outer, "axes", outer)
+    axes = (axes,) if isinstance(axes, str) else tuple(axes)
+    keep = None
+    for a in axes:
+        at_root = jax.lax.axis_index(a) == 0
+        keep = at_root if keep is None else jnp.logical_and(keep, at_root)
+    return jax.tree.map(
+        lambda x: jnp.where(keep, x, jnp.zeros_like(x)), tree
+    )
 
 
 def broadcast(tree: PyTree) -> PyTree:
@@ -245,6 +328,44 @@ def broadcast(tree: PyTree) -> PyTree:
     return tree
 
 
+class StatsDeferral:
+    """Trace-time flags for deferred statistics collectives.
+
+    Per-step scalar stats (``metric_mean``'s pmean, ``sum_bytes``'s psum)
+    each launch a tiny collective INSIDE the scan — pure per-round
+    latency.  Both are elementwise across steps, so reducing the stacked
+    ``(T,)`` outputs once after the loop is bitwise identical.  The
+    transport allocates one of these, installs it with ``deferring``
+    while tracing the step, and completes whatever got deferred in its
+    ``exit_loop`` hook.  Valid only when the stat call is the OUTERMOST
+    op of its expression (true for every in-repo ``round_metric``) —
+    strategies that post-process the completed mean opt out via
+    ``Strategy.defer_stats = False``.
+    """
+
+    __slots__ = ("metric", "bytes")
+
+    def __init__(self):
+        self.metric = False
+        self.bytes = False
+
+
+_defer = threading.local()
+
+
+@contextmanager
+def deferring(stats: StatsDeferral | None):
+    """Route ``metric_mean``/``sum_bytes`` calls into deferred mode for
+    the enclosed trace: they record the need on ``stats`` and return
+    their input unchanged; the caller completes them post-loop."""
+    prev = getattr(_defer, "value", None)
+    _defer.value = stats
+    try:
+        yield
+    finally:
+        _defer.value = prev
+
+
 def metric_mean(x: PyTree) -> PyTree:
     """Complete a node-mean statistic across shards (``pmean``); identity
     locally.  Strategies whose ``round_metric`` is a mean over the (local)
@@ -252,6 +373,10 @@ def metric_mean(x: PyTree) -> PyTree:
     executor."""
     ctx = current_exec_context()
     if ctx is not None and ctx.node_axis is not None:
+        stats = getattr(_defer, "value", None)
+        if stats is not None:
+            stats.metric = True
+            return x
         return jax.tree.map(lambda v: jax.lax.pmean(v, ctx.node_axis), x)
     return x
 
@@ -261,8 +386,66 @@ def sum_bytes(x):
     locally."""
     ctx = current_exec_context()
     if ctx is not None and ctx.node_axis is not None:
+        stats = getattr(_defer, "value", None)
+        if stats is not None:
+            stats.bytes = True
+            return x
         return jax.lax.psum(x, ctx.node_axis)
     return x
+
+
+# ----------------------------------------------------------------------------
+# Program cache
+# ----------------------------------------------------------------------------
+#
+# Profiling (ROADMAP "Make mesh actually fast") showed the mesh gap was
+# never the collectives: an EAGER shard_map re-traces and re-lowers the
+# whole scan on every fit call (~0.2s for the benchmark program, ~8 pjit
+# compiles), while local fits ride jit's C++ dispatch cache.  The fix is
+# the same cache, held explicitly: executors jit their placed program and
+# memoize it by a config fingerprint, so repeated fits with the same
+# strategy/transport/wire configuration skip straight to execution.
+# Opt-in: a program is cached only when the transport hands the executor a
+# ``cache_key`` (built from ``Strategy.cache_token()`` — strategies with
+# unfingerprintable config return None and run uncached, exactly as
+# before).  Data, carries and sweep values are jit ARGUMENTS, never baked.
+
+_PROGRAM_CACHE: OrderedDict = OrderedDict()
+_PROGRAM_CACHE_CAP = 128
+_PROGRAM_CACHE_STATS = {"hits": 0, "misses": 0}
+
+
+def _cache_enabled() -> bool:
+    return os.environ.get("REPRO_PROGRAM_CACHE", "1") != "0"
+
+
+def cached_program(key, build):
+    """``build()`` → a jitted program, memoized under ``key`` (LRU).
+    ``key=None`` (or ``REPRO_PROGRAM_CACHE=0``) bypasses the cache."""
+    if key is None or not _cache_enabled():
+        return build()
+    try:
+        fn = _PROGRAM_CACHE[key]
+        _PROGRAM_CACHE.move_to_end(key)
+        _PROGRAM_CACHE_STATS["hits"] += 1
+        return fn
+    except KeyError:
+        pass
+    _PROGRAM_CACHE_STATS["misses"] += 1
+    fn = build()
+    _PROGRAM_CACHE[key] = fn
+    while len(_PROGRAM_CACHE) > _PROGRAM_CACHE_CAP:
+        _PROGRAM_CACHE.popitem(last=False)
+    return fn
+
+
+def program_cache_stats() -> dict:
+    return {"size": len(_PROGRAM_CACHE), **_PROGRAM_CACHE_STATS}
+
+
+def clear_program_cache() -> None:
+    _PROGRAM_CACHE.clear()
+    _PROGRAM_CACHE_STATS["hits"] = _PROGRAM_CACHE_STATS["misses"] = 0
 
 
 # ----------------------------------------------------------------------------
@@ -294,6 +477,11 @@ class Executor:
     name = "executor"
     #: number of scenarios for batched executors; None = unbatched
     num_scenarios: int | None = None
+    #: capability flag: True when this executor wants the transport to
+    #: dispatch the outermost (inter-pod) hop asynchronously against the
+    #: next round's local compute (delay-tolerant transports only; the
+    #: mesh executors' ``overlap=`` knob)
+    overlap: bool = False
 
     def swept(self, key: str):
         """The per-scenario values swept for ``key`` (None when not swept)."""
@@ -324,12 +512,18 @@ class Executor:
 
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
+        wire=None, cache_key=None, enter_loop=None, exit_loop=None,
     ):
+        """Place and run the update loop.  ``cache_key`` (optional) keys
+        the jitted program cache; ``enter_loop(carry)`` /
+        ``exit_loop(carry, ys)`` are transport hooks running INSIDE the
+        placed program (ambient context installed) immediately before /
+        after the scan — the overlap schedule's carry conversions and the
+        deferred-stats completion live there."""
         raise NotImplementedError
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
-                   wire=None):
+                   wire=None, cache_key=None):
         raise ValueError(
             "server transports walk one contact schedule sequentially — "
             f"executor {self.name!r} cannot place them; use "
@@ -354,16 +548,37 @@ class LocalExecutor(Executor):
 
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
+        wire=None, cache_key=None, enter_loop=None, exit_loop=None,
     ):
         if carry is None:
             carry = make_carry()
-        step = make_step(data, None)
-        return jax.lax.scan(step, carry, xs, length=length)
+
+        def build():
+            def prog(c, d, x):
+                if enter_loop is not None:
+                    c = enter_loop(c)
+                c, ys = jax.lax.scan(make_step(d, None), c, x, length=length)
+                if exit_loop is not None:
+                    c, ys = exit_loop(c, ys)
+                return c, ys
+
+            return jax.jit(prog)
+
+        key = (
+            None if cache_key is None
+            else ("local-update", cache_key, xs is None, length)
+        )
+        return cached_program(key, build)(carry, data, xs)
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
-                   wire=None):
-        return jax.lax.scan(make_step(data), carry, schedule)
+                   wire=None, cache_key=None):
+        def build():
+            return jax.jit(
+                lambda c, d, s: jax.lax.scan(make_step(d), c, s)
+            )
+
+        key = None if cache_key is None else ("local-server", cache_key)
+        return cached_program(key, build)(carry, data, schedule)
 
 
 class ServingExecutor(LocalExecutor):
@@ -458,13 +673,31 @@ class MeshExecutor(Executor):
 
     name = "mesh"
 
-    def __init__(self, mesh: Mesh | None = None):
+    def __init__(
+        self,
+        mesh: Mesh | None = None,
+        *,
+        reduce_scatter: bool | str = "auto",
+        overlap: bool = True,
+    ):
         self._mesh = mesh
+        #: "auto" stages the innermost hop as reduce-scatter → all-gather
+        #: only on TPU (on CPU the ring passes cost more than they save);
+        #: True/False force it.  Either way bit-exact with staged psum.
+        self.reduce_scatter = reduce_scatter
+        #: let delay-tolerant transports overlap the outermost hop with
+        #: the next round's compute (opt-out knob; bit-exact either way)
+        self.overlap = bool(overlap)
+
+    def _rs_active(self) -> bool:
+        if self.reduce_scatter == "auto":
+            return jax.default_backend() == "tpu"
+        return bool(self.reduce_scatter)
 
     def _default_mesh(self) -> Mesh:
         return make_node_mesh()
 
-    def _topology(self, axes) -> Topology:
+    def _topology(self, axes, mesh) -> Topology:
         return Topology.from_mesh(axes)
 
     def _validate_mesh(self, mesh: Mesh) -> None:
@@ -489,7 +722,7 @@ class MeshExecutor(Executor):
         # placement keeps the mesh's axis order (pods hold contiguous node
         # ranges); the topology orders the REDUCTION hops independently
         # (intra-pod first, inter-pod last)
-        topology = self._topology(axes)
+        topology = self._topology(axes, mesh)
         axes = tuple(axes)
         axis = axes if len(axes) > 1 else axes[0]
         ndev = 1
@@ -504,6 +737,15 @@ class MeshExecutor(Executor):
             node_axis=r.axis, num_shards=r.num_shards, topology=r.topology,
             axis_sizes=tuple(r.mesh.shape[a] for a in r.axes),
             nodes_per_shard=K // r.num_shards,
+            reduce_scatter=self._rs_active(),
+        )
+
+    @staticmethod
+    def _mesh_fingerprint(mesh: Mesh):
+        return (
+            tuple(mesh.axis_names),
+            tuple(int(mesh.shape[a]) for a in mesh.axis_names),
+            tuple(str(d) for d in mesh.devices.flat),
         )
 
     def _check_divisible(self, K: int, ndev: int) -> None:
@@ -513,7 +755,7 @@ class MeshExecutor(Executor):
             )
 
     def place_update(self, *, strategy, data, carry, body, xs,
-                     scenario_axis: bool = False):
+                     scenario_axis: bool = False, cache_key=None):
         """Shard-map an update-family loop body onto the resolved mesh.
 
         ``body(carry, shard_data, xs)`` runs per shard with the ambient
@@ -558,35 +800,49 @@ class MeshExecutor(Executor):
             with executing(ctx):
                 return body(c, d, x)
 
-        if xs is None:
-            fn = shard_map(
-                lambda c, d: shard_body(c, d, None), mesh=mesh,
-                in_specs=(cspec, dspec), out_specs=(cspec, P()),
-                check_rep=False,
-            )
-            return fn(carry, data)
-        fn = shard_map(
-            shard_body, mesh=mesh, in_specs=(cspec, dspec, P()),
-            out_specs=(cspec, P()), check_rep=False,
+        def build():
+            if xs is None:
+                inner = shard_map(
+                    lambda c, d: shard_body(c, d, None), mesh=mesh,
+                    in_specs=(cspec, dspec), out_specs=(cspec, P()),
+                    check_rep=False,
+                )
+                return jax.jit(lambda c, d, x: inner(c, d))
+            return jax.jit(shard_map(
+                shard_body, mesh=mesh, in_specs=(cspec, dspec, P()),
+                out_specs=(cspec, P()), check_rep=False,
+            ))
+
+        key = None if cache_key is None else (
+            "mesh-update", type(self).__name__, cache_key, scenario_axis,
+            xs is None, self._rs_active(), bool(strategy.replicate_data),
+            self._mesh_fingerprint(mesh),
         )
-        return fn(carry, data, xs)
+        return cached_program(key, build)(carry, data, xs)
 
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
+        wire=None, cache_key=None, enter_loop=None, exit_loop=None,
     ):
         if carry is None:
             carry = make_carry()
 
         def body(c, d, x):
-            return jax.lax.scan(make_step(d, None), c, x, length=length)
+            if enter_loop is not None:
+                c = enter_loop(c)
+            c, ys = jax.lax.scan(make_step(d, None), c, x, length=length)
+            if exit_loop is not None:
+                c, ys = exit_loop(c, ys)
+            return c, ys
 
+        key = None if cache_key is None else (cache_key, length)
         return self.place_update(
-            strategy=strategy, data=data, carry=carry, body=body, xs=xs
+            strategy=strategy, data=data, carry=carry, body=body, xs=xs,
+            cache_key=key,
         )
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
-                   wire=None):
+                   wire=None, cache_key=None):
         """Place the §5 sequential schedule on the mesh: data shards over
         the node axis, every contact's ``local_step`` runs masked on each
         shard (``local_node`` resolves the contacted node against the
@@ -626,11 +882,17 @@ class MeshExecutor(Executor):
             with executing(ctx):
                 return jax.lax.scan(make_step(d), c, sched)
 
-        fn = shard_map(
-            body, mesh=mesh, in_specs=(cspec, P(axis), P()),
-            out_specs=(cspec, P()), check_rep=False,
+        def build():
+            return jax.jit(shard_map(
+                body, mesh=mesh, in_specs=(cspec, P(axis), P()),
+                out_specs=(cspec, P()), check_rep=False,
+            ))
+
+        key = None if cache_key is None else (
+            "mesh-server", type(self).__name__, cache_key,
+            self._rs_active(), self._mesh_fingerprint(mesh),
         )
-        return fn(carry, data, schedule)
+        return cached_program(key, build)(carry, data, schedule)
 
 
 class MultiPodExecutor(MeshExecutor):
@@ -662,17 +924,33 @@ class MultiPodExecutor(MeshExecutor):
         *,
         intra_price: float | None = None,
         inter_price: float | None = None,
+        calibrate: bool = False,
+        reduce_scatter: bool | str = "auto",
+        overlap: bool = True,
     ):
-        super().__init__(mesh)
+        super().__init__(mesh, reduce_scatter=reduce_scatter, overlap=overlap)
         self._intra_price = intra_price
         self._inter_price = inter_price
+        #: measure per-hop prices on the actual mesh instead of the ×1/×10
+        #: defaults (``core.topology.calibrate_prices`` — one-shot,
+        #: memoized per device set); explicit ``*_price=`` overrides win
+        self._calibrate = calibrate
 
     def _default_mesh(self) -> Mesh:
         return make_multipod_mesh()
 
-    def _topology(self, axes) -> Topology:
+    def _topology(self, axes, mesh) -> Topology:
+        intra_p, inter_p = self._intra_price, self._inter_price
+        if self._calibrate:
+            from repro.core.topology import calibrate_prices
+
+            prices = calibrate_prices(mesh)
+            if intra_p is None:
+                intra_p = prices["intra_pod"]
+            if inter_p is None:
+                inter_p = prices["inter_pod"]
         return Topology.from_mesh(
-            axes, intra_price=self._intra_price, inter_price=self._inter_price
+            axes, intra_price=intra_p, inter_price=inter_p
         )
 
     def _validate_mesh(self, mesh: Mesh) -> None:
@@ -837,45 +1115,34 @@ class SweepExecutor(Executor):
             for k, v in saved.items():
                 setattr(targets[k], k, v)
 
+    def _params_fingerprint(self):
+        """Byte-level fingerprint of the swept values — the composed path
+        closes over them (they become compiled constants), so they must
+        key the program cache."""
+        import numpy as np
+
+        out = []
+        for k in sorted(self.params):
+            for leaf in jax.tree.leaves(self.params[k]):
+                a = np.asarray(leaf)
+                out.append((k, str(a.dtype), a.shape, a.tobytes()))
+        return tuple(out)
+
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
-        wire=None,
+        wire=None, cache_key=None, enter_loop=None, exit_loop=None,
     ):
         attrs, targets = self._resolve_targets(strategy, wire)
         stal = self.params.get("staleness")
         theta0s = self.params.get("theta0")
 
-        if self.inner is None:
-
-            def one(vals, d, th0, c):
-                with self._rebound(targets, vals):
-                    if c is not None:
-                        c0 = c
-                    elif th0 is None:
-                        c0 = make_carry()
-                    else:
-                        c0 = make_carry(theta0=th0)
-                    return jax.lax.scan(
-                        make_step(data, d), c0, xs, length=length
-                    )
-
-            axes = (
-                {k: 0 for k in attrs},
-                None if stal is None else 0,
-                None if theta0s is None else 0,
-                None if carry is None else 0,
-            )
-            return jax.vmap(one, in_axes=axes)(attrs, stal, theta0s, carry)
-
-        # --- mesh-composed: scenario vmap INSIDE the shard_map body ---
-        # The scenario-batched carry is built OUTSIDE the mesh (global
-        # node layout, same trace the local sweep would run), sharded on
-        # entry; each shard then vmaps the scan over scenarios, so the
-        # executable is shard_map(vmap(scan)) — S scenarios per device.
+        # The scenario-batched carry is built OUTSIDE any cached program:
+        # theta0 resolution can read data values, so baking it into a
+        # memoized executable would pin the first fit's start point.
         if carry is None:
             if attrs or theta0s is not None:
 
-                def build(vals, th0):
+                def build_carry(vals, th0):
                     with self._rebound(targets, vals):
                         return (
                             make_carry() if th0 is None
@@ -883,7 +1150,7 @@ class SweepExecutor(Executor):
                         )
 
                 carry = jax.vmap(
-                    build,
+                    build_carry,
                     in_axes=(
                         {k: 0 for k in attrs},
                         None if theta0s is None else 0,
@@ -898,6 +1165,45 @@ class SweepExecutor(Executor):
                     lambda x: jnp.broadcast_to(x, (S,) + x.shape), c0
                 )
 
+        # enter_loop is the overlap hook; sweeps never activate overlap
+        # (Executor.overlap stays False here), so only the stats-completion
+        # exit hook is threaded through — applied to the full (S, T, …)
+        # stack, where the deferred collectives stay elementwise.
+        if self.inner is None:
+
+            def build():
+                def prog(attrs_, stal_, c_, d_, x_):
+                    def one(vals, st, c1):
+                        with self._rebound(targets, vals):
+                            return jax.lax.scan(
+                                make_step(d_, st), c1, x_, length=length
+                            )
+
+                    c2, ys = jax.vmap(
+                        one,
+                        in_axes=(
+                            {k: 0 for k in attrs},
+                            None if stal is None else 0,
+                            0,
+                        ),
+                    )(attrs_, stal_, c_)
+                    if exit_loop is not None:
+                        c2, ys = exit_loop(c2, ys)
+                    return c2, ys
+
+                return jax.jit(prog)
+
+            key = None if cache_key is None else (
+                "sweep-local", cache_key, tuple(sorted(attrs)),
+                stal is None, xs is None, length, self.num_scenarios,
+            )
+            return cached_program(key, build)(attrs, stal, carry, data, xs)
+
+        # --- mesh-composed: scenario vmap INSIDE the shard_map body ---
+        # Each shard vmaps the scan over scenarios, so the executable is
+        # shard_map(vmap(scan)) — S scenarios per device.  The swept
+        # values are compiled constants here, hence the fingerprint in
+        # the cache key.
         def body(c, d, x):
             def one(vals, st, c1):
                 with self._rebound(targets, vals):
@@ -905,18 +1211,26 @@ class SweepExecutor(Executor):
                         make_step(d, st), c1, x, length=length
                     )
 
-            return jax.vmap(
+            c2, ys = jax.vmap(
                 one,
                 in_axes=({k: 0 for k in attrs}, None if stal is None else 0, 0),
             )(attrs, stal, c)
+            if exit_loop is not None:
+                c2, ys = exit_loop(c2, ys)
+            return c2, ys
 
+        key = None if cache_key is None else (
+            "sweep-composed", cache_key, tuple(sorted(attrs)),
+            stal is None, length, self.num_scenarios,
+            self._params_fingerprint(),
+        )
         return self.inner.place_update(
             strategy=strategy, data=data, carry=carry, body=body, xs=xs,
-            scenario_axis=True,
+            scenario_axis=True, cache_key=key,
         )
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
-                   wire=None):
+                   wire=None, cache_key=None):
         raise ValueError(
             "server transports walk one contact schedule sequentially — "
             "the sweep executor cannot batch them; use executor='local' "

@@ -148,6 +148,22 @@ class Strategy:
         """Override the broadcast cost; None → K dense copies of θ."""
         return None
 
+    # -- executor performance hooks ------------------------------------------
+    #: every ``_exec.metric_mean``/``_exec.sum_bytes`` call in this
+    #: strategy's ``round_metric`` is the OUTERMOST op of its expression,
+    #: so the transport may defer the tiny per-step collective and
+    #: complete it once on the stacked trajectory (bitwise identical).
+    #: Set False if a metric post-processes the completed mean.
+    defer_stats: bool = True
+
+    def cache_token(self):
+        """Hashable fingerprint of every configuration value that shapes
+        this strategy's traced step, or None to opt out of the executor
+        program cache (the safe default: strategies with closures or
+        derived state the base class cannot see run uncached, exactly as
+        before)."""
+        return None
+
 
 # ----------------------------------------------------------------------------
 # Generic strategies
@@ -243,6 +259,12 @@ class GradientDescent(Strategy):
     def apply_update(self, theta, agg, state, data):
         g = agg + self.l2 * theta
         return theta - self.lr * g, state
+
+    def cache_token(self):
+        # id(loss) pins the traced computation; the cached program keeps
+        # the strategy (and so the loss) alive, so ids are not recycled
+        # while the cache entry lives
+        return ("gd", id(self.loss), float(self.lr), float(self.l2))
 
     def round_metric(self, theta, state, data):
         Xs, ys = data
@@ -381,6 +403,12 @@ class LBFGS(Strategy):
             it=state.it + 1, theta_prop=state.theta_prop,
         )
         return theta_new, new_state
+
+    def cache_token(self):
+        return (
+            "lbfgs", id(self.loss),
+            int(self.history), float(self.lr), float(self.l2),
+        )
 
     def round_metric(self, theta, state, data):
         Xs, ys = data

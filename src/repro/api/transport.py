@@ -40,7 +40,12 @@ from repro.api import executor as _exec
 from repro.api.strategy import Strategy
 from repro.core.admm import consensus_admm
 from repro.core.server import contact, init_server
-from repro.core.staleness import delay_init, delay_push_pop, delay_push_read
+from repro.core.staleness import (
+    DelayLine,
+    delay_init,
+    delay_push_pop,
+    delay_push_read,
+)
 
 PyTree = Any
 
@@ -117,6 +122,10 @@ class ServerTransport(Transport):
         handoff = self.handoff
         down_const = wire.measure(theta_template)  # dense θ handed back
         static_up = wire.push_bytes(theta_template)
+        # shape-static push cost → the per-contact owner-select psum on the
+        # byte scalar is pure overhead; emit a placeholder instead (replaced
+        # by exact integer accounting below)
+        skip_up = static_up is not None
 
         def make_step(shard_data):
             """Per-contact step over whatever node slice the executor
@@ -140,16 +149,23 @@ class ServerTransport(Transport):
                     wstate, k_loc, theta_start, theta_new
                 )
                 theta_push = _exec.from_owner(theta_push, mine)
-                up = _exec.from_owner(up, mine)
+                up = jnp.zeros(()) if skip_up else _exec.from_owner(up, mine)
                 wstate = _exec.commit_owner(wstate_new, wstate, mine)
                 server, received = contact(server, theta_push, handoff=handoff)
                 return (server, sstate, wstate), (received, up)
 
             return step
 
+        st_tok = strategy.cache_token()
+        cache_key = None
+        if st_tok is not None:
+            cache_key = (
+                "server", handoff, st_tok, wire.cache_token(), skip_up,
+                strategy.num_nodes(data),
+            )
         (server, sstate, wstate), (traj, ups) = executor.run_server(
             strategy=strategy, data=data, carry=carry, make_step=make_step,
-            schedule=schedule, wire=wire,
+            schedule=schedule, wire=wire, cache_key=cache_key,
         )
         theta = executor.finalize(strategy, server.theta, sstate, data)
         T = len(schedule)
@@ -246,6 +262,30 @@ class UpdateTransport(Transport):
         )
         down_is_static = type(strategy).downlink_bytes is Strategy.downlink_bytes
 
+        # per-step scalar stats (metric pmean, byte psum) defer to one
+        # post-loop reduction on the stacked (T,) outputs — bitwise
+        # identical, and it removes two tiny collectives from every round
+        defer_ok = bool(getattr(strategy, "defer_stats", True))
+        stats = _exec.StatsDeferral()
+        # comm/compute overlap: a delay-tolerant transport (D >= 1) may
+        # split each round's aggregate — every hop but the outermost runs
+        # in-round, the outermost (inter-pod, expensive) completes at the
+        # START of the next round so XLA overlaps it with that round's
+        # local compute.  Bit-exact: the completed value is the same psum,
+        # applied at the same (delayed) step it would have been anyway.
+        # Sum-reductions only, and only the default aggregate/uplink paths
+        # (overrides may inspect the aggregate mid-round).
+        overlap_active = (
+            bool(getattr(executor, "overlap", False))
+            and D_buf >= 1
+            and stal_sweep is None
+            and executor.num_scenarios is None
+            and strategy.stacked_msgs
+            and strategy.aggregate_op == "sum"
+            and type(strategy).aggregate is Strategy.aggregate
+            and type(strategy).uplink_bytes is Strategy.uplink_bytes
+        )
+
         def make_step(shard_data, sweep_delay):
             """Per-round step against the executor's primitive set.
 
@@ -256,6 +296,11 @@ class UpdateTransport(Transport):
 
             def step(c, xt):
                 theta, sstate, wstate, delay = c
+                if overlap_active:
+                    buf2, pending, step0 = delay
+                    # complete LAST round's outermost hop first, so the
+                    # collective overlaps the local compute traced below
+                    agg_done = _exec.aggregate_complete(pending)
                 msgs, sstate = strategy.local_updates(
                     theta, sstate, shard_data, xt
                 )
@@ -265,29 +310,106 @@ class UpdateTransport(Transport):
                 up_override = strategy.uplink_bytes(msgs_hat, shard_data)
                 if up_override is not None:
                     up = up_override
+                elif up_is_static:
+                    # replaced by exact integer accounting after the run
+                    up = jnp.zeros(())
                 else:
-                    up = _exec.sum_bytes(up)  # shard-local wire cost → global
-                agg = _exec.broadcast(strategy.aggregate(msgs_hat))
-                if sweep_delay is not None:
-                    delay, agg = delay_push_read(delay, agg, sweep_delay)
-                elif D_buf > 0:
-                    delay, agg = delay_push_pop(delay, agg)
+                    with _exec.deferring(stats if defer_ok else None):
+                        up = _exec.sum_bytes(up)  # shard-local cost → global
+                if overlap_active:
+                    pending_new = _exec.aggregate_partial(msgs_hat)
+                    if D_buf > 1:
+                        buf2, agg = delay_push_pop(buf2, agg_done)
+                    else:
+                        agg = agg_done
+                    delay = (buf2, pending_new, step0)
+                else:
+                    agg = _exec.broadcast(strategy.aggregate(msgs_hat))
+                    if sweep_delay is not None:
+                        delay, agg = delay_push_read(delay, agg, sweep_delay)
+                    elif D_buf > 0:
+                        delay, agg = delay_push_pop(delay, agg)
                 theta_new, sstate = strategy.apply_update(
                     theta, agg, sstate, shard_data
                 )
-                down = strategy.downlink_bytes(theta_new, shard_data)
-                if down is None:
-                    down = jnp.asarray(float(K * wire.measure(theta_new)))
-                m = strategy.round_metric(theta_new, sstate, shard_data)
+                if down_is_static:
+                    down = jnp.zeros(())  # replaced after the run
+                else:
+                    down = strategy.downlink_bytes(theta_new, shard_data)
+                    if down is None:
+                        down = jnp.asarray(float(K * wire.measure(theta_new)))
+                with _exec.deferring(stats if defer_ok else None):
+                    m = strategy.round_metric(theta_new, sstate, shard_data)
                 return (theta_new, sstate, wstate, delay), (m, up, down)
 
             return step
+
+        def enter_loop(c):
+            # standard carry → overlapped carry: the delay line's NEWEST
+            # slot becomes the in-flight partial (masked to the outer
+            # hop's root shards, so the completing psum reproduces the
+            # replicated value exactly); older slots stay a depth-(D-1)
+            # line.  This keeps resume carries interchangeable between
+            # overlap on/off.
+            theta, sstate, wstate, delay = c
+            newest = jax.tree.map(lambda b: b[D_buf - 1], delay.buffer)
+            pending = _exec.mask_to_root(newest)
+            if D_buf > 1:
+                buf2 = DelayLine(
+                    buffer=jax.tree.map(
+                        lambda b: b[: D_buf - 1], delay.buffer
+                    ),
+                    step=delay.step,
+                )
+            else:
+                buf2 = ()
+            return (theta, sstate, wstate, (buf2, pending, delay.step))
+
+        def exit_loop(c, ys):
+            m, up, down = ys
+            if overlap_active:
+                # overlapped carry → standard carry: complete the last
+                # round's pending hop and re-append it as the newest slot
+                theta, sstate, wstate, (buf2, pending, step0) = c
+                done = _exec.aggregate_complete(pending)
+                if D_buf > 1:
+                    delay = DelayLine(
+                        buffer=jax.tree.map(
+                            lambda b, d: jnp.concatenate(
+                                [b, d[None]], axis=0
+                            ),
+                            buf2.buffer, done,
+                        ),
+                        step=buf2.step,
+                    )
+                else:
+                    delay = DelayLine(
+                        buffer=jax.tree.map(lambda d: d[None], done),
+                        step=step0 + jnp.asarray(T, jnp.int32),
+                    )
+                c = (theta, sstate, wstate, delay)
+            if stats.metric:
+                m = _exec.metric_mean(m)
+            if stats.bytes:
+                up = _exec.sum_bytes(up)
+            return c, (m, up, down)
+
+        st_tok = strategy.cache_token()
+        cache_key = None
+        if st_tok is not None:
+            cache_key = (
+                "update", st_tok, wire.cache_token(), D_buf,
+                stal_sweep is None, overlap_active, defer_ok,
+                up_is_static, down_is_static, strategy.stacked_msgs, K,
+            )
 
         xs = stream if stream is not None else None
         carry, (traj, ups, downs) = executor.run_update(
             strategy=strategy, data=data, carry=carry,
             make_carry=make_carry, make_step=make_step, xs=xs, length=T,
-            wire=wire,
+            wire=wire, cache_key=cache_key,
+            enter_loop=enter_loop if overlap_active else None,
+            exit_loop=exit_loop if (overlap_active or defer_ok) else None,
         )
         theta, sstate = carry[0], carry[1]
         theta = executor.finalize(strategy, theta, sstate, data)

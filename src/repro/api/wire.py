@@ -34,7 +34,10 @@ import jax.numpy as jnp
 
 from repro.core.compression import (
     Compressed,
+    _kernel_eligible,
+    _leaf_topk_mask,
     int8_compress,
+    kernel_plan,
     threshold_compress,
     topk_compress,
 )
@@ -87,6 +90,13 @@ class Wire:
         (wstate, msgs_hat, up_bytes) where ``up_bytes`` sums all nodes."""
         return wstate, msgs, jnp.asarray(float(tree_bytes(msgs)))
 
+    def cache_token(self):
+        """Hashable fingerprint of everything that shapes this wire's
+        traced encode, for the executor program cache.  Subclasses whose
+        trace depends on more than the name (thresholds, kernel gating)
+        must extend it."""
+        return (type(self).__name__, self.name)
+
 
 class DenseWire(Wire):
     pass
@@ -116,6 +126,7 @@ class CompressedWire(Wire):
         self.compressor = compressor
         self.error_feedback = error_feedback
         self.name = name
+        self._pb_cache: dict = {}
 
     def init_state(self, theta: PyTree, num_nodes: int, *, stacked: bool = True):
         if not self.error_feedback:
@@ -129,9 +140,13 @@ class CompressedWire(Wire):
     def push_bytes(self, theta: PyTree) -> int | None:
         # Both built-in codecs (top-k fraction, int8) price a push from
         # shapes alone, so one eager evaluation on zeros gives the exact
-        # static cost.
-        zeros = jax.tree.map(jnp.zeros_like, theta)
-        return int(float(self.compressor(zeros).wire_bytes))
+        # static cost — memoized per leaf signature so repeated fits on
+        # the same model don't re-run the codec eagerly every call.
+        key = tuple((str(x.dtype), tuple(x.shape)) for x in jax.tree.leaves(theta))
+        if key not in self._pb_cache:
+            zeros = jax.tree.map(jnp.zeros_like, theta)
+            self._pb_cache[key] = int(float(self.compressor(zeros).wire_bytes))
+        return self._pb_cache[key]
 
     def encode_push(self, wstate, k, theta_start, theta_new):
         delta = tree_sub(theta_new, theta_start)
@@ -198,6 +213,156 @@ class ThresholdWire(CompressedWire):
     def push_bytes(self, theta: PyTree) -> int | None:
         return None  # value-dependent — no static per-push cost
 
+    def cache_token(self):
+        # tau is a plain attribute users may mutate between fits; the
+        # non-swept value is baked into the trace, so it must key the cache
+        return (type(self).__name__, self.name, float(self.tau))
+
+
+class _FusedWire(CompressedWire):
+    """Compressed wire with a fused Pallas encode path.
+
+    ``use_kernel`` is tri-state: ``"auto"`` flips the kernel path on only
+    when the default backend is TPU (interpret-mode Pallas on CPU is
+    correct but slower than jnp); ``True``/``False`` force it — tests
+    force ``True`` to exercise the kernels off-TPU.  The kernel and
+    reference paths are bit-equal by construction (same formulas, and the
+    per-leaf <256/non-f32 fallback IS the reference), so flipping the
+    knob never changes a fit result, only the pass structure.
+    ``kernel_report(theta)`` says which leaves take which path — the
+    engine surfaces it as ``FitResult.metrics["wire_kernel_hits"]`` so a
+    benchmark claiming kernel speed can't silently be on the fallback.
+    """
+
+    def __init__(self, compressor, *, error_feedback, name, use_kernel="auto"):
+        super().__init__(compressor, error_feedback=error_feedback, name=name)
+        self.use_kernel = use_kernel
+
+    def _kernel_active(self) -> bool:
+        if self.use_kernel == "auto":
+            return jax.default_backend() == "tpu"
+        return bool(self.use_kernel)
+
+    def kernel_report(self, theta: PyTree) -> dict:
+        plan = kernel_plan(theta)
+        plan["active"] = self._kernel_active()
+        plan["wire"] = self.name
+        return plan
+
+    def cache_token(self):
+        return (type(self).__name__, self.name, self._kernel_active())
+
+    def _encode_leaf(self, m, r):
+        """One leaf for one node → (encoded, new_residual | None)."""
+        raise NotImplementedError
+
+    def _encode_tree(self, m, r):
+        """One node's whole tree → (msgs_hat, new_residual | None)."""
+        treedef = jax.tree.structure(m)
+        leaves_m = jax.tree.leaves(m)
+        leaves_r = jax.tree.leaves(r) if r is not None else [None] * len(leaves_m)
+        outs = [self._encode_leaf(mm, rr) for mm, rr in zip(leaves_m, leaves_r)]
+        hat = treedef.unflatten([o[0] for o in outs])
+        if r is None:
+            return hat, None
+        return hat, treedef.unflatten([o[1] for o in outs])
+
+    def _per_push_bytes(self, tree: PyTree) -> float:
+        """Static byte cost of one node's push (mirrors the codec)."""
+        raise NotImplementedError
+
+    def encode_updates(self, wstate, msgs, *, stacked: bool = True):
+        if not self._kernel_active():
+            return super().encode_updates(wstate, msgs, stacked=stacked)
+        if not stacked:
+            res = wstate if self.error_feedback else None
+            hat, new_res = self._encode_tree(msgs, res)
+            nb = jnp.asarray(float(self._per_push_bytes(msgs)))
+            return (new_res if self.error_feedback else wstate), hat, nb
+        # Per-node encode via scan (not vmap): each iteration IS the
+        # single-node program, so the Pallas calls run un-batched and the
+        # stacked result matches the vmapped reference row-for-row.
+        K = jax.tree.leaves(msgs)[0].shape[0]
+        per = jnp.asarray(float(self._per_push_bytes(jax.tree.map(lambda x: x[0], msgs))))
+        up = jnp.sum(jnp.full((K,), per))  # same reduce as the vmapped sum
+        if self.error_feedback:
+
+            def body(_, rm):
+                r, m = rm
+                hat, new_r = self._encode_tree(m, r)
+                return (), (new_r, hat)
+
+            _, (new_res, msgs_hat) = jax.lax.scan(body, (), (wstate, msgs))
+            return new_res, msgs_hat, up
+
+        def body(_, m):
+            return (), self._encode_tree(m, None)[0]
+
+        _, msgs_hat = jax.lax.scan(body, (), msgs)
+        return wstate, msgs_hat, up
+
+
+class TopKWire(_FusedWire):
+    """Top-k wire whose encode (threshold select + mask + EF residual +
+    survivor count) runs as ONE fused Pallas pass per eligible leaf."""
+
+    def __init__(self, fraction: float, *, error_feedback: bool = False,
+                 use_kernel="auto"):
+        super().__init__(
+            partial(topk_compress, fraction=fraction),
+            error_feedback=error_feedback,
+            name=f"topk:{fraction}" + ("+ef" if error_feedback else ""),
+            use_kernel=use_kernel,
+        )
+        self.fraction = fraction
+
+    def _encode_leaf(self, m, r):
+        k = max(1, int(round(self.fraction * m.size)))
+        if _kernel_eligible(m):
+            from repro.kernels.topk_compress import ops as tk_ops
+
+            out, res, _count = tk_ops.topk_encode(m, r, k=k)
+            return out, res
+        # reference fallback — identical formulas, so mixed kernel /
+        # fallback leaves stay bit-equal to the all-reference path
+        c = m if r is None else m + r
+        o = c * _leaf_topk_mask(c, k)
+        return o, (None if r is None else c - o)
+
+    def _per_push_bytes(self, tree):
+        return float(sum(
+            max(1, int(round(self.fraction * x.size))) * (4 + x.dtype.itemsize)
+            for x in jax.tree.leaves(tree)
+        ))
+
+
+class Int8Wire(_FusedWire):
+    """Int8 wire: fused absmax + quantize→dequantize kernels per eligible
+    leaf, instead of three fp32 jnp passes."""
+
+    def __init__(self, *, error_feedback: bool = False, use_kernel="auto"):
+        super().__init__(
+            int8_compress,
+            error_feedback=error_feedback,
+            name="int8" + ("+ef" if error_feedback else ""),
+            use_kernel=use_kernel,
+        )
+
+    def _encode_leaf(self, m, r):
+        c = m if r is None else m + r
+        if _kernel_eligible(c):
+            from repro.kernels.int8_quant import ops as q8_ops
+
+            out = q8_ops.int8_roundtrip(c)[0]
+        else:
+            scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / 127.0
+            q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+            out = q.astype(c.dtype) * scale
+        return out, (None if r is None else c - out)
+
+    def _per_push_bytes(self, tree):
+        return float(sum(x.size * 1 + 4 for x in jax.tree.leaves(tree)))
+
 
 def make_wire(spec: str | Wire | None) -> Wire:
     """Resolve a wire spec.
@@ -221,13 +386,10 @@ def make_wire(spec: str | Wire | None) -> Wire:
     if base.startswith("thresh:"):
         return ThresholdWire(float(base.split(":", 1)[1]), error_feedback=ef)
     if base.startswith("topk:"):
-        fraction = float(base.split(":", 1)[1])
-        compressor = partial(topk_compress, fraction=fraction)
-    elif base == "int8":
-        compressor = int8_compress
-    else:
-        raise ValueError(
-            f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]', "
-            "'thresh:<tau>[+ef]' or 'int8[+ef]'"
-        )
-    return CompressedWire(compressor, error_feedback=ef, name=spec)
+        return TopKWire(float(base.split(":", 1)[1]), error_feedback=ef)
+    if base == "int8":
+        return Int8Wire(error_feedback=ef)
+    raise ValueError(
+        f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]', "
+        "'thresh:<tau>[+ef]' or 'int8[+ef]'"
+    )

@@ -70,8 +70,17 @@ def mesh_allreduce(
     raise ValueError(f"unknown op: {op!r}")
 
 
+def _hop_names(axes) -> tuple:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
 def hierarchical_allreduce(
-    tree: PyTree, hops, op: str = "sum"
+    tree: PyTree,
+    hops,
+    op: str = "sum",
+    *,
+    reduce_scatter: bool = False,
+    axis_sizes=None,
 ) -> PyTree:
     """Topology-aware allreduce: one staged collective per reduction hop.
 
@@ -85,21 +94,81 @@ def hierarchical_allreduce(
     ``op="mean"`` stages as psum-per-hop with ONE final division by the
     total fan-in, so the result is independent of how the hops split the
     axes (a staged pmean-of-pmeans would re-weight tiers).
+
+    ``reduce_scatter=True`` restages the innermost hop as
+    reduce-scatter → inter-hop reduce → all-gather
+    (``psum_scatter`` + ``psum`` + ``all_gather``): each device reduces
+    1/K of every leaf through the outer hops instead of the whole tree.
+    Per-element this performs the exact same additions in the exact same
+    order as the staged psum, so the result stays bit-identical (the
+    PR-4 equivalence suite covers it).  Leaves whose leading dimension
+    does not tile across the innermost hop fall back to plain staged
+    psum per leaf; ``axis_sizes`` (mesh axis name → size) is required to
+    decide eligibility statically, so without it the staging is skipped.
     """
     axes_per_hop = [getattr(h, "axes", h) for h in hops]
-    if op == "mean":
+
+    scatter_n = None
+    if reduce_scatter and op in ("sum", "mean") and axis_sizes is not None:
+        n = 1
+        for a in _hop_names(axes_per_hop[0]):
+            n *= int(axis_sizes[a])
+        if n > 1:
+            scatter_n = n
+
+    def _staged_sum_leaf(x):
+        if (
+            scatter_n is not None
+            and x.ndim >= 1
+            and x.shape[0] >= scatter_n
+            and x.shape[0] % scatter_n == 0
+        ):
+            y = jax.lax.psum_scatter(
+                x, axes_per_hop[0], scatter_dimension=0, tiled=True
+            )
+            for axes in axes_per_hop[1:]:
+                y = jax.lax.psum(y, axes)
+            return jax.lax.all_gather(
+                y, axes_per_hop[0], axis=0, tiled=True
+            )
         for axes in axes_per_hop:
-            tree = psum_allreduce(tree, axes)
-        denom = 1.0
-        # divide once by the joint fan-in; axis sizes are trace-time static
-        for axes in axes_per_hop:
-            names = (axes,) if isinstance(axes, str) else tuple(axes)
-            for a in names:
-                denom *= jax.lax.psum(1, a)
-        return jax.tree.map(lambda x: x / denom, tree)
+            x = jax.lax.psum(x, axes)
+        return x
+
+    if op in ("sum", "mean"):
+        tree = jax.tree.map(_staged_sum_leaf, tree)
+        if op == "mean":
+            denom = 1.0
+            # divide once by the joint fan-in; axis sizes are trace-time static
+            for axes in axes_per_hop:
+                for a in _hop_names(axes):
+                    denom *= jax.lax.psum(1, a)
+            tree = jax.tree.map(lambda x: x / denom, tree)
+        return tree
     for axes in axes_per_hop:
         tree = mesh_allreduce(tree, axes, op=op)
     return tree
+
+
+def partial_allreduce(tree: PyTree, hops) -> PyTree:
+    """The synchronous front of an overlapped hierarchical sum: every hop
+    EXCEPT the outermost (for a flat single-hop topology: no hop at all —
+    the whole reduction is deferred).  ``complete_allreduce`` over the
+    outermost hop finishes the job; the two compose to exactly the same
+    additions, in the same order, as ``hierarchical_allreduce(op="sum")``.
+    """
+    for axes in [getattr(h, "axes", h) for h in hops[:-1]]:
+        tree = psum_allreduce(tree, axes)
+    return tree
+
+
+def complete_allreduce(tree: PyTree, hops) -> PyTree:
+    """The deferred back half of an overlapped hierarchical sum: the
+    outermost (most expensive) hop only.  Dataflow-independent of the
+    current round's local compute, so XLA can schedule the collective
+    against it — the comm/compute overlap."""
+    outer = getattr(hops[-1], "axes", hops[-1])
+    return psum_allreduce(tree, outer)
 
 
 def server_allreduce(stacked: PyTree, op: str = "sum") -> PyTree:

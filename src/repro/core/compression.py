@@ -32,6 +32,32 @@ import jax.numpy as jnp
 
 PyTree = Any
 
+#: leaves below this element count skip the Pallas kernels — the pad to a
+#: full (8, 1024) tile would dwarf the leaf.  ``kernel_plan`` reports the
+#: split so the wire layer can surface which path actually ran.
+_KERNEL_MIN_SIZE = 256
+
+
+def _kernel_eligible(x, *, min_size: int = _KERNEL_MIN_SIZE) -> bool:
+    """Kernel path gate: big enough to amortize tile padding, and f32 —
+    the fused kernels carry thresholds/scales in f32 SMEM, so only f32
+    leaves are bit-equal to the reference."""
+    return x.size >= min_size and x.dtype == jnp.float32
+
+
+def kernel_plan(tree: PyTree, *, min_size: int = _KERNEL_MIN_SIZE) -> dict:
+    """Which leaves would take the Pallas kernel path vs the jnp reference
+    fallback (the <``min_size``/non-f32 gate), so benchmarks and
+    ``FitResult.metrics`` can record what actually ran instead of silently
+    falling back."""
+    hits = misses = 0
+    for x in jax.tree.leaves(tree):
+        if _kernel_eligible(x, min_size=min_size):
+            hits += 1
+        else:
+            misses += 1
+    return {"kernel_leaves": hits, "fallback_leaves": misses, "min_size": min_size}
+
 
 class Compressed(NamedTuple):
     tree: PyTree  # dense-with-zeros (topk/randk) or dequantized (int8)
@@ -50,10 +76,13 @@ def topk_compress(tree: PyTree, fraction: float, *, use_kernel: bool = False) ->
 
     def leaf(x):
         k = max(1, int(round(fraction * x.size)))
-        if use_kernel and x.size >= 256:
+        if use_kernel and _kernel_eligible(x):
             from repro.kernels.topk_compress import ops as tk_ops
 
-            return tk_ops.topk_sparsify(x, k)
+            # fused select kernel: exact top_k threshold + one-pass mask,
+            # bit-equal to the reference line below (topk_sparsify's
+            # all-on-device bisection stays available for huge leaves)
+            return tk_ops.topk_encode(x, k=k)[0]
         return x * _leaf_topk_mask(x, k)
 
     out = jax.tree.map(leaf, tree)
@@ -108,10 +137,16 @@ def randk_compress(key: jax.Array, tree: PyTree, fraction: float) -> Compressed:
     return Compressed(out, jnp.asarray(float(nbytes)))
 
 
-def int8_compress(tree: PyTree) -> Compressed:
+def int8_compress(tree: PyTree, *, use_kernel: bool = False) -> Compressed:
     """Per-leaf symmetric int8 quantization (quantize→dequantize roundtrip)."""
 
     def leaf(x):
+        if use_kernel and _kernel_eligible(x):
+            from repro.kernels.int8_quant import ops as q8_ops
+
+            # fused absmax + quant-dequant passes; bit-equal to the
+            # reference lines below (the int8 intermediate stays in VMEM)
+            return q8_ops.int8_roundtrip(x)[0]
         scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
         q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
         return q.astype(x.dtype) * scale

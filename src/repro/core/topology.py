@@ -28,6 +28,7 @@ to the server.  Σ_h m_h = K — exactly the flat uplink count.
 
 from __future__ import annotations
 
+import time
 from dataclasses import dataclass
 from typing import Mapping
 
@@ -116,6 +117,20 @@ class Topology:
         hops.append(Hop(axes=(pod_axis,), name="inter_pod", price_per_byte=inter_p))
         return Topology(tuple(hops))
 
+    # -- calibration ---------------------------------------------------------
+
+    @staticmethod
+    def calibrated(mesh, *, pod_axis: str = "pod"):
+        """``from_mesh`` with prices measured on ``mesh`` by
+        ``calibrate_prices`` instead of the ×1/×10 defaults."""
+        prices = calibrate_prices(mesh, pod_axis=pod_axis)
+        return Topology.from_mesh(
+            tuple(mesh.axis_names),
+            pod_axis=pod_axis,
+            intra_price=prices["intra_pod"],
+            inter_price=prices["inter_pod"],
+        )
+
     # -- ledger decomposition ------------------------------------------------
 
     def hop_messages(self, num_nodes: int, axis_sizes: Mapping[str, int]):
@@ -151,3 +166,94 @@ class Topology:
                 g_prev = g_next
             out.append((hop.name, m, hop.price_per_byte))
         return out
+
+
+# -- price calibration -------------------------------------------------------
+
+#: memoized calibration results per (device set, pod split, sample size):
+#: the microbenchmark is a one-shot property of the host, not of any fit
+_CALIBRATION_CACHE: dict = {}
+
+
+def calibrate_prices(
+    mesh,
+    *,
+    pod_axis: str = "pod",
+    sample_kib: int = 256,
+    repeats: int = 5,
+    cache: bool = True,
+) -> dict:
+    """One-shot per-hop bandwidth microbenchmark on the actual ``mesh``.
+
+    Times a jitted psum over the intra-pod axes and one over the pod
+    axis (best of ``repeats`` over a ``sample_kib`` f32 payload),
+    normalizes so the intra tier costs 1.0 per byte, and returns a price
+    mapping shaped like ``DEFAULT_PRICES``::
+
+        {"flat": 1.0, "intra_pod": 1.0, "inter_pod": <measured ratio>,
+         "seconds": {...}, "sample_bytes": ..., "calibrated": True}
+
+    Feed the prices into ``Topology.from_mesh(intra_price=...,
+    inter_price=...)`` (or use ``Topology.calibrated``) so
+    ``CommLedger.priced_cost()`` reflects the host that actually ran,
+    not the ×1/×10 guess.  Results are memoized per device set — the
+    measurement is a property of the machine, so every fit on the same
+    mesh shares one calibration.
+    """
+    import jax
+    import jax.numpy as jnp
+    from jax.experimental.shard_map import shard_map
+    from jax.sharding import PartitionSpec as P
+
+    axes = tuple(mesh.axis_names)
+    key = (
+        tuple(str(d) for d in mesh.devices.flatten()),
+        axes,
+        pod_axis,
+        int(sample_kib),
+    )
+    if cache and key in _CALIBRATION_CACHE:
+        return dict(_CALIBRATION_CACHE[key])
+
+    n = max((int(sample_kib) * 1024) // 4, 128)
+    x = jnp.zeros((n,), jnp.float32)
+
+    def _timed(hop_axes) -> float | None:
+        if not hop_axes:
+            return None
+        fn = jax.jit(
+            shard_map(
+                lambda v: jax.lax.psum(v, hop_axes),
+                mesh=mesh,
+                in_specs=P(),
+                out_specs=P(),
+                check_rep=False,
+            )
+        )
+        jax.block_until_ready(fn(x))  # compile outside the timed region
+        best = None
+        for _ in range(max(int(repeats), 1)):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn(x))
+            dt = time.perf_counter() - t0
+            best = dt if best is None else min(best, dt)
+        return best
+
+    intra = tuple(a for a in axes if a != pod_axis)
+    t_intra = _timed(intra)
+    t_inter = _timed((pod_axis,) if pod_axis in axes else ())
+
+    if t_intra and t_inter:
+        ratio = max(t_inter / t_intra, 1e-3)
+    else:
+        ratio = DEFAULT_PRICES["inter_pod"] if t_inter else 1.0
+    out = {
+        "flat": 1.0,
+        "intra_pod": 1.0,
+        "inter_pod": float(ratio),
+        "seconds": {"intra_pod": t_intra, "inter_pod": t_inter},
+        "sample_bytes": n * 4,
+        "calibrated": True,
+    }
+    _CALIBRATION_CACHE[key] = dict(out)
+    return out

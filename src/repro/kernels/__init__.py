@@ -7,5 +7,6 @@ tiling), ``ops.py`` (jit'd public wrapper, interpret-mode off-TPU) and
 * ``flash_attention``  — train/prefill attention (GQA, causal, windows)
 * ``decode_attention`` — 1-token decode vs long KV cache (flash-decode)
 * ``topk_compress``    — gradient top-k for the low-comm push path (§5)
+* ``int8_quant``       — symmetric int8 wire quantization, fused round-trip
 * ``pdist_argmin``     — k-means / k-windows E-step (ℓ1/ℓ2/ℓ∞)
 """

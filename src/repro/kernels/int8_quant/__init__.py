@@ -1,0 +1,3 @@
+from repro.kernels.int8_quant import ops, ref
+
+__all__ = ["ops", "ref"]

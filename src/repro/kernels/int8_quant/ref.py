@@ -1,0 +1,11 @@
+"""Pure-jnp oracle: symmetric int8 quantize→dequantize round-trip."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def int8_roundtrip_ref(x: jnp.ndarray):
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q.astype(x.dtype) * scale, scale

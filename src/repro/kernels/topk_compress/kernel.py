@@ -61,6 +61,70 @@ def _mask_kernel(x_ref, t_ref, o_ref):
     )
 
 
+def _valid_mask(i, n):
+    """1{position < n} for block i of the padded (ROWS, BLOCK) layout, so
+    the tail padding never pollutes the survivor count."""
+    row = jax.lax.broadcasted_iota(jnp.int32, (ROWS, BLOCK), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (ROWS, BLOCK), 1)
+    pos = i * (ROWS * BLOCK) + row * BLOCK + col
+    return pos < n
+
+
+def _encode_kernel(c_ref, t_ref, n_ref, o_ref, res_ref, cnt_ref, acc_ref):
+    """Fused wire encode: ONE pass over c emits survivors, EF residual and
+    per-lane survivor counts.
+
+    c: (1, ROWS, BLOCK) corrected values (update + carried residual);
+    t: (1, 1) SMEM threshold; n: (1, 1) SMEM true element count;
+    o = c·1{|c| ≥ t} (the push), res = c − o (the next EF residual) —
+    both exactly the reference formulas, so the kernel path is bit-equal
+    to the pure-jnp wire including signed zeros.
+    """
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = t_ref[0, 0]
+    c = c_ref[0]  # (ROWS, BLOCK)
+    keep = (jnp.abs(c) >= t).astype(c.dtype)
+    o = c * keep
+    o_ref[...] = o[None]
+    res_ref[...] = (c - o)[None]
+    counted = jnp.logical_and(keep != 0, _valid_mask(i, n_ref[0, 0]))
+    lanes = jnp.sum(
+        counted.reshape(-1, NCAND).astype(jnp.float32), axis=0
+    )  # (NCAND,)
+    acc_ref[...] += lanes[None, :]
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[...] = acc_ref[...]
+
+
+def _select_kernel(c_ref, t_ref, n_ref, o_ref, cnt_ref, acc_ref):
+    """`_encode_kernel` without the EF residual output (dense-residual-free
+    wires): survivors + survivor count in one pass."""
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    t = t_ref[0, 0]
+    c = c_ref[0]
+    keep = (jnp.abs(c) >= t).astype(c.dtype)
+    o_ref[...] = (c * keep)[None]
+    counted = jnp.logical_and(keep != 0, _valid_mask(i, n_ref[0, 0]))
+    lanes = jnp.sum(counted.reshape(-1, NCAND).astype(jnp.float32), axis=0)
+    acc_ref[...] += lanes[None, :]
+
+    @pl.when(i == pl.num_programs(0) - 1)
+    def _fin():
+        cnt_ref[...] = acc_ref[...]
+
+
 def _pad_flat(x: jnp.ndarray):
     flat = x.reshape(-1)
     n = flat.shape[0]
@@ -111,3 +175,50 @@ def apply_threshold(x: jnp.ndarray, thresh: jnp.ndarray, *, interpret: bool = Tr
         interpret=interpret,
     )(blocks, t)
     return out.reshape(-1)[: x.size].reshape(x.shape)
+
+
+def encode_threshold(
+    c: jnp.ndarray,
+    thresh: jnp.ndarray,
+    *,
+    with_residual: bool = True,
+    interpret: bool = True,
+):
+    """One fused pass: (survivors, EF residual or None, survivor count).
+
+    ``o = c·1{|c| ≥ t}`` and ``res = c − o`` — the exact reference
+    formulas, so outputs are bit-equal to the jnp path (signed zeros
+    included).  The count excludes tail padding.
+    """
+    blocks, n = _pad_flat(c)
+    nb = blocks.shape[0]
+    t = thresh.reshape(1, 1).astype(jnp.float32)
+    n_s = jnp.full((1, 1), n, jnp.int32)
+    block_spec = pl.BlockSpec((1, ROWS, BLOCK), lambda i: (i, 0, 0))
+    smem_spec = pl.BlockSpec((1, 1), lambda i: (0, 0), memory_space=pltpu.SMEM)
+    cnt_spec = pl.BlockSpec((1, NCAND), lambda i: (0, 0))
+    kernel = _encode_kernel if with_residual else _select_kernel
+    out_specs = [block_spec] + ([block_spec] if with_residual else []) + [cnt_spec]
+    out_shape = (
+        [jax.ShapeDtypeStruct(blocks.shape, c.dtype)]
+        + ([jax.ShapeDtypeStruct(blocks.shape, c.dtype)] if with_residual else [])
+        + [jax.ShapeDtypeStruct((1, NCAND), jnp.float32)]
+    )
+    outs = pl.pallas_call(
+        kernel,
+        grid=(nb,),
+        in_specs=[block_spec, smem_spec, smem_spec],
+        out_specs=out_specs,
+        out_shape=out_shape,
+        scratch_shapes=[pltpu.VMEM((1, NCAND), jnp.float32)],
+        compiler_params=_CompilerParams(dimension_semantics=("arbitrary",)),
+        interpret=interpret,
+    )(blocks, t, n_s)
+
+    def unpad(b):
+        return b.reshape(-1)[: c.size].reshape(c.shape)
+
+    count = jnp.sum(outs[-1]).astype(jnp.int32)
+    if with_residual:
+        return unpad(outs[0]), unpad(outs[1]), count
+    return unpad(outs[0]), None, count

@@ -13,7 +13,12 @@ from functools import partial
 import jax
 import jax.numpy as jnp
 
-from repro.kernels.topk_compress.kernel import NCAND, apply_threshold, count_ge
+from repro.kernels.topk_compress.kernel import (
+    NCAND,
+    apply_threshold,
+    count_ge,
+    encode_threshold,
+)
 
 
 @partial(jax.jit, static_argnames=("k", "rounds", "interpret"))
@@ -43,3 +48,34 @@ def topk_sparsify(
 
     (lo, hi), _ = jax.lax.scan(round_, (lo, hi), None, length=rounds)
     return apply_threshold(x, lo, interpret=interpret)
+
+
+@partial(jax.jit, static_argnames=("k", "interpret"))
+def topk_encode(
+    u: jnp.ndarray,
+    r: jnp.ndarray | None = None,
+    *,
+    k: int,
+    interpret: bool | None = None,
+):
+    """Fused wire encode: (survivors, EF residual, survivor count) in one
+    HBM pass over ``c = u + r``.
+
+    The threshold is the exact k-th magnitude (``lax.top_k``), matching
+    ``core.compression._leaf_topk_mask`` bit-for-bit; the fused kernel then
+    emits ``o = c·1{|c| ≥ t}`` and ``res = c − o`` — the reference wire's
+    mask-multiply and EF-subtract formulas — plus the actual survivor
+    count (ties keep > k entries; benchmarks read it so they can't lie
+    about what crossed the wire).  ``r=None`` skips the residual output
+    (non-EF wires).  Unlike ``topk_sparsify`` (whose 128-candidate
+    bisection approximates the threshold all on-device), this is the
+    bit-equal path the wire layer flips on under mesh executors.
+    """
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+    c = u if r is None else u + r
+    k = max(1, min(int(k), c.size))
+    thresh = jax.lax.top_k(jnp.abs(c.reshape(-1)), k)[0][-1]
+    return encode_threshold(
+        c, thresh, with_residual=r is not None, interpret=interpret
+    )

@@ -375,6 +375,38 @@ for led in res.ledger:
     split_ok &= sum(v["total_bytes"] for v in s["by_hop"].values()) \
         == led.total_bytes
 out["multipod+sweep"] = {"split_per_scenario": bool(split_ok)}
+
+# reduce-scatter staging + comm/compute overlap: both knobs bit-exact on
+# a real 8-shard mesh (the staged additions happen in the same order)
+rs_on = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                transport="allreduce", steps=30,
+                executor=api.MeshExecutor(reduce_scatter=True))
+rs_off = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                 transport="allreduce", steps=30,
+                 executor=api.MeshExecutor(reduce_scatter=False))
+out["reduce_scatter"] = {
+    "theta_bitwise": bitwise(rs_on.theta, rs_off.theta),
+    "ledger_equal": rs_on.ledger.summary() == rs_off.ledger.summary(),
+}
+ov_on = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                transport="delay_line", staleness=2, steps=30,
+                executor=api.MeshExecutor(overlap=True))
+ov_off = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                 transport="delay_line", staleness=2, steps=30,
+                 executor=api.MeshExecutor(overlap=False))
+resumed = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                  transport="delay_line", staleness=2, steps=15,
+                  executor=api.MeshExecutor(overlap=True))
+resumed = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                  transport="delay_line", staleness=2, steps=15,
+                  executor=api.MeshExecutor(overlap=False),
+                  carry=resumed.metrics["carry"])
+out["overlap"] = {
+    "theta_bitwise": bitwise(ov_on.theta, ov_off.theta),
+    "traj_bitwise": bitwise(ov_on.trajectory, ov_off.trajectory),
+    "ledger_equal": ov_on.ledger.summary() == ov_off.ledger.summary(),
+    "resume_bitwise": bitwise(resumed.theta, ov_off.theta),
+}
 print(json.dumps(out))
 """
 
@@ -409,6 +441,13 @@ print(json.dumps(out))
             "executor_name": "mesh+sweep",
         }, out
         assert out["multipod+sweep"] == {"split_per_scenario": True}, out
+        assert out["reduce_scatter"] == {
+            "theta_bitwise": True, "ledger_equal": True,
+        }, out
+        assert out["overlap"] == {
+            "theta_bitwise": True, "traj_bitwise": True,
+            "ledger_equal": True, "resume_bitwise": True,
+        }, out
 
 
 class TestMultiPodEquivalence:
@@ -1256,3 +1295,213 @@ class TestDynamicDelayRead:
         g = jnp.asarray([1.0, 2.0, 3.0])
         _, read = delay_push_read(s, g, jnp.asarray(0))
         np.testing.assert_array_equal(np.asarray(read), np.asarray(g))
+
+
+class TestReduceScatterStaging:
+    """MeshExecutor(reduce_scatter=True) restages the innermost hop as
+    psum_scatter → all_gather — BIT-exact with the flat staged psum
+    (same additions, same order, different wire schedule)."""
+
+    @pytest.mark.parametrize(
+        "transport,kw", [("allreduce", {}), ("delay_line", {"staleness": 2})]
+    )
+    def test_rs_on_off_bitwise(self, transport, kw):
+        X, y, w, n = _make_problem()
+        on = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport=transport, steps=30,
+                     executor=api.MeshExecutor(reduce_scatter=True), **kw)
+        off = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport=transport, steps=30,
+                      executor=api.MeshExecutor(reduce_scatter=False), **kw)
+        np.testing.assert_array_equal(np.asarray(on.theta),
+                                      np.asarray(off.theta))
+        np.testing.assert_array_equal(np.asarray(on.trajectory),
+                                      np.asarray(off.trajectory))
+        assert on.ledger.summary() == off.ledger.summary()
+
+    def test_auto_resolution(self):
+        assert api.MeshExecutor(reduce_scatter=True)._rs_active() is True
+        assert api.MeshExecutor(reduce_scatter=False)._rs_active() is False
+        auto = api.MeshExecutor()._rs_active()
+        assert auto is (jax.default_backend() == "tpu")
+
+
+class TestCommComputeOverlap:
+    """MeshExecutor(overlap=True) dispatches the outermost hop against
+    the NEXT round's local compute on delay-tolerant transports.  The
+    schedule change re-slots which delay-buffer entry completes when —
+    but the values entering each round are identical, so theta,
+    trajectory, ledger AND the resume carry are bit-exact with
+    overlap=False."""
+
+    @pytest.mark.parametrize("staleness", [1, 2])
+    def test_overlap_on_off_bitwise(self, staleness):
+        X, y, w, n = _make_problem()
+        on = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                     transport="delay_line", staleness=staleness, steps=30,
+                     executor=api.MeshExecutor(overlap=True))
+        off = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="delay_line", staleness=staleness, steps=30,
+                      executor=api.MeshExecutor(overlap=False))
+        loc = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="delay_line", staleness=staleness, steps=30)
+        for a, b in [(on, off), (on, loc)]:
+            np.testing.assert_array_equal(np.asarray(a.theta),
+                                          np.asarray(b.theta))
+            np.testing.assert_array_equal(np.asarray(a.trajectory),
+                                          np.asarray(b.trajectory))
+            assert a.ledger.summary() == b.ledger.summary()
+
+    @pytest.mark.parametrize("staleness", [1, 2])
+    def test_resume_carry_interchangeable(self, staleness):
+        """A carry saved from an overlapped run resumes bit-exactly on a
+        non-overlapped executor (and vice versa): exit_loop converts the
+        in-flight pending partial back to plain delay-line layout."""
+        X, y, w, n = _make_problem()
+        gd = lambda: api.GradientDescent(lsq_loss, lr=0.1)
+        full = api.fit(gd(), (X, y), transport="delay_line",
+                       staleness=staleness, steps=30)
+        for ex_a, ex_b in [
+            (api.MeshExecutor(overlap=True), api.MeshExecutor(overlap=False)),
+            (api.MeshExecutor(overlap=False), api.MeshExecutor(overlap=True)),
+            (api.MeshExecutor(overlap=True), "local"),
+        ]:
+            first = api.fit(gd(), (X, y), transport="delay_line",
+                            staleness=staleness, steps=15, executor=ex_a)
+            second = api.fit(gd(), (X, y), transport="delay_line",
+                             staleness=staleness, steps=15, executor=ex_b,
+                             carry=first.metrics["carry"])
+            np.testing.assert_array_equal(np.asarray(second.theta),
+                                          np.asarray(full.theta))
+
+    def test_overlap_declined_for_mean_aggregate(self):
+        """LBFGS aggregates with op="mean" — the overlap split's deferred
+        outer hop cannot carry the final divide, so the transport declines
+        overlap and runs the synchronous schedule (still correct)."""
+        X, y, w, n = _make_problem()
+        on = api.fit(api.LBFGS(lsq_loss), (X, y), transport="delay_line",
+                     staleness=1, steps=15,
+                     executor=api.MeshExecutor(overlap=True))
+        loc = api.fit(api.LBFGS(lsq_loss), (X, y), transport="delay_line",
+                      staleness=1, steps=15)
+        np.testing.assert_allclose(np.asarray(on.theta), np.asarray(loc.theta),
+                                   rtol=1e-5, atol=1e-6)
+
+
+class TestCalibratedPrices:
+    """MultiPodExecutor(calibrate=True) replaces the x1/x10 default hop
+    prices with measured per-byte costs (core.topology.calibrate_prices):
+    placement and math are untouched — only the priced ledger changes."""
+
+    def test_calibrate_smoke(self):
+        X, y, w, n = _make_problem()
+        cal = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=10,
+                      executor=api.MultiPodExecutor(calibrate=True))
+        ref = api.fit(api.GradientDescent(lsq_loss, lr=0.1), (X, y),
+                      transport="allreduce", steps=10, executor="multipod")
+        np.testing.assert_array_equal(np.asarray(cal.theta),
+                                      np.asarray(ref.theta))
+        s_cal, s_ref = cal.ledger.summary(), ref.ledger.summary()
+        assert set(s_cal["by_hop"]) == set(s_ref["by_hop"])
+        for hop, v in s_cal["by_hop"].items():
+            assert v["total_bytes"] == s_ref["by_hop"][hop]["total_bytes"]
+            assert v["price_per_byte"] > 0.0
+
+    def test_explicit_price_beats_calibration(self):
+        ex = api.MultiPodExecutor(calibrate=True, inter_price=42.0)
+        r = ex.resolve()
+        inter = [h for h in r.topology.hops if h.name == "inter_pod"]
+        if inter:  # single-device meshes may degrade to one tier
+            assert inter[0].price_per_byte == 42.0
+
+    def test_calibrate_prices_memoized(self):
+        from repro.core.topology import calibrate_prices
+        mesh = api.MeshExecutor().resolve().mesh
+        a = calibrate_prices(mesh)
+        b = calibrate_prices(mesh)  # second call is the memo (copied out)
+        assert a == b
+        assert a["calibrated"] is True
+        assert a["intra_pod"] > 0.0 and a["inter_pod"] > 0.0
+
+
+class TestProgramCache:
+    """Executors memoize their jitted placed program by config
+    fingerprint (Strategy.cache_token + wire + transport shape) so
+    repeated fits skip retrace/relower — the core of the mesh speedup."""
+
+    def setup_method(self):
+        from repro.api import executor as _exec
+        _exec.clear_program_cache()
+
+    def _fit(self, **kw):
+        X, y, w, n = _make_problem()
+        st = kw.pop("strategy", None) or api.GradientDescent(lsq_loss, lr=0.1)
+        return st, api.fit(st, (X, y), transport="allreduce", steps=10, **kw)
+
+    def test_repeat_fit_hits(self):
+        from repro.api import executor as _exec
+        st = api.GradientDescent(lsq_loss, lr=0.1)
+        X, y, w, n = _make_problem()
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        miss0 = _exec.program_cache_stats()["misses"]
+        res = api.fit(st, (X, y), transport="allreduce", steps=10,
+                      executor="mesh")
+        stats = _exec.program_cache_stats()
+        assert stats["hits"] >= 1
+        assert stats["misses"] == miss0  # no new program built
+        loc = api.fit(st, (X, y), transport="allreduce", steps=10)
+        np.testing.assert_array_equal(np.asarray(res.theta),
+                                      np.asarray(loc.theta))
+
+    def test_different_config_misses(self):
+        from repro.api import executor as _exec
+        st = api.GradientDescent(lsq_loss, lr=0.1)
+        X, y, w, n = _make_problem()
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        m0 = _exec.program_cache_stats()["misses"]
+        # different wire → different program
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh",
+                wire="topk:0.5+ef")
+        # different lr → different cache_token
+        api.fit(api.GradientDescent(lsq_loss, lr=0.2), (X, y),
+                transport="allreduce", steps=10, executor="mesh")
+        assert _exec.program_cache_stats()["misses"] > m0
+
+    def test_data_is_an_argument_not_baked(self):
+        """Same config + different data must REUSE the program and
+        produce the new data's answer (data is a jit argument)."""
+        from repro.api import executor as _exec
+        st = api.GradientDescent(lsq_loss, lr=0.1)
+        X, y, w, n = _make_problem(seed=0)
+        X2, y2, w2, _ = _make_problem(seed=1)
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        m0 = _exec.program_cache_stats()["misses"]
+        res = api.fit(st, (X2, y2), transport="allreduce", steps=10,
+                      executor="mesh")
+        assert _exec.program_cache_stats()["misses"] == m0
+        loc = api.fit(st, (X2, y2), transport="allreduce", steps=10)
+        np.testing.assert_array_equal(np.asarray(res.theta),
+                                      np.asarray(loc.theta))
+
+    def test_env_optout_bypasses(self, monkeypatch):
+        from repro.api import executor as _exec
+        monkeypatch.setenv("REPRO_PROGRAM_CACHE", "0")
+        st = api.GradientDescent(lsq_loss, lr=0.1)
+        X, y, w, n = _make_problem()
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        assert _exec.program_cache_stats() == {
+            "size": 0, "hits": 0, "misses": 0
+        }
+
+    def test_clear_resets(self):
+        from repro.api import executor as _exec
+        st = api.GradientDescent(lsq_loss, lr=0.1)
+        X, y, w, n = _make_problem()
+        api.fit(st, (X, y), transport="allreduce", steps=10, executor="mesh")
+        assert _exec.program_cache_stats()["size"] >= 1
+        _exec.clear_program_cache()
+        assert _exec.program_cache_stats() == {
+            "size": 0, "hits": 0, "misses": 0
+        }

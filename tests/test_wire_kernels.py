@@ -1,0 +1,247 @@
+"""Fused wire kernels — bit-equality with the jitted jnp reference.
+
+The wire encode path always runs JITTED (inside the transport's scan),
+and jitted XLA canonicalizes ``c * mask`` at dropped entries to +0.0
+where eager evaluation keeps IEEE −0.0 — so every reference here is
+computed UNDER ``jax.jit``, which is the only comparison that reflects
+what a fit actually computes.  Covered:
+
+* fused top-k encode (select + mask + EF residual + survivor count) vs
+  the reference formulas, across leaf shapes including the <256 kernel
+  boundary and multi-round EF residual carry;
+* fused int8 absmax + quantize→dequantize vs the reference;
+* wire-level: a fit with ``use_kernel=True`` is bitwise identical to
+  ``use_kernel=False`` (the knob changes pass structure, never results),
+  and ``FitResult.metrics["wire_kernel_hits"]`` reports which path ran;
+* an 8-fake-device subprocess check of the same equalities under a real
+  multi-shard mesh placement.
+"""
+
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.wire import Int8Wire, TopKWire
+from repro.kernels.int8_quant import ops as q8_ops
+from repro.kernels.topk_compress import ops as tk_ops
+from repro.ml.linear import lsq_loss
+
+
+def bits_equal(a, b) -> bool:
+    a = np.atleast_1d(np.asarray(a))
+    b = np.atleast_1d(np.asarray(b))
+    if a.shape != b.shape or a.dtype != b.dtype:
+        return False
+    return bool((a.view(np.uint32) == b.view(np.uint32)).all())
+
+
+@partial(jax.jit, static_argnames=("k", "with_residual"))
+def _topk_ref(c, *, k, with_residual):
+    """The wire's reference formulas, jitted — what the fallback path of
+    ``TopKWire._encode_leaf`` computes inside the transport scan."""
+    thresh = jax.lax.top_k(jnp.abs(c.reshape(-1)), k)[0][-1]
+    keep = (jnp.abs(c) >= thresh).astype(c.dtype)
+    o = c * keep
+    res = c - o if with_residual else None
+    count = jnp.sum(keep != 0).astype(jnp.int32)
+    return o, res, count
+
+
+@jax.jit
+def _int8_ref(c):
+    scale = jnp.maximum(jnp.max(jnp.abs(c)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(c / scale), -127, 127).astype(jnp.int8)
+    return q.astype(c.dtype) * scale, scale
+
+
+# shapes cross the (8, 1024) tile boundary, stay under it, and hit the
+# <256 gate's neighborhood from both sides
+SHAPES = [(4096,), (128, 300), (513,), (300,), (8192,), (256,), (257,)]
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_topk_encode_bitwise_no_ef(shape):
+    x = jax.random.normal(jax.random.key(1), shape)
+    k = max(1, x.size // 10)
+    out, res, count = tk_ops.topk_encode(x, k=k)
+    exp_o, _, exp_c = _topk_ref(x, k=k, with_residual=False)
+    assert res is None
+    assert bits_equal(out, exp_o)
+    assert int(count) == int(exp_c)
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_topk_encode_bitwise_with_ef(shape):
+    x = jax.random.normal(jax.random.key(2), shape)
+    r = 0.25 * jax.random.normal(jax.random.key(3), shape)
+    k = max(1, x.size // 10)
+    out, res, count = tk_ops.topk_encode(x, r, k=k)
+    exp_o, exp_r, exp_c = _topk_ref(x + r, k=k, with_residual=True)
+    assert bits_equal(out, exp_o)
+    assert bits_equal(res, exp_r)
+    assert int(count) == int(exp_c)
+
+
+def test_topk_encode_k_edges():
+    x = jax.random.normal(jax.random.key(4), (256,))
+    for k in (1, 255, 256):
+        out, _, count = tk_ops.topk_encode(x, k=k)
+        exp_o, _, exp_c = _topk_ref(x, k=k, with_residual=False)
+        assert bits_equal(out, exp_o)
+        assert int(count) == int(exp_c) == k
+
+
+def test_topk_ef_residual_carries_over_rounds():
+    """EF carry: round t's residual feeds round t+1 — kernel chain equals
+    the jitted reference chain bitwise at every round."""
+    x = jax.random.normal(jax.random.key(5), (2048,))
+    k = 64
+    r_k = jnp.zeros_like(x)
+    r_ref = jnp.zeros_like(x)
+    for t in range(4):
+        m = jnp.sin(x * (t + 1))  # deterministic fresh "update"
+        out_k, r_k, _ = tk_ops.topk_encode(m, r_k, k=k)
+        out_ref, r_ref, _ = _topk_ref(m + r_ref, k=k, with_residual=True)
+        assert bits_equal(out_k, out_ref), f"round {t} output diverged"
+        assert bits_equal(r_k, r_ref), f"round {t} residual diverged"
+
+
+@pytest.mark.parametrize("shape", SHAPES)
+def test_int8_roundtrip_bitwise(shape):
+    x = jax.random.normal(jax.random.key(6), shape)
+    got, scale = q8_ops.int8_roundtrip(x)
+    exp, exp_scale = _int8_ref(x)
+    assert bits_equal(got, exp)
+    assert bits_equal(scale, exp_scale)
+
+
+def _fit_problem():
+    # 300-dim: the theta leaf is kernel-eligible; K=4 nodes
+    Xs = jax.random.normal(jax.random.key(7), (4, 32, 300))
+    w = jax.random.normal(jax.random.key(8), (300,))
+    ys = jnp.einsum("kni,i->kn", Xs, w)
+    return (Xs, ys)
+
+
+@pytest.mark.parametrize("make_wire", [
+    lambda uk: TopKWire(0.1, error_feedback=True, use_kernel=uk),
+    lambda uk: TopKWire(0.1, use_kernel=uk),
+    lambda uk: Int8Wire(error_feedback=True, use_kernel=uk),
+    lambda uk: Int8Wire(use_kernel=uk),
+])
+def test_fit_kernel_on_off_bitwise(make_wire):
+    """The use_kernel knob changes pass structure, never results."""
+    data = _fit_problem()
+    st = api.GradientDescent(lsq_loss, lr=0.05)
+    r_on = api.fit(st, data, transport="allreduce", steps=6,
+                   wire=make_wire(True))
+    r_off = api.fit(st, data, transport="allreduce", steps=6,
+                    wire=make_wire(False))
+    assert bits_equal(r_on.theta, r_off.theta)
+    assert bits_equal(np.asarray(r_on.trajectory),
+                      np.asarray(r_off.trajectory))
+    assert r_on.ledger.total_bytes == r_off.ledger.total_bytes
+
+
+def test_wire_kernel_hits_reported():
+    data = _fit_problem()
+    st = api.GradientDescent(lsq_loss, lr=0.05)
+    res = api.fit(st, data, transport="allreduce", steps=3,
+                  wire="topk:0.1+ef")
+    hits = res.metrics["wire_kernel_hits"]
+    assert hits["kernel_leaves"] == 1  # the (300,) theta leaf
+    assert hits["fallback_leaves"] == 0
+    assert hits["min_size"] == 256
+    assert hits["wire"] == "topk:0.1+ef"
+    # dense wire has no kernel path — no report
+    res_d = api.fit(st, data, transport="allreduce", steps=3)
+    assert "wire_kernel_hits" not in res_d.metrics
+
+
+def test_small_leaf_takes_reference_path_and_still_matches():
+    """<256 leaves fall back (satellite fix: previously a silent
+    size-only gate) — and the fallback is the reference, so results
+    still match a forced-off run bitwise."""
+    Xs = jax.random.normal(jax.random.key(9), (4, 16, 100))
+    w = jax.random.normal(jax.random.key(10), (100,))
+    ys = jnp.einsum("kni,i->kn", Xs, w)
+    st = api.GradientDescent(lsq_loss, lr=0.05)
+    wire_on = TopKWire(0.2, error_feedback=True, use_kernel=True)
+    r_on = api.fit(st, (Xs, ys), transport="allreduce", steps=4,
+                   wire=wire_on)
+    hits = r_on.metrics["wire_kernel_hits"]
+    assert hits["kernel_leaves"] == 0 and hits["fallback_leaves"] == 1
+    r_off = api.fit(st, (Xs, ys), transport="allreduce", steps=4,
+                    wire=TopKWire(0.2, error_feedback=True,
+                                  use_kernel=False))
+    assert bits_equal(r_on.theta, r_off.theta)
+
+
+_SUBPROCESS_SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+)
+os.environ["JAX_PLATFORMS"] = "cpu"
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro import api
+from repro.api.wire import Int8Wire, TopKWire
+from repro.ml.linear import lsq_loss
+
+assert jax.device_count() == 8, jax.device_count()
+
+Xs = jax.random.normal(jax.random.key(7), (8, 32, 300))
+w = jax.random.normal(jax.random.key(8), (300,))
+ys = jnp.einsum("kni,i->kn", Xs, w)
+st = api.GradientDescent(lsq_loss, lr=0.05)
+
+
+def bits_equal(a, b):
+    a, b = np.atleast_1d(np.asarray(a)), np.atleast_1d(np.asarray(b))
+    return bool((a.view(np.uint32) == b.view(np.uint32)).all())
+
+
+for make in (
+    lambda uk: TopKWire(0.1, error_feedback=True, use_kernel=uk),
+    lambda uk: Int8Wire(error_feedback=True, use_kernel=uk),
+):
+    r_on = api.fit(st, (Xs, ys), transport="allreduce", steps=5,
+                   wire=make(True), executor="mesh")
+    r_off = api.fit(st, (Xs, ys), transport="allreduce", steps=5,
+                    wire=make(False), executor="mesh")
+    r_loc = api.fit(st, (Xs, ys), transport="allreduce", steps=5,
+                    wire=make(False))
+    assert bits_equal(r_on.theta, r_off.theta), "kernel knob changed mesh fit"
+    # cross-device psum order differs from the local stacked sum, so
+    # mesh vs local is allclose (same convention as test_executors.py)
+    assert np.allclose(np.asarray(r_on.theta), np.asarray(r_loc.theta),
+                       rtol=1e-6, atol=1e-6), "mesh fit far from local fit"
+print("OK")
+"""
+
+
+def test_wire_kernels_on_8_fake_devices():
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+    src = os.path.join(
+        os.path.dirname(os.path.dirname(os.path.abspath(__file__))), "src"
+    )
+    env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run(
+        [sys.executable, "-c", _SUBPROCESS_SCRIPT],
+        capture_output=True, text=True, env=env, timeout=600,
+    )
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "OK" in proc.stdout

@@ -1,0 +1,132 @@
+"""Perf smoke — catch executor-layer performance regressions in CI.
+
+Runs a small fixed GD workload under the local, mesh, and sweep
+executors plus the compressed wire, and compares against the checked-in
+``benchmarks/perf_baselines.json``.  Any metric worse than
+``slack × baseline`` (default 2×) fails the run.
+
+The primary metrics are RATIOS (mesh/local, per-scenario-sweep/local,
+topk/dense, cold/warm amortization), which are machine-speed invariant —
+a slower CI runner shifts numerator and denominator together.  The
+absolute local wall time is checked too, with the same slack, as a
+backstop against global slowdowns the ratios cannot see.
+
+Usage:
+  PYTHONPATH=src python tools/perf_smoke.py            # check
+  PYTHONPATH=src python tools/perf_smoke.py --update   # rewrite baselines
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+
+BASELINES = os.path.join(
+    os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    "benchmarks", "perf_baselines.json",
+)
+
+SLACK = 2.0
+K, NK, N = 8, 64, 256
+STEPS = 100
+LRS = (0.02, 0.05, 0.1, 0.2)
+
+
+def _measure() -> dict:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro import api
+    from repro.api import executor as _exec
+    from repro.ml.linear import lsq_loss
+
+    rng = np.random.default_rng(0)
+    X = jnp.asarray(rng.normal(size=(K, NK, N)))
+    w = jnp.asarray(rng.normal(size=(N,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    data = (X, y)
+
+    def timed(fn, repeats=3):
+        _exec.clear_program_cache()
+        t0 = time.perf_counter()
+        jax.block_until_ready(fn().theta)
+        cold = time.perf_counter() - t0
+        warm = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().theta)
+            warm = min(warm, time.perf_counter() - t0)
+        return cold, warm
+
+    def fit(**kw):
+        return api.fit(
+            api.GradientDescent(lsq_loss, lr=0.05), data,
+            transport="allreduce", steps=STEPS, **kw,
+        )
+
+    _, local = timed(lambda: fit())
+    cold_mesh, mesh = timed(lambda: fit(executor="mesh"))
+    _, local_topk = timed(lambda: fit(wire="topk:0.1+ef"))
+    _, sweep = timed(
+        lambda: fit(executor=api.SweepExecutor({"lr": jnp.asarray(LRS)}))
+    )
+
+    return {
+        "local_warm_s": local,
+        "mesh_over_local": mesh / local,
+        "sweep_scenario_over_local": (sweep / len(LRS)) / local,
+        "topk_over_dense": local_topk / local,
+        "mesh_cold_over_warm": cold_mesh / mesh,
+    }
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--update", action="store_true",
+                    help="rewrite the baselines file from this machine")
+    ap.add_argument("--slack", type=float, default=SLACK)
+    args = ap.parse_args()
+
+    measured = _measure()
+    print("measured:")
+    for k, v in measured.items():
+        print(f"  {k}: {v:.4f}")
+
+    if args.update:
+        with open(BASELINES, "w") as f:
+            json.dump(
+                {"workload": {"K": K, "Nk": NK, "n": N, "steps": STEPS},
+                 "slack": args.slack, "metrics": measured},
+                f, indent=2,
+            )
+            f.write("\n")
+        print(f"wrote {BASELINES}")
+        return 0
+
+    with open(BASELINES) as f:
+        base = json.load(f)["metrics"]
+
+    failures = []
+    for key, ref in base.items():
+        got = measured.get(key)
+        if got is None:
+            failures.append(f"{key}: missing from measurement")
+        elif got > args.slack * ref:
+            failures.append(
+                f"{key}: {got:.4f} > {args.slack:.1f}x baseline {ref:.4f}"
+            )
+    if failures:
+        print("PERF REGRESSION (>{:.1f}x baseline):".format(args.slack))
+        for fmsg in failures:
+            print(f"  {fmsg}")
+        return 1
+    print(f"ok — all metrics within {args.slack:.1f}x of baselines")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

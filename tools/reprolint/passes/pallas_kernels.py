@@ -22,7 +22,13 @@ arithmetic stays silent):
   array; route arrays through ``pallas_call`` operands and statics through
   ``functools.partial`` / lambda defaults;
 * **scratch memory spaces** — every ``scratch_shapes`` entry must carry an
-  explicit ``pltpu.VMEM``/``pltpu.SMEM`` (or other ``pltpu.*``) space.
+  explicit ``pltpu.VMEM``/``pltpu.SMEM`` (or other ``pltpu.*``) space;
+* **kernel arity** — the kernel body must accept exactly one ref per
+  ``in_specs`` entry + one per output (``out_shape``) + one per
+  ``scratch_shapes`` entry; a mismatch (e.g. a fused kernel grew an
+  output but the signature didn't) fails at runtime with an opaque
+  trace-time error, so surface it statically where the spec lists are
+  literal.
 """
 
 from __future__ import annotations
@@ -81,23 +87,75 @@ def _grid_len(call: ast.Call, scope) -> int | None:
 
 def _resolve_kernel_fn(arg, scope, imports):
     """The kernel function node handed to pallas_call, unwrapping the
-    ``functools.partial(kernel, **statics)`` binding idiom."""
+    ``functools.partial(kernel, **statics)`` binding idiom.  Returns
+    ``(fn, bound_pos, bound_kw)`` — the function node plus how many
+    positional and which keyword parameters the partial chain bound."""
+    bound_pos = 0
+    bound_kw: set = set()
     for _ in range(4):  # partial-of-partial chains, defensively bounded
         if isinstance(arg, (ast.Lambda,) + FUNC_NODES):
-            return arg
+            return arg, bound_pos, bound_kw
         if isinstance(arg, ast.Name) and scope is not None:
             fn = scope.lookup(arg.id)
             if fn is not None:
-                return fn
+                return fn, bound_pos, bound_kw
             arg = scope.lookup_const(arg.id)
             continue
         if isinstance(arg, ast.Call):
             q = qualify(arg.func, imports)
             if q in ("functools.partial", "partial") and arg.args:
+                bound_pos += len(arg.args) - 1
+                bound_kw |= {k.arg for k in arg.keywords if k.arg}
                 arg = arg.args[0]
                 continue
-        return None
+        return None, bound_pos, bound_kw
+    return None, bound_pos, bound_kw
+
+
+def _count_entries(node, scope):
+    """Number of entries in a specs/shapes argument: a literal
+    tuple/list counts exactly; a bare BlockSpec/ShapeDtypeStruct call is
+    one entry; anything unresolvable (conditionally-built lists, runtime
+    values) → None, and the arity check stays silent."""
+    if isinstance(node, ast.Name) and scope is not None:
+        node = scope.lookup_const(node.id)
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return len(node.elts)
+    if isinstance(node, ast.Call):
+        return 1
     return None
+
+
+def _check_kernel_arity(sf, call, fn, bound_pos, bound_kw, scope, findings):
+    a = fn.args
+    if a.vararg is not None:
+        return  # *refs soaks up anything — nothing to check
+    n_in = _count_entries(_kw(call, "in_specs"), scope)
+    out_shape = _kw(call, "out_shape")
+    n_out = _count_entries(out_shape, scope) if out_shape is not None else None
+    scratch = _kw(call, "scratch_shapes")
+    n_scratch = 0 if scratch is None else _count_entries(scratch, scope)
+    if n_in is None or n_out is None or n_scratch is None:
+        return
+    expected = n_in + n_out + n_scratch
+    params = [p.arg for p in a.posonlyargs + a.args]
+    defaulted = set(params[len(params) - len(a.defaults):]) if a.defaults else set()
+    remaining = [p for p in params[bound_pos:] if p not in bound_kw]
+    required = [p for p in remaining if p not in defaulted]
+    if len(required) <= expected <= len(remaining):
+        return
+    name = getattr(fn, "name", "<lambda>")
+    findings.append(Finding(
+        path=sf.rel, line=call.lineno, col=call.col_offset + 1,
+        rule=RULE,
+        message=(
+            f"kernel {name}() takes {len(remaining)} ref parameter(s) "
+            f"but this pallas_call supplies {expected} "
+            f"({n_in} in_specs + {n_out} output(s) + {n_scratch} "
+            "scratch) — one ref per operand, output, and scratch entry, "
+            "in that order"
+        ),
+    ))
 
 
 def _local_bindings(fn) -> set:
@@ -296,8 +354,14 @@ def run(ctx) -> list:
                     _check_blockspec(sf, sub, scope, grid_len, findings)
             _check_scratch(sf, node, imports, findings)
             if node.args:
-                fn = _resolve_kernel_fn(node.args[0], scope, imports)
-                if fn is not None and id(fn) not in checked_fns:
-                    checked_fns.add(id(fn))
-                    _check_kernel_body(sf, fn, parents, findings)
+                fn, bound_pos, bound_kw = _resolve_kernel_fn(
+                    node.args[0], scope, imports
+                )
+                if fn is not None:
+                    _check_kernel_arity(
+                        sf, node, fn, bound_pos, bound_kw, scope, findings
+                    )
+                    if id(fn) not in checked_fns:
+                        checked_fns.add(id(fn))
+                        _check_kernel_body(sf, fn, parents, findings)
     return findings
