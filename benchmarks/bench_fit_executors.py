@@ -42,6 +42,7 @@ from repro import api
 from repro.api import executor as _exec
 from repro.api.wire import make_wire
 from repro.ml.linear import lsq_loss
+from repro.telemetry import RunReport, Tracer
 
 K, NK, N = 8, 64, 256
 STEPS = 200
@@ -189,14 +190,15 @@ def run(rows):
                 transport="allreduce", steps=STEPS, **kw,
             )
         )
-        entry = {
+        mj = res.metrics_json()  # JSON-safe view (drops carry, strings
+        entry = {                # non-serializable engine objects)
             "wall_s": warm,
             "cold_wall_s": cold,
             "total_bytes": res.ledger.total_bytes,
             "final_loss": float(res.trajectory[-1]),
         }
-        if "wire_kernel_hits" in res.metrics:
-            entry["wire_kernel_hits"] = res.metrics["wire_kernel_hits"]
+        if "wire_kernel_hits" in mj:
+            entry["wire_kernel_hits"] = mj["wire_kernel_hits"]
         results["executors"][name] = entry
         rows.append((f"fit_executors/{name}", warm * 1e6 / STEPS,
                      f"{float(res.trajectory[-1]):.4f}"))
@@ -276,6 +278,20 @@ def run(rows):
                  f"{dt_seq_mesh / dt_comp:.2f}x_vs_seq_mesh"))
 
     results["program_cache"] = _exec.program_cache_stats()
+
+    # one traced mesh+topk fit → a RunReport markdown block in the
+    # sidecar, so the perf trajectory carries the phase decomposition
+    # (per-phase device times, per-hop collectives, cache state), not
+    # just wall totals
+    tracer = Tracer()
+    res_traced = api.fit(
+        api.GradientDescent(lsq_loss, lr=0.05), data,
+        transport="allreduce", steps=STEPS, executor="mesh",
+        wire="topk:0.1+ef", tracer=tracer, trace="phases",
+    )
+    results["run_report_md"] = RunReport.from_fit(
+        res_traced, tracer=tracer
+    ).to_markdown()
 
     out_path = os.path.join(
         os.path.dirname(os.path.dirname(os.path.abspath(__file__))),

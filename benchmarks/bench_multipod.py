@@ -135,7 +135,20 @@ for hop in r.topology.hops:
 # one-shot microbenchmark replacing the ×1/×10 default hop prices
 prices = calibrate_prices(mesh)
 
+# one traced hierarchical fit -> the RunReport markdown carried in the
+# sidecar: per-hop bytes AND per-hop device times in one artifact
+from repro.telemetry import RunReport, Tracer
+
+tracer = Tracer()
+traced = api.fit(
+    api.GradientDescent(lsq_loss, lr=0.05), data, transport="allreduce",
+    steps=STEPS, executor=api.MultiPodExecutor(mesh),
+    wire="topk:0.1+ef", tracer=tracer, trace="phases",
+)
+run_report_md = RunReport.from_fit(traced, tracer=tracer).to_markdown()
+
 out = {
+    "run_report_md": run_report_md,
     "workload": {"K": K, "Nk": NK, "n": N, "steps": STEPS},
     "mesh": {"pod": 2, "data": 4},
     "env": {

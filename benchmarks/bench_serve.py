@@ -27,6 +27,7 @@ import numpy as np
 from repro import api
 from repro.ml.linear import lsq_loss
 from repro.serve import MicroBatcher, ServeEngine, ServeMetrics
+from repro.telemetry import RunReport, Tracer
 
 K, NK, N = 8, 64, 256
 BUCKETS = (1, 4, 16, 64)
@@ -44,7 +45,7 @@ def _trained():
 
 
 def _throughput(engine, bucket: int, queries: np.ndarray) -> float:
-    batcher = MicroBatcher(engine, max_batch=bucket)
+    batcher = MicroBatcher(engine, max_batch=bucket, tracer=engine.tracer)
     for q in queries[:bucket]:  # warmup: compile this bucket shape
         batcher.submit(q)
     batcher.flush()
@@ -80,6 +81,7 @@ def run(rows):
             per_bucket[bucket] = {
                 "requests_per_s": rps,
                 "p50_latency_ms": stats["p50_latency_ms"],
+                "p99_latency_ms": stats["p99_latency_ms"],
                 "request_bytes": stats["request_bytes"],
                 "response_bytes": stats["response_bytes"],
             }
@@ -97,6 +99,14 @@ def run(rows):
         "bucket_speedup_vs_b1": best[0]
         / results["placements"]["local"][BUCKETS[0]]["requests_per_s"],
     }
+
+    # one traced serving pass at the best bucket → RunReport markdown in
+    # the sidecar (queue waits, predict spans, latency percentiles, pad
+    # fraction alongside the raw throughput numbers)
+    tracer = Tracer()
+    engine = ServeEngine.from_fit(res, strategy, tracer=tracer)
+    _throughput(engine, int(best[1]), queries)
+    results["run_report_md"] = RunReport.from_serve(engine).to_markdown()
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_serve.json"))
     with open(out, "w") as f:

@@ -3,7 +3,15 @@
 Prints ``name,us_per_call,derived`` CSV.  Each bench module imports
 independently: an import failure (missing optional dep, broken
 accelerator stack) reports a ``SKIP(import)`` row and the rest of the
-suite still runs.  Run:
+suite still runs.
+
+The executor/multipod/serve benches additionally embed a
+``run_report_md`` block (``telemetry.report.RunReport`` rendered to
+markdown — per-phase device times, per-hop bytes, cache state, latency
+percentiles) in their ``BENCH_*.json`` sidecars, so the checked-in perf
+trajectory carries the phase decomposition, not just wall times.
+
+Run:
   PYTHONPATH=src python -m benchmarks.run [--only substring]
 """
 

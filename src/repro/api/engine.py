@@ -46,8 +46,29 @@ from repro.api.executor import Executor, make_executor
 from repro.api.strategy import Strategy
 from repro.api.transport import Transport, make_transport
 from repro.api.wire import Wire, make_wire
+from repro.telemetry import trace as _trace
 
 PyTree = Any
+
+
+def _jsonable(v, _size_cap: int = 100_000):
+    """Best-effort JSON conversion: primitives pass, arrays become lists
+    (or a shape/dtype placeholder past ``_size_cap`` elements), anything
+    else becomes ``"<TypeName>"``."""
+    if v is None or isinstance(v, (bool, int, float, str)):
+        return v
+    if isinstance(v, dict):
+        return {str(k): _jsonable(x) for k, x in v.items()}
+    if isinstance(v, (list, tuple)):
+        return [_jsonable(x) for x in v]
+    if hasattr(v, "dtype") and hasattr(v, "shape"):  # numpy / jax array
+        arr = np.asarray(v)
+        if arr.ndim == 0:
+            return arr.item()
+        if arr.size > _size_cap:
+            return f"<ndarray shape={arr.shape} dtype={str(arr.dtype)}>"
+        return arr.tolist()
+    return f"<{type(v).__name__}>"
 
 
 class FitResult(NamedTuple):
@@ -55,6 +76,16 @@ class FitResult(NamedTuple):
     trajectory: PyTree
     ledger: CommLedger | list
     metrics: dict
+
+    def metrics_json(self) -> dict:
+        """``metrics`` as a JSON-serializable dict: drops the opaque
+        ``"carry"`` resume token, converts arrays to lists, and strings
+        anything non-serializable (e.g. ``"serve_engine"`` →
+        ``"<ServeEngine>"``).  This is what ``benchmarks/`` writers and
+        ``RunReport`` persist."""
+        return {
+            k: _jsonable(v) for k, v in self.metrics.items() if k != "carry"
+        }
 
 
 def _total(a: np.ndarray) -> int:
@@ -79,6 +110,8 @@ def fit(
     theta0: PyTree = None,
     carry=None,
     tag: str = "fit",
+    tracer=None,
+    trace: str | None = None,
     **transport_options,
 ) -> FitResult:
     """Train ``strategy`` on ``data`` under a transport, a wire and an
@@ -110,17 +143,63 @@ def fit(
         per-round batch (update transports).
       theta0: initial parameter; defaults to ``strategy.init_theta(data)``.
       carry: resume token from a previous ``FitResult.metrics["carry"]``.
+      tracer: optional ``repro.telemetry.trace.Tracer``.  Installed as
+        the ambient tracer for the whole run, so the engine's loop /
+        ledger spans, the executors' dispatch + program-cache spans, and
+        (under ``executor="serve"``) the serving engine's spans all land
+        on one timeline.  All spans are host-side: a traced fit runs the
+        same compiled program and returns bit-identical results
+        (``tests/test_trace.py``).  No tracer → zero overhead.
+      trace: ``"phases"`` (requires ``tracer``) additionally recovers
+        per-phase DEVICE timings — local-step, wire encode, per-hop
+        collective, stats completion — by replaying standalone
+        ``jax.block_until_ready``-fenced probe programs at the run's
+        real shapes AFTER the fit completes.  The fit program itself is
+        untouched, so ``trace="phases"`` is bit-exact by construction.
       transport_options: transport-specific (``staleness=...`` for
         delay_line; ``rho``/``g``/``g_lam`` for admm_consensus).
     """
+    if trace not in (None, "phases"):
+        raise ValueError(f"trace must be None or 'phases', got {trace!r}")
+    if trace == "phases" and tracer is None:
+        raise ValueError("trace='phases' requires a tracer=Tracer()")
+    with _trace.activated(tracer):
+        return _fit_traced(
+            strategy, data, wire=wire, transport=transport,
+            executor=executor, sweep=sweep, schedule=schedule, steps=steps,
+            stream=stream, theta0=theta0, carry=carry, tag=tag,
+            tracer=tracer, trace=trace, transport_options=transport_options,
+        )
+
+
+def _fit_traced(
+    strategy, data, *, wire, transport, executor, sweep, schedule, steps,
+    stream, theta0, carry, tag, tracer, trace, transport_options,
+) -> FitResult:
     w = make_wire(wire)
     tr = make_transport(transport, **transport_options)
     ex = make_executor(executor, sweep_params=sweep)
-    raw = tr.run(
-        strategy, data,
-        wire=w, schedule=schedule, steps=steps, stream=stream,
-        theta0=theta0, carry=carry, executor=ex,
-    )
+    with _trace.span(
+        "fit/loop", transport=tr.name, wire=w.name, executor=ex.name, tag=tag
+    ):
+        raw = tr.run(
+            strategy, data,
+            wire=w, schedule=schedule, steps=steps, stream=stream,
+            theta0=theta0, carry=carry, executor=ex,
+        )
+        if tracer is not None:
+            # fence so the loop span covers device completion, not just
+            # async dispatch — a pure wait, results unchanged
+            jax.block_until_ready(raw.theta)
+
+    if trace == "phases":
+        from repro.telemetry import phases as _phases  # lazy: jax-heavy
+
+        _phases.profile_phases(
+            tracer, strategy, data,
+            wire=w, transport=tr, executor=ex,
+            schedule=schedule, steps=steps, stream=stream, theta0=theta0,
+        )
 
     ups = np.asarray(raw.uplink)
     downs = np.asarray(raw.downlink)
@@ -151,16 +230,24 @@ def fit(
         return led
 
     S = ex.num_scenarios
-    if S is None:
-        ledger = materialize(ups, downs)
-        metrics = dict(strategy.summary(raw.theta, data))
-    else:
-        ledger = [materialize(ups[s], downs[s], f"/s{s}") for s in range(S)]
-        try:
-            batched = jax.vmap(lambda th: strategy.summary(th, data))(raw.theta)
-            metrics = {k: np.asarray(v) for k, v in batched.items()}
-        except Exception:  # summaries need not be vmappable — skip, keep raw
-            metrics = {}
+    with _trace.span("fit/ledger", scenarios=S):
+        if S is None:
+            ledger = materialize(ups, downs)
+        else:
+            ledger = [
+                materialize(ups[s], downs[s], f"/s{s}") for s in range(S)
+            ]
+    with _trace.span("fit/metrics"):
+        if S is None:
+            metrics = dict(strategy.summary(raw.theta, data))
+        else:
+            try:
+                batched = jax.vmap(lambda th: strategy.summary(th, data))(
+                    raw.theta
+                )
+                metrics = {k: np.asarray(v) for k, v in batched.items()}
+            except Exception:  # summaries need not be vmappable — skip
+                metrics = {}
     metrics.update(raw.extras)
     metrics["uplink_bytes_per_round"] = ups
     metrics["downlink_bytes_per_round"] = downs

@@ -73,6 +73,7 @@ from repro.core.allreduce import (
 from repro.core.topology import Topology
 from repro.launch.mesh import batch_axes, make_multipod_mesh, make_node_mesh
 from repro.sharding.rules import current_mesh_context
+from repro.telemetry import trace as _trace
 
 PyTree = Any
 
@@ -448,6 +449,33 @@ def clear_program_cache() -> None:
     _PROGRAM_CACHE_STATS["hits"] = _PROGRAM_CACHE_STATS["misses"] = 0
 
 
+def dispatch(key, build, label, *args):
+    """``cached_program(key, build)(*args)`` with observability: when a
+    tracer is ambient (``fit(..., tracer=...)``), the call is wrapped in
+    a ``dispatch/<label>`` span tagged with the cache outcome (``hit`` =
+    warm executable, ``miss`` = compile, ``uncached`` = no cache key) and
+    fenced with ``jax.block_until_ready`` so the span covers device
+    completion.  ``program_cache/{hit,miss,uncached}`` counters
+    accumulate alongside.  With no tracer this is byte-for-byte the old
+    ``cached_program(key, build)(*args)`` path — the fence is a pure
+    wait either way, so traced dispatch stays bit-exact."""
+    t = _trace.current_tracer()
+    if t is None:
+        return cached_program(key, build)(*args)
+    if key is None or not _cache_enabled():
+        state = "uncached"
+        program = cached_program(key, build)
+    else:
+        hits_before = _PROGRAM_CACHE_STATS["hits"]
+        program = cached_program(key, build)
+        state = "hit" if _PROGRAM_CACHE_STATS["hits"] > hits_before else "miss"
+    t.count(f"program_cache/{state}")
+    with t.span(f"dispatch/{label}", cache=state):
+        out = program(*args)
+        jax.block_until_ready(out)
+    return out
+
+
 # ----------------------------------------------------------------------------
 # Executors
 # ----------------------------------------------------------------------------
@@ -568,7 +596,7 @@ class LocalExecutor(Executor):
             None if cache_key is None
             else ("local-update", cache_key, xs is None, length)
         )
-        return cached_program(key, build)(carry, data, xs)
+        return dispatch(key, build, f"{self.name}-update", carry, data, xs)
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
                    wire=None, cache_key=None):
@@ -578,7 +606,7 @@ class LocalExecutor(Executor):
             )
 
         key = None if cache_key is None else ("local-server", cache_key)
-        return cached_program(key, build)(carry, data, schedule)
+        return dispatch(key, build, f"{self.name}-server", carry, data, schedule)
 
 
 class ServingExecutor(LocalExecutor):
@@ -818,7 +846,7 @@ class MeshExecutor(Executor):
             xs is None, self._rs_active(), bool(strategy.replicate_data),
             self._mesh_fingerprint(mesh),
         )
-        return cached_program(key, build)(carry, data, xs)
+        return dispatch(key, build, f"{self.name}-update", carry, data, xs)
 
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
@@ -892,7 +920,9 @@ class MeshExecutor(Executor):
             "mesh-server", type(self).__name__, cache_key,
             self._rs_active(), self._mesh_fingerprint(mesh),
         )
-        return cached_program(key, build)(carry, data, schedule)
+        return dispatch(
+            key, build, f"{self.name}-server", carry, data, schedule
+        )
 
 
 class MultiPodExecutor(MeshExecutor):
@@ -1197,7 +1227,9 @@ class SweepExecutor(Executor):
                 "sweep-local", cache_key, tuple(sorted(attrs)),
                 stal is None, xs is None, length, self.num_scenarios,
             )
-            return cached_program(key, build)(attrs, stal, carry, data, xs)
+            return dispatch(
+                key, build, f"{self.name}-update", attrs, stal, carry, data, xs
+            )
 
         # --- mesh-composed: scenario vmap INSIDE the shard_map body ---
         # Each shard vmaps the scan over scenarios, so the executable is

@@ -23,10 +23,13 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import nullcontext
 from typing import Any, Callable
 
 import jax
 import numpy as np
+
+from repro.telemetry import trace as _trace
 
 PyTree = Any
 
@@ -93,6 +96,11 @@ class MicroBatcher:
       timeout_s: max age of a queued request before ``poll`` flushes its
         group — the latency bound batching is traded against.
       clock: injectable monotonic clock (tests).
+      tracer: optional ``repro.telemetry.trace.Tracer`` recording a
+        ``batcher/serve`` span per flush (tagged with bucket, valid
+        count and the flushed group's max queue wait) plus padding /
+        queue-wait counters; defaults to the ambient tracer at
+        construction.  None → zero overhead.
     """
 
     def __init__(
@@ -103,6 +111,7 @@ class MicroBatcher:
         buckets: tuple | None = None,
         timeout_s: float = 0.01,
         clock: Callable[[], float] = time.monotonic,
+        tracer=None,
     ):
         from repro.serve.engine import ServeEngine
 
@@ -121,6 +130,7 @@ class MicroBatcher:
         self.max_batch = self.buckets[-1]
         self.timeout_s = timeout_s
         self._clock = clock
+        self.tracer = tracer if tracer is not None else _trace.current_tracer()
         # the lock guards only the queues — predict runs OUTSIDE it, so a
         # slow decode never blocks submits/polls of other shape groups
         self._lock = threading.Lock()
@@ -183,11 +193,28 @@ class MicroBatcher:
     def _serve(self, grp) -> int:
         n = len(grp)
         bucket = self.bucket_for(n)
+        tr = self.tracer
+        wait_ms = 0.0
+        if tr is not None:
+            now = self._clock()
+            wait_ms = 1e3 * max(now - t_enq for _, _, t_enq in grp)
+            tr.count("batcher/requests", n)
+            tr.count("batcher/padded_slots", bucket - n)
+            tr.count("batcher/queue_wait_s", sum(
+                now - t_enq for _, _, t_enq in grp
+            ))
         X = np.stack([x for x, _, _ in grp])
         if bucket > n:
             X = np.concatenate([X, np.repeat(X[-1:], bucket - n, axis=0)])
         try:
-            Y = self._call(X, n)
+            with (
+                tr.span(
+                    "batcher/serve", bucket=bucket, valid=n,
+                    queue_wait_ms=round(wait_ms, 3),
+                )
+                if tr is not None else nullcontext()
+            ):
+                Y = self._call(X, n)
         except Exception as e:
             for _, ticket, _ in grp:
                 ticket._fail(e)

@@ -26,6 +26,7 @@ from __future__ import annotations
 
 import threading
 import time
+from contextlib import nullcontext
 from typing import Any
 
 import jax
@@ -36,6 +37,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 from repro.launch.mesh import batch_axes, data_axis_size
 from repro.serve.metrics import ServeMetrics
 from repro.sharding.rules import place_params
+from repro.telemetry import trace as _trace
 
 PyTree = Any
 
@@ -54,6 +56,11 @@ class ServeEngine:
       metrics: a shared ``ServeMetrics`` (one per deployment); fresh by
         default.
       tag: ledger event tag for this engine's inference traffic.
+      tracer: optional ``repro.telemetry.trace.Tracer`` recording
+        ``serve/predict`` and ``serve/swap`` spans; defaults to the
+        ambient tracer at construction (so ``fit(..., executor="serve",
+        tracer=...)`` traces its engine automatically).  None → no
+        tracing, zero overhead.
     """
 
     def __init__(
@@ -67,6 +74,7 @@ class ServeEngine:
         donate: bool = True,
         metrics: ServeMetrics | None = None,
         tag: str = "serve",
+        tracer=None,
     ):
         self.strategy = strategy
         self.mesh = mesh
@@ -74,6 +82,7 @@ class ServeEngine:
         self.fsdp_axis = fsdp_axis
         self.tag = tag
         self.metrics = metrics if metrics is not None else ServeMetrics()
+        self.tracer = tracer if tracer is not None else _trace.current_tracer()
         self._lock = threading.Lock()
         self._batch_axes = batch_axes(mesh) if mesh is not None else ()
         self._batch_mul = data_axis_size(mesh) if mesh is not None else 1
@@ -142,9 +151,11 @@ class ServeEngine:
                 raise ValueError(
                     f"swap() needs the served pytree structure {old}, got {new}"
                 )
-        placed = self._place(theta)
-        with self._lock:
-            self.theta = placed
+        tr = self.tracer
+        with tr.span("serve/swap") if tr is not None else nullcontext():
+            placed = self._place(theta)
+            with self._lock:
+                self.theta = placed
 
     def predict(self, X, *, valid: int | None = None) -> jnp.ndarray:
         """Answer one request batch.
@@ -174,10 +185,18 @@ class ServeEngine:
         Xp = self._place_request(Xp)
         with self._lock:
             theta = self.theta
+        tr = self.tracer
         t0 = time.perf_counter()
-        Y = self._fn(theta, Xp)
-        Y = jax.block_until_ready(Y)
+        with (
+            tr.span("serve/predict", batch=int(Xp.shape[0]), valid=int(n))
+            if tr is not None else nullcontext()
+        ):
+            Y = self._fn(theta, Xp)
+            Y = jax.block_until_ready(Y)
         dt = time.perf_counter() - t0
+        if tr is not None:
+            tr.count("serve/requests", n)
+            tr.count("serve/padded_slots", int(Xp.shape[0]) - int(n))
         Y = jax.tree.map(lambda y: y[:n], Y)
         self.metrics.record_batch(
             n, Xp.shape[0], dt, req_ref, Y, tag=self.tag

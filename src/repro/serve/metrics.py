@@ -111,6 +111,7 @@ class ServeMetrics:
             "mean_latency_ms": 1e3 * (sum(lat) / len(lat)) if lat else 0.0,
             "p50_latency_ms": 1e3 * _percentile(lat, 0.50),
             "p95_latency_ms": 1e3 * _percentile(lat, 0.95),
+            "p99_latency_ms": 1e3 * _percentile(lat, 0.99),
             "pad_fraction": (padded / slots) if slots else 0.0,
             "request_bytes": up,
             "response_bytes": down,

@@ -1,3 +1,9 @@
-from repro.telemetry import hlo, roofline
+from repro.telemetry import hlo, roofline, trace
+from repro.telemetry.report import RunReport
+from repro.telemetry.trace import Tracer
 
-__all__ = ["hlo", "roofline"]
+# NOTE: ``repro.telemetry.phases`` (the trace="phases" device probes) is
+# jax-heavy and imported lazily by ``api.fit`` — everything here stays
+# stdlib-only so ``api.executor`` can import ``trace`` at module load.
+
+__all__ = ["hlo", "roofline", "trace", "Tracer", "RunReport"]

@@ -1,0 +1,193 @@
+"""``RunReport`` — one artifact answering "what did this run do?".
+
+The run-level observability fragments each tell a slice of the story:
+``CommLedger`` knows the bytes (per reduction hop), the ``Tracer`` knows
+the wall time (per span), ``program_cache_stats()`` knows compile vs
+warm dispatch, ``metrics["wire_kernel_hits"]`` knows Pallas kernel
+coverage, and ``ServeMetrics`` knows latency percentiles.  ``RunReport``
+joins them::
+
+    tracer = Tracer()
+    res = api.fit(strategy, data, executor="multipod",
+                  wire="topk:0.1+ef", steps=100,
+                  tracer=tracer, trace="phases")
+    rep = RunReport.from_fit(res, tracer=tracer)
+    rep.as_dict()       # one JSON-serializable dict
+    print(rep.to_markdown())   # rendered tables
+
+``from_serve(engine)`` builds the serving-side equivalent from a
+``ServeEngine`` (batcher/predict/swap spans + ``ServeMetrics`` latency
+summary + the inference ledger).  Benchmarks embed ``to_markdown()``
+blocks in their ``BENCH_*.json`` sidecars so the perf trajectory carries
+phase decomposition, not just wall times.
+"""
+
+from __future__ import annotations
+
+import json
+from typing import Any
+
+__all__ = ["RunReport"]
+
+
+def _fmt_bytes(n: float) -> str:
+    n = float(n)
+    for unit in ("B", "KiB", "MiB", "GiB"):
+        if abs(n) < 1024 or unit == "GiB":
+            return f"{n:.1f} {unit}" if unit != "B" else f"{int(n)} B"
+        n /= 1024
+    return f"{n:.1f} GiB"
+
+
+def _fmt_s(s: float) -> str:
+    return f"{1e3 * s:.2f} ms" if s < 1.0 else f"{s:.3f} s"
+
+
+class RunReport:
+    """One dict + markdown rendering of a run's time, bytes and caches.
+
+    Construct via :meth:`from_fit` or :meth:`from_serve`; the joined
+    data lives in ``.data`` (JSON-serializable — what :meth:`as_dict`
+    returns).
+    """
+
+    def __init__(self, data: dict):
+        self.data = data
+
+    # -- constructors --------------------------------------------------------
+
+    @classmethod
+    def from_fit(cls, result, tracer=None) -> "RunReport":
+        """Join a ``FitResult`` with the run's tracer (if any): config,
+        per-hop ledger bytes, span wall times, program-cache state and
+        wire kernel hits in one artifact.  ``tracer`` is the instance
+        passed to ``fit(..., tracer=...)``; None reports bytes/caches
+        only."""
+        from repro.api.executor import program_cache_stats
+
+        m = result.metrics
+        ledger = result.ledger
+        if isinstance(ledger, list):  # sweep: S per-scenario ledgers
+            comm = {
+                "scenarios": len(ledger),
+                "per_scenario": ledger[0].summary() if ledger else {},
+                "total_bytes": sum(l.total_bytes for l in ledger),
+            }
+        else:
+            comm = ledger.summary()
+        data = {
+            "kind": "fit",
+            "config": {
+                "transport": m.get("transport"),
+                "wire": m.get("wire"),
+                "executor": m.get("executor"),
+            },
+            "comm": comm,
+            "program_cache": program_cache_stats(),
+        }
+        if "wire_kernel_hits" in m:
+            data["wire_kernel_hits"] = m["wire_kernel_hits"]
+        cls._join_tracer(data, tracer)
+        return cls(data)
+
+    @classmethod
+    def from_serve(cls, engine, tracer=None) -> "RunReport":
+        """Join a ``ServeEngine``'s ``ServeMetrics`` summary (latency
+        percentiles, pad fraction, inference bytes) with its tracer
+        (defaults to the tracer the engine itself records into)."""
+        data = {
+            "kind": "serve",
+            "serve": engine.stats(),
+            "comm": engine.ledger.summary(),
+        }
+        cls._join_tracer(data, tracer if tracer is not None else engine.tracer)
+        return cls(data)
+
+    @staticmethod
+    def _join_tracer(data: dict, tracer) -> None:
+        if tracer is None:
+            return
+        data["spans"] = tracer.summary()
+        if tracer.counters:
+            data["counters"] = dict(tracer.counters)
+        if tracer.gauges:
+            data["gauges"] = dict(tracer.gauges)
+
+    # -- rendering -----------------------------------------------------------
+
+    def as_dict(self) -> dict:
+        return self.data
+
+    def to_json(self) -> str:
+        return json.dumps(self.data, indent=2, default=str)
+
+    def to_markdown(self) -> str:
+        d = self.data
+        lines = [f"## RunReport ({d['kind']})", ""]
+        cfg = d.get("config")
+        if cfg:
+            lines.append(
+                "- config: "
+                + " × ".join(f"`{v}`" for v in cfg.values() if v)
+            )
+        comm = d.get("comm", {})
+        if "total_bytes" in comm:
+            lines.append(f"- comm total: {_fmt_bytes(comm['total_bytes'])}"
+                         + (f" over {comm['rounds']} rounds"
+                            if comm.get("rounds") else ""))
+        if comm.get("scenarios"):
+            lines.append(f"- scenarios: {comm['scenarios']} "
+                         f"(per-scenario shown below)")
+            comm = comm.get("per_scenario", {})
+        by_hop = comm.get("by_hop")
+        if by_hop:
+            lines += ["", "| hop | uplink | downlink | price/byte |",
+                      "|---|---|---|---|"]
+            for name, h in by_hop.items():
+                lines.append(
+                    f"| {name} | {_fmt_bytes(h['uplink_bytes'])} "
+                    f"| {_fmt_bytes(h['downlink_bytes'])} "
+                    f"| {h['price_per_byte']:g} |"
+                )
+        spans = d.get("spans")
+        if spans:
+            lines += ["", "| span | count | total | mean |",
+                      "|---|---|---|---|"]
+            for name in sorted(spans):
+                e = spans[name]
+                lines.append(
+                    f"| {name} | {e['count']} | {_fmt_s(e['total_s'])} "
+                    f"| {_fmt_s(e['mean_s'])} |"
+                )
+        cache = d.get("program_cache")
+        if cache:
+            lines.append(
+                f"\n- program cache: {cache['hits']} hits / "
+                f"{cache['misses']} misses ({cache['size']} cached)"
+            )
+        hits = d.get("wire_kernel_hits")
+        if hits:
+            lines.append(f"- wire kernel hits: `{hits}`")
+        counters = d.get("counters")
+        if counters:
+            lines.append(
+                "- counters: "
+                + ", ".join(f"{k}={v:g}" if isinstance(v, float) else
+                            f"{k}={v}" for k, v in sorted(counters.items()))
+            )
+        serve = d.get("serve")
+        if serve:
+            lines += [
+                "",
+                "| requests | req/s | p50 | p95 | p99 | pad |",
+                "|---|---|---|---|---|---|",
+                (
+                    f"| {serve['requests']} "
+                    f"| {serve['requests_per_s']:.0f} "
+                    f"| {serve['p50_latency_ms']:.2f} ms "
+                    f"| {serve['p95_latency_ms']:.2f} ms "
+                    f"| {serve['p99_latency_ms']:.2f} ms "
+                    f"| {100 * serve['pad_fraction']:.1f}% |"
+                ),
+            ]
+        return "\n".join(lines) + "\n"

@@ -450,6 +450,45 @@ class TestRetraceSmell:
         assert fs == []
 
 
+# -- span-discipline ----------------------------------------------------------
+
+
+class TestSpanDiscipline:
+    def test_raw_primitives_and_dropped_span(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            def f(tracer, work):
+                rec = tracer.span_begin("round")
+                work()
+                tracer.span_end(rec)
+                tracer.span("dropped", tag=1)
+        """, name="src/repro/api/mod.py")
+        msgs = [f.message for f in fs if f.rule == "span-discipline"]
+        assert len(msgs) == 3
+        assert any("raw span_begin(...)" in m for m in msgs)
+        assert any("raw span_end(...)" in m for m in msgs)
+        assert any("bare statement" in m for m in msgs)
+
+    def test_context_managed_and_regex_span_clean(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            from contextlib import nullcontext
+
+            def f(tracer, tr, work, m):
+                with tracer.span("round", nodes=8):
+                    work()
+                with tr.span("maybe") if tr is not None else nullcontext():
+                    work()
+                return m.span()
+        """, name="src/repro/api/mod.py")
+        assert fs == []
+
+    def test_outside_src_repro_exempt(self, tmp_path):
+        fs = lint_src(tmp_path, """
+            def f(tracer):
+                tracer.span_begin("bench")
+        """, name="benchmarks/mod.py")
+        assert [f for f in fs if f.rule == "span-discipline"] == []
+
+
 # -- suppressions -------------------------------------------------------------
 
 
@@ -513,6 +552,7 @@ class TestDriver:
         assert set(ALL_RULES) == {
             "tracer-hygiene", "collective-discipline", "compat-matrix",
             "pallas-kernel", "ledger-completeness", "retrace-smell",
+            "span-discipline",
         }
 
     def test_repo_tree_is_clean(self):

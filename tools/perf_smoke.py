@@ -11,6 +11,13 @@ a slower CI runner shifts numerator and denominator together.  The
 absolute local wall time is checked too, with the same slack, as a
 backstop against global slowdowns the ratios cannot see.
 
+One metric is held to a FIXED bound instead of the baseline×slack rule:
+``traced_over_untraced`` — a warm mesh fit with a live
+``telemetry.trace.Tracer`` vs the same fit untraced — must stay ≤ 1.05×
+(``TRACED_BOUND``).  That is the tracing layer's overhead contract
+(docs/OBSERVABILITY.md): host-side spans around whole-program dispatch
+may not tax the hot path, traced or not.
+
 Usage:
   PYTHONPATH=src python tools/perf_smoke.py            # check
   PYTHONPATH=src python tools/perf_smoke.py --update   # rewrite baselines
@@ -30,6 +37,10 @@ BASELINES = os.path.join(
 )
 
 SLACK = 2.0
+#: hard ceiling on tracer-on / tracer-off warm-fit wall time — the
+#: tracing layer's "zero overhead" contract, checked absolutely (no
+#: baseline, no slack)
+TRACED_BOUND = 1.05
 K, NK, N = 8, 64, 256
 STEPS = 100
 LRS = (0.02, 0.05, 0.1, 0.2)
@@ -75,12 +86,30 @@ def _measure() -> dict:
         lambda: fit(executor=api.SweepExecutor({"lr": jnp.asarray(LRS)}))
     )
 
+    # tracing overhead contract: the SAME warm mesh executable (the
+    # program cache key ignores the tracer), tracer off vs on, best of 5
+    # each so scheduler noise doesn't dominate a µs-scale difference
+    from repro.telemetry.trace import Tracer
+
+    def warm_best(fn, repeats=5):
+        jax.block_until_ready(fn().theta)  # warm the program cache
+        best = float("inf")
+        for _ in range(repeats):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn().theta)
+            best = min(best, time.perf_counter() - t0)
+        return best
+
+    untraced = warm_best(lambda: fit(executor="mesh"))
+    traced = warm_best(lambda: fit(executor="mesh", tracer=Tracer()))
+
     return {
         "local_warm_s": local,
         "mesh_over_local": mesh / local,
         "sweep_scenario_over_local": (sweep / len(LRS)) / local,
         "topk_over_dense": local_topk / local,
         "mesh_cold_over_warm": cold_mesh / mesh,
+        "traced_over_untraced": traced / untraced,
     }
 
 
@@ -95,6 +124,9 @@ def main() -> int:
     print("measured:")
     for k, v in measured.items():
         print(f"  {k}: {v:.4f}")
+
+    # fixed-bound contract, not a baseline ratio: tracing must stay free
+    traced_ratio = measured.pop("traced_over_untraced")
 
     if args.update:
         with open(BASELINES, "w") as f:
@@ -119,6 +151,11 @@ def main() -> int:
             failures.append(
                 f"{key}: {got:.4f} > {args.slack:.1f}x baseline {ref:.4f}"
             )
+    if traced_ratio > TRACED_BOUND:
+        failures.append(
+            f"traced_over_untraced: {traced_ratio:.4f} > fixed "
+            f"{TRACED_BOUND}x tracing-overhead bound"
+        )
     if failures:
         print("PERF REGRESSION (>{:.1f}x baseline):".format(args.slack))
         for fmsg in failures:

@@ -6,6 +6,7 @@ from tools.reprolint.passes import (
     ledger_completeness,
     pallas_kernels,
     retrace_smells,
+    span_discipline,
     tracer_hygiene,
 )
 
@@ -16,6 +17,7 @@ _MODULES = (
     pallas_kernels,
     ledger_completeness,
     retrace_smells,
+    span_discipline,
 )
 
 ALL_PASSES = {m.RULE: m.run for m in _MODULES}

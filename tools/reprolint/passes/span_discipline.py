@@ -1,0 +1,86 @@
+"""span-discipline — tracer spans in src/repro must be context-managed.
+
+``Tracer.span(...)`` returns a context manager; the paired
+``span_begin``/``span_end`` primitives exist only so that context
+manager has something to wrap.  A raw ``span_begin`` in library code is
+a leak waiting to happen: any exception (or early return) between begin
+and end leaves the span open forever — it silently drops out of
+``chrome_events()`` (open spans are not exportable) and its wall time
+vanishes from every ``RunReport``.  The tracing layer's credibility is
+its completeness, same argument as ledger-completeness.
+
+Flagged (in ``src/repro``, except ``telemetry/trace.py`` which owns the
+primitives):
+
+* any call to ``span_begin`` / ``span_end`` — use
+  ``with tracer.span(...)``;
+* a ``.span(...)`` call used as a bare expression statement — the
+  context manager is created and dropped, so nothing is ever timed.
+
+Calls spelled ``re_match.span()`` (no args, not a statement) are not
+flagged — the rule only fires on dropped span contexts and on the
+begin/end primitives by name.
+"""
+
+from __future__ import annotations
+
+import ast
+
+from tools.reprolint.core import Finding
+
+RULE = "span-discipline"
+
+_PRIMITIVES = {"span_begin", "span_end"}
+_OWNER = "telemetry/trace.py"
+
+
+def _callee_name(call: ast.Call) -> str | None:
+    if isinstance(call.func, ast.Attribute):
+        return call.func.attr
+    if isinstance(call.func, ast.Name):
+        return call.func.id
+    return None
+
+
+def run(ctx) -> list:
+    findings = []
+    for sf in ctx.files:
+        if sf.tree is None or not sf.rel.startswith("src/repro"):
+            continue
+        if sf.rel.endswith(_OWNER):
+            continue
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.Expr) and isinstance(
+                node.value, ast.Call
+            ):
+                call = node.value
+                if (
+                    _callee_name(call) == "span"
+                    and isinstance(call.func, ast.Attribute)
+                ):
+                    findings.append(Finding(
+                        path=sf.rel, line=call.lineno,
+                        col=call.col_offset + 1, rule=RULE,
+                        message=(
+                            ".span(...) used as a bare statement — the "
+                            "context manager is dropped unentered, so the "
+                            "span never closes and nothing is timed; use "
+                            "`with tracer.span(...):`"
+                        ),
+                    ))
+                    continue
+            if not isinstance(node, ast.Call):
+                continue
+            name = _callee_name(node)
+            if name in _PRIMITIVES:
+                findings.append(Finding(
+                    path=sf.rel, line=node.lineno,
+                    col=node.col_offset + 1, rule=RULE,
+                    message=(
+                        f"raw {name}(...) outside telemetry/trace.py — an "
+                        "exception between begin and end leaks the span "
+                        "(open spans are dropped from export); use the "
+                        "`with tracer.span(...):` context manager"
+                    ),
+                ))
+    return findings

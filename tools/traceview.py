@@ -1,0 +1,100 @@
+#!/usr/bin/env python
+"""Summarize a Chrome trace-event file written by ``Tracer.export_chrome``.
+
+Pure stdlib — usable on any machine (CI, a laptop reading a trace
+scp'd off a worker) without jax or the repo on PYTHONPATH::
+
+    python tools/traceview.py run.trace.json
+    python tools/traceview.py run.trace.json --sort total --top 20
+
+Prints one row per span name (count, total/mean/max duration, % of the
+trace's busiest track) followed by the counter samples.  For the full
+timeline, load the same file in Perfetto (https://ui.perfetto.dev) or
+``chrome://tracing`` — this tool is the terminal-sized view of it.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def summarize(events: list) -> tuple[dict, dict]:
+    """Aggregate complete ("X") events by name; collect "C" counters."""
+    spans: dict = {}
+    counters: dict = {}
+    for e in events:
+        ph = e.get("ph")
+        if ph == "X":
+            agg = spans.setdefault(
+                e["name"], {"count": 0, "total_us": 0.0, "max_us": 0.0}
+            )
+            dur = float(e.get("dur", 0.0))
+            agg["count"] += 1
+            agg["total_us"] += dur
+            agg["max_us"] = max(agg["max_us"], dur)
+        elif ph == "C":
+            counters[e["name"]] = e.get("args", {}).get("value")
+    return spans, counters
+
+
+def _fmt_us(us: float) -> str:
+    if us >= 1e6:
+        return f"{us / 1e6:.3f}s"
+    if us >= 1e3:
+        return f"{us / 1e3:.2f}ms"
+    return f"{us:.0f}us"
+
+
+def render(spans: dict, counters: dict, *, sort: str, top: int) -> str:
+    key = {"total": "total_us", "max": "max_us", "count": "count"}[sort]
+    rows = sorted(spans.items(), key=lambda kv: -kv[1][key])[:top]
+    denom = max((a["total_us"] for a in spans.values()), default=0.0)
+    w = max([len(n) for n, _ in rows] + [4])
+    out = [
+        f"{'span':<{w}}  {'count':>6}  {'total':>10}  {'mean':>10}  "
+        f"{'max':>10}  {'%':>6}"
+    ]
+    for name, a in rows:
+        mean = a["total_us"] / a["count"]
+        pct = 100.0 * a["total_us"] / denom if denom else 0.0
+        out.append(
+            f"{name:<{w}}  {a['count']:>6}  {_fmt_us(a['total_us']):>10}  "
+            f"{_fmt_us(mean):>10}  {_fmt_us(a['max_us']):>10}  {pct:>5.1f}%"
+        )
+    if counters:
+        out.append("")
+        cw = max(len(n) for n in counters)
+        for name in sorted(counters):
+            out.append(f"{name:<{cw}}  {counters[name]}")
+    return "\n".join(out)
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(
+        description="summarize a Tracer.export_chrome trace file"
+    )
+    ap.add_argument("trace", help="path to the trace-event JSON")
+    ap.add_argument(
+        "--sort", choices=("total", "max", "count"), default="total",
+        help="span ordering (default: total duration)",
+    )
+    ap.add_argument("--top", type=int, default=40, help="max span rows")
+    args = ap.parse_args(argv)
+
+    with open(args.trace) as f:
+        payload = json.load(f)
+    events = (
+        payload["traceEvents"] if isinstance(payload, dict) else payload
+    )
+    spans, counters = summarize(events)
+    if not spans and not counters:
+        print("no span or counter events found", file=sys.stderr)
+        return 1
+    print(render(spans, counters, sort=args.sort, top=args.top))
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
