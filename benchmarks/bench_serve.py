@@ -1,12 +1,24 @@
-"""Serving throughput: batch-bucket size sweep × placement (local vs mesh).
+"""Serving throughput: bucket sweep (classical) + continuous vs bucketed LM.
 
-Drives a trained linear-GD model through ``ServeEngine``/``MicroBatcher``
-at each batch bucket and measures steady-state requests/s after warmup
-(compile excluded), plus per-request wire bytes from the inference
-ledger.  The bucket sweep is the batcher's core trade: larger buckets
-amortize dispatch, smaller ones bound padding waste and latency.  Writes
-``BENCH_serve.json`` next to the repo root for the perf trajectory; also
-pluggable into ``benchmarks.run``.
+Two workloads:
+
+* **Bucket sweep** — a trained linear-GD model through
+  ``ServeEngine``/``MicroBatcher`` at each batch bucket, measuring
+  steady-state requests/s after warmup (compile excluded) plus
+  per-request wire bytes.  Larger buckets amortize dispatch, smaller
+  ones bound padding waste and latency.
+* **Poisson LM trace** — a tiny LM served twice over the SAME
+  Poisson-arrival request trace (mixed generation lengths): the
+  fixed-bucket baseline (every request in a bucket decodes
+  ``GEN_MAX`` tokens — early finishers stall their batch) vs the
+  continuous-batching ``ContinuousLMEngine`` (slots retire and refill
+  independently over the paged KV cache).  Reported as *useful*
+  tokens/s — requested tokens over makespan — so the baseline pays for
+  the tokens nobody asked for.  The ratio is the PR's headline number
+  and is bounded in ``tools/perf_smoke.py``.
+
+Writes ``BENCH_serve.json`` next to the repo root for the perf
+trajectory; also pluggable into ``benchmarks.run``.
 
 Run:
   PYTHONPATH=src python -m benchmarks.bench_serve
@@ -26,12 +38,19 @@ import numpy as np
 
 from repro import api
 from repro.ml.linear import lsq_loss
-from repro.serve import MicroBatcher, ServeEngine, ServeMetrics
+from repro.serve import ContinuousLMEngine, MicroBatcher, ServeEngine, ServeMetrics
 from repro.telemetry import RunReport, Tracer
 
 K, NK, N = 8, 64, 256
 BUCKETS = (1, 4, 16, 64)
 REQUESTS = 256
+
+# Poisson LM trace
+LM_REQUESTS = 24
+LM_PROMPT = 16
+LM_GEN_MAX = 16
+LM_SLOTS = 4
+LM_ARRIVAL_MEAN_S = 0.002
 
 
 def _trained():
@@ -56,6 +75,83 @@ def _throughput(engine, bucket: int, queries: np.ndarray) -> float:
     for t in tickets:
         t.result()
     return len(queries) / (time.perf_counter() - t0)
+
+
+def _lm_setup():
+    from repro.models import transformer as tf
+    from repro.models.config import ModelConfig
+
+    cfg = ModelConfig(
+        name="bench-lm", vocab_size=512, d_model=64, num_layers=4,
+        num_heads=8, num_kv_heads=4, head_dim=8, d_ff=256,
+        compute_dtype="float32", param_dtype="float32",
+    )
+    params = tf.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(7)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(LM_REQUESTS, LM_PROMPT)
+    ).astype(np.int32)
+    max_new = rng.integers(4, LM_GEN_MAX + 1, size=LM_REQUESTS)
+    arrivals = np.cumsum(rng.exponential(LM_ARRIVAL_MEAN_S, size=LM_REQUESTS))
+    return cfg, params, prompts, max_new, arrivals
+
+
+def _lm_continuous(cfg, params, prompts, max_new, arrivals, *, tracer=None):
+    """Replay the trace through the continuous engine; returns
+    (useful tokens/s, engine)."""
+    engine = ContinuousLMEngine(
+        cfg, params, n_slots=LM_SLOTS, page_size=8,
+        max_seq=LM_PROMPT + LM_GEN_MAX, tracer=tracer, tag="serve/bench-lm",
+    )
+    engine.submit(prompts[0], max_new=2).result()  # compile outside the clock
+    t0 = time.perf_counter()
+    i, tickets = 0, []
+    while i < len(prompts) or engine.sched.n_active or engine.sched.backlog:
+        now = time.perf_counter() - t0
+        while i < len(prompts) and arrivals[i] <= now:
+            tickets.append(engine.submit(prompts[i], max_new=int(max_new[i])))
+            i += 1
+        if engine.step() == 0 and i < len(prompts):
+            time.sleep(arrivals[i] - now if arrivals[i] > now else 0)
+    for t in tickets:
+        t.result()
+    makespan = time.perf_counter() - t0
+    return int(max_new.sum()) / makespan, engine
+
+
+def _lm_bucketed(cfg, params, prompts, max_new, arrivals):
+    """Replay the same trace through the fixed-bucket baseline: every
+    request in a flushed bucket decodes LM_GEN_MAX tokens regardless of
+    how few it asked for."""
+    from repro.api.strategy import OptimizerStrategy
+    from repro.launch.serve import lm_predict_fn
+
+    strategy = OptimizerStrategy(
+        None, None, predict_fn=lm_predict_fn(cfg, gen=LM_GEN_MAX)
+    )
+    engine = ServeEngine(strategy, params, tag="serve/bench-lm")
+    batcher = MicroBatcher(engine, max_batch=LM_SLOTS, timeout_s=0.003)
+    for p in prompts[:LM_SLOTS]:  # compile the full bucket outside the clock
+        batcher.submit(p)
+    batcher.flush()
+    t0 = time.perf_counter()
+    i, tickets = 0, []
+    while i < len(prompts) or batcher.pending() or not all(
+        t.done for t in tickets
+    ):
+        now = time.perf_counter() - t0
+        while i < len(prompts) and arrivals[i] <= now:
+            tickets.append(batcher.submit(prompts[i]))
+            i += 1
+        if not batcher.poll():
+            if i < len(prompts):
+                time.sleep(arrivals[i] - now if arrivals[i] > now else 0)
+            else:
+                time.sleep(batcher.timeout_s / 4)  # tail: wait out the flush
+    for t in tickets:
+        t.result()
+    makespan = time.perf_counter() - t0
+    return int(max_new.sum()) / makespan
 
 
 def run(rows):
@@ -94,19 +190,53 @@ def run(rows):
         (b["requests_per_s"], k)
         for k, b in results["placements"]["local"].items()
     )
+
+    # -- Poisson LM trace: continuous vs fixed-bucket, same trace ------------
+    cfg, params, prompts, max_new, arrivals = _lm_setup()
+    bucketed_tps = _lm_bucketed(cfg, params, prompts, max_new, arrivals)
+    tracer = Tracer()
+    cont_tps, cont_engine = _lm_continuous(
+        cfg, params, prompts, max_new, arrivals, tracer=tracer
+    )
+    stats = cont_engine.stats()
+    results["lm_poisson"] = {
+        "requests": LM_REQUESTS,
+        "prompt_len": LM_PROMPT,
+        "gen_max": LM_GEN_MAX,
+        "slots": LM_SLOTS,
+        "useful_tokens": int(max_new.sum()),
+        "continuous_tokens_per_s": cont_tps,
+        "bucketed_tokens_per_s": bucketed_tps,
+        "slot_utilization": stats["slot_utilization"],
+        "p50_token_ms": stats["p50_token_ms"],
+        "p99_token_ms": stats["p99_token_ms"],
+        "p50_latency_ms": stats["p50_latency_ms"],
+        "p99_latency_ms": stats["p99_latency_ms"],
+        "kernel_hits": dict(cont_engine.kernel_hits),
+    }
+    rows.append(("serve_lm_bucketed", 1e6 / bucketed_tps,
+                 f"{bucketed_tps:.0f}tok/s"))
+    rows.append(("serve_lm_continuous", 1e6 / cont_tps,
+                 f"{cont_tps:.0f}tok/s"))
+
     results["derived"] = {
         "best_local_bucket": best[1],
         "bucket_speedup_vs_b1": best[0]
         / results["placements"]["local"][BUCKETS[0]]["requests_per_s"],
+        "continuous_over_bucketed_tokens_per_s": cont_tps / bucketed_tps,
     }
 
-    # one traced serving pass at the best bucket → RunReport markdown in
-    # the sidecar (queue waits, predict spans, latency percentiles, pad
-    # fraction alongside the raw throughput numbers)
-    tracer = Tracer()
-    engine = ServeEngine.from_fit(res, strategy, tracer=tracer)
+    # RunReport markdown sidecars: one traced pass of the classical sweep
+    # at its best bucket, plus the continuous LM engine's report (token
+    # throughput, slot utilization, decode kernel hits, spans)
+    gd_tracer = Tracer()
+    engine = ServeEngine.from_fit(res, strategy, tracer=gd_tracer)
     _throughput(engine, int(best[1]), queries)
-    results["run_report_md"] = RunReport.from_serve(engine).to_markdown()
+    results["run_report_md"] = (
+        RunReport.from_serve(engine).to_markdown()
+        + "\n"
+        + RunReport.from_serve(cont_engine).to_markdown()
+    )
     out = os.path.abspath(os.path.join(os.path.dirname(__file__), "..",
                                        "BENCH_serve.json"))
     with open(out, "w") as f:

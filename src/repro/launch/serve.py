@@ -142,6 +142,40 @@ def lm_predict_fn(cfg, *, gen: int, temperature: float = 0.0, seed: int = 0):
 # CLI
 # ----------------------------------------------------------------------------
 
+def _serve_continuous(args):
+    """Continuous-batching LM serving: requests join and retire
+    independently over a paged KV cache (see docs/SERVING.md)."""
+    from repro.serve import ContinuousLMEngine
+    from repro.telemetry.report import RunReport
+    from repro.telemetry.trace import Tracer
+
+    cfg = get_config(args.arch)
+    if args.reduced:
+        cfg = cfg.reduced()
+    params = tf.init_params(jax.random.key(args.seed), cfg)
+    tracer = Tracer()
+    engine = ContinuousLMEngine(
+        cfg, params, n_slots=args.batch, page_size=args.page_size,
+        max_seq=args.prompt_len + args.gen,
+        temperature=args.temperature, seed=args.seed,
+        tracer=tracer, tag=f"serve/{cfg.name}",
+    )
+    rng = np.random.default_rng(args.seed + 1)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(args.requests, args.prompt_len)
+    ).astype(np.int32)
+    print(f"continuous serving {cfg.name} (slots={args.batch}, "
+          f"page_size={args.page_size}, plan={engine.kernel_plan})")
+    tickets = [engine.submit(p, max_new=args.gen) for p in prompts]
+    engine.run_until_idle()
+    outs = np.stack([t.result() for t in tickets])
+    print(json.dumps({k: round(v, 4) if isinstance(v, float) else v
+                      for k, v in engine.stats().items()}))
+    print(RunReport.from_serve(engine).to_markdown())
+    print("sample:", outs[0].tolist())
+    return outs
+
+
 def _serve_arch(args):
     from repro.api.strategy import OptimizerStrategy
     from repro.serve import MicroBatcher, ServeEngine
@@ -280,6 +314,11 @@ def main(argv=None):
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--temperature", type=float, default=0.0)
+    ap.add_argument("--continuous", action="store_true",
+                    help="continuous batching: slot-scheduled decode over "
+                         "a paged KV cache (--batch = n_slots)")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="tokens per KV page (continuous path)")
     ap.add_argument("--timeout-ms", type=float, default=10.0)
     ap.add_argument("--registry", default="",
                     help="model registry root (strategy path)")
@@ -294,6 +333,8 @@ def main(argv=None):
         return _serve_strategy(args)
     if not args.arch:
         args.arch = "qwen2-1.5b"
+    if args.continuous:
+        return _serve_continuous(args)
     return _serve_arch(args)
 
 

@@ -2,7 +2,11 @@
 
 Reference (XLA) path; the Pallas flash kernel in
 ``repro.kernels.flash_attention`` is a drop-in for the train/prefill core
-(``use_kernel=True`` on TPU).
+(``use_kernel=True`` on TPU), and the single-token decode path can route
+through ``repro.kernels.decode_attention`` (``decode_attn="pallas"``) or
+its bit-equal jitted XLA reference (``decode_attn="xla"`` — the explicit
+fallback ``decode_kernel_plan`` reports).  ``decode_attn="off"`` keeps
+the historical ``_sdpa`` decode math untouched.
 """
 
 from __future__ import annotations
@@ -10,7 +14,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.models.cache import KVCache
+from repro.models.cache import KVCache, PagedKVCache, paged_append, paged_view
 from repro.models.config import ModelConfig
 from repro.models.layers import apply_mrope, apply_rope, dense, dense_init
 from repro.sharding.rules import current_mesh_context, maybe_shard
@@ -67,6 +71,61 @@ def _sdpa_q_chunked(q, k, v, *, scale, q_chunk: int, window: int = 0):
     return outs.swapaxes(0, 1).reshape(B, T, H, D)
 
 
+def resolve_decode_attn(use_kernel, *, sliding_window: int = 0) -> str:
+    """Map the public ``use_kernel`` knob (True / False / "auto") to the
+    static decode-attention implementation tag: "pallas" (the Pallas
+    kernel — forced, or auto on TPU) or "xla" (the jitted reference,
+    bit-equal to the kernel).  Sliding-window attention has no kernel
+    path and raises rather than silently changing semantics."""
+    if sliding_window > 0:
+        raise ValueError(
+            "decode_attention has no sliding-window support — serve "
+            "sliding-window models with decode_attn='off'"
+        )
+    if use_kernel == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "xla"
+    return "pallas" if use_kernel else "xla"
+
+
+def decode_kernel_plan(cfg: ModelConfig, *, use_kernel="auto") -> dict:
+    """Which implementation the single-token decode path will take, and
+    why — the ``kernel_plan``-style report serving surfaces so a run
+    claiming kernel speed can't silently be on the fallback."""
+    if cfg.sliding_window > 0:
+        return {
+            "path": "off",
+            "reason": f"sliding_window={cfg.sliding_window} (no kernel path)",
+        }
+    backend = jax.default_backend()
+    path = resolve_decode_attn(use_kernel)
+    if path == "pallas":
+        reason = (
+            "forced by use_kernel=True" if use_kernel is True
+            else f"backend={backend}"
+        )
+        if backend != "tpu":
+            reason += " (interpret mode)"
+    else:
+        reason = (
+            f"backend={backend} — jitted XLA reference (bit-equal "
+            "to the kernel)"
+        )
+    return {"path": path, "reason": reason, "backend": backend}
+
+
+def _decode_attend(q1, k_all, v_all, valid_len, *, impl: str):
+    """One-token attention over a dense cache view via the decode kernel
+    ("pallas") or its bit-equal jitted reference ("xla").
+    q1: (B, Hq, D); k/v: (B, S, Hkv, D); valid_len: (B,) or scalar."""
+    from repro.kernels.decode_attention import ops as da_ops
+
+    if impl == "pallas":
+        return da_ops.decode_attention(q1, k_all, v_all, valid_len)
+    if impl == "xla":
+        return da_ops.decode_attention_xla(q1, k_all, v_all, valid_len)
+    raise ValueError(f"unknown decode_attn impl {impl!r}")
+
+
 def causal_mask(T: int, S: int, *, offset: int = 0, window: int = 0) -> jnp.ndarray:
     """(T, S) mask; query i attends key j iff j <= i+offset (and within the
     sliding window when ``window > 0``)."""
@@ -84,13 +143,23 @@ def attn_apply(
     x: jnp.ndarray,
     *,
     positions: jnp.ndarray,
-    cache: KVCache | None = None,
+    cache: KVCache | PagedKVCache | None = None,
     mrope_positions: jnp.ndarray | None = None,
     use_kernel: bool = False,
+    pages: tuple | None = None,
+    decode_attn: str = "off",
 ):
     """GQA attention.  Train/prefill when ``cache is None``; otherwise decode:
     append x's (single or few) tokens at ``cache.index`` and attend over the
-    full cache."""
+    full cache.
+
+    A ``PagedKVCache`` cache decodes through the block table instead:
+    ``pages=(block, length)`` (slot → page ids, per-slot fill counts) are
+    jit arguments, the new token is scattered into the arena and
+    attention runs on the gathered per-slot view via ``_decode_attend``.
+    ``decode_attn`` ("off" | "xla" | "pallas") statically picks the
+    single-token decode implementation; "off" keeps the ``_sdpa`` path.
+    """
     B, T, d = x.shape
     H, Hkv, D = cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
     cd = x.dtype
@@ -125,6 +194,19 @@ def attn_apply(
                 mask = causal_mask(T, T, window=cfg.sliding_window)
                 out = _sdpa(q, k, v, mask, scale=scale)
         new_cache = None
+    elif isinstance(cache, PagedKVCache):
+        if T != 1:
+            raise ValueError("paged decode appends exactly one token")
+        if cfg.sliding_window > 0:
+            raise ValueError("paged decode needs full causal attention")
+        block, length = pages
+        new_cache = paged_append(cache, block, length, k[:, 0], v[:, 0])
+        k_all, v_all = paged_view(new_cache, block)
+        impl = decode_attn if decode_attn != "off" else "xla"
+        out = _decode_attend(
+            q[:, 0], k_all.astype(cd), v_all.astype(cd), length + 1,
+            impl=impl,
+        )[:, None]  # (B, 1, Hq, D)
     else:
         S = cache.k.shape[1]
         idx = cache.index
@@ -141,13 +223,20 @@ def attn_apply(
             # combine instead of all-gathering K/V)
             k_all = maybe_shard(k_all, "batch", "kvseq", None, None)
             v_all = maybe_shard(v_all, "batch", "kvseq", None, None)
-        # valid keys: j <= idx + i (supports T >= 1 appended tokens)
-        qpos = idx + jnp.arange(T)[:, None]
-        kpos = jnp.arange(S)[None, :]
-        mask = kpos <= qpos
-        if cfg.sliding_window > 0:
-            mask &= kpos > qpos - cfg.sliding_window
-        out = _sdpa(q, k_all.astype(cd), v_all.astype(cd), mask, scale=scale)
+        if decode_attn != "off" and T == 1 and cfg.sliding_window == 0:
+            valid = jnp.broadcast_to(idx + 1, (B,))
+            out = _decode_attend(
+                q[:, 0], k_all.astype(cd), v_all.astype(cd), valid,
+                impl=decode_attn,
+            )[:, None]
+        else:
+            # valid keys: j <= idx + i (supports T >= 1 appended tokens)
+            qpos = idx + jnp.arange(T)[:, None]
+            kpos = jnp.arange(S)[None, :]
+            mask = kpos <= qpos
+            if cfg.sliding_window > 0:
+                mask &= kpos > qpos - cfg.sliding_window
+            out = _sdpa(q, k_all.astype(cd), v_all.astype(cd), mask, scale=scale)
         new_cache = KVCache(k=k_all, v=v_all, index=idx + T)
 
     y = dense(p["wo"], out.reshape(B, T, H * D))

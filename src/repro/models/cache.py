@@ -3,6 +3,17 @@
 ``serve_step`` lowers ONE new token against a cache of ``seq_len`` — these
 structures are what gets sharded by the decode sharding rules (KV sequence
 dim over the data axis for `long_500k`, heads over the model axis).
+
+Continuous-batching serving adds a second cache family: ``PagedKVCache``
+is a physical **page arena** shared by every in-flight sequence, addressed
+through a per-slot **block table** (slot → ordered physical page ids).
+Long and short sequences draw from the same pool, so the arena can be
+provisioned below ``n_slots × max_seq_len``; the host-side
+``PageAllocator`` owns which pages are free.  Page 0 is the reserved
+**null page**: freed/inactive slots point their whole block row at it, so
+the compiled decode step can keep writing "their" keys without masking —
+the writes land in garbage memory no live sequence can see.  That is what
+makes join/leave a pure data change (no retrace).
 """
 
 from __future__ import annotations
@@ -82,3 +93,146 @@ def slstm_cache_init(batch: int, d: int) -> SLSTMCache:
         h=jnp.zeros((batch, d), jnp.float32),
         m=jnp.full((batch, d), -1e30, jnp.float32),
     )
+
+
+# ----------------------------------------------------------------------------
+# Paged KV cache — the continuous-batching serving arena
+# ----------------------------------------------------------------------------
+
+#: physical page id every freed / inactive block-table entry points at;
+#: never handed out by ``PageAllocator``, so masked writes are harmless
+NULL_PAGE = 0
+
+
+class PagedKVCache(NamedTuple):
+    """Physical KV page arena for one layer.
+
+    Unlike ``KVCache`` there is no per-sequence axis and no fill index:
+    position is owned by the caller's block table + per-slot lengths
+    (host-managed, passed as jit *arguments* so slot churn never
+    retraces).
+    """
+
+    k: jnp.ndarray  # (n_pages, page_size, H_kv, D)
+    v: jnp.ndarray  # (n_pages, page_size, H_kv, D)
+
+
+def paged_kv_cache_init(
+    n_pages: int, page_size: int, n_kv: int, head_dim: int, dtype
+) -> PagedKVCache:
+    return PagedKVCache(
+        k=jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+        v=jnp.zeros((n_pages, page_size, n_kv, head_dim), dtype),
+    )
+
+
+def paged_view(cache: PagedKVCache, block: jnp.ndarray):
+    """Gather each slot's pages into a dense per-slot view.
+
+    ``block``: (n_slots, pages_per_slot) physical page ids.  Returns
+    ``(k, v)`` of shape (n_slots, pages_per_slot · page_size, H_kv, D) —
+    the contiguous layout the decode-attention kernel wants; positions
+    beyond a slot's length hold stale/null-page garbage and must be
+    masked by the attention's ``valid_len``.
+    """
+    n_slots, pp = block.shape
+    P = cache.k.shape[1]
+    tail = cache.k.shape[2:]
+    k = jnp.take(cache.k, block.reshape(-1), axis=0)
+    v = jnp.take(cache.v, block.reshape(-1), axis=0)
+    return (
+        k.reshape(n_slots, pp * P, *tail),
+        v.reshape(n_slots, pp * P, *tail),
+    )
+
+
+def paged_append(
+    cache: PagedKVCache,
+    block: jnp.ndarray,  # (n_slots, pages_per_slot)
+    length: jnp.ndarray,  # (n_slots,) — tokens already stored per slot
+    k_tok: jnp.ndarray,  # (n_slots, H_kv, D) — one new token per slot
+    v_tok: jnp.ndarray,
+) -> PagedKVCache:
+    """Scatter one token per slot at its next logical position.
+
+    Inactive slots need no masking: their block row is all ``NULL_PAGE``,
+    so the write lands in the trash page (several inactive slots may
+    collide there — by design).
+    """
+    P = cache.k.shape[1]
+    page = jnp.take_along_axis(block, (length // P)[:, None], axis=1)[:, 0]
+    off = length % P
+    return PagedKVCache(
+        k=cache.k.at[page, off].set(k_tok.astype(cache.k.dtype)),
+        v=cache.v.at[page, off].set(v_tok.astype(cache.v.dtype)),
+    )
+
+
+def paged_write(
+    cache: PagedKVCache,
+    block_row: jnp.ndarray,  # (pages_per_slot,) — ONE slot's pages
+    k_seq: jnp.ndarray,  # (S, H_kv, D) — prefilled keys, rows < n_valid real
+    v_seq: jnp.ndarray,
+    n_valid: jnp.ndarray,
+) -> PagedKVCache:
+    """Write a prefilled sequence into one slot's pages (the join path).
+
+    Rows ≥ ``n_valid`` (prompt-bucket padding) are redirected to the null
+    page instead of being masked out, so the scatter shape is static.
+    """
+    P = cache.k.shape[1]
+    S = k_seq.shape[0]
+    pos = jnp.arange(S)
+    page = jnp.where(pos < n_valid, block_row[pos // P], NULL_PAGE)
+    off = pos % P
+    return PagedKVCache(
+        k=cache.k.at[page, off].set(k_seq.astype(cache.k.dtype)),
+        v=cache.v.at[page, off].set(v_seq.astype(cache.v.dtype)),
+    )
+
+
+class PageAllocator:
+    """Host-side free-list allocator over a ``PagedKVCache`` arena.
+
+    LIFO reuse keeps recently-freed (cache-warm) pages hot.  Page
+    ``NULL_PAGE`` (0) is reserved and never allocated.  Invariants are
+    enforced loudly: freeing a page that isn't live raises, allocation
+    beyond capacity returns None (callers queue the request instead of
+    corrupting a live slot).
+    """
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need ≥ 2 pages (page 0 is the null page)")
+        self.n_pages = n_pages
+        self._free = list(range(n_pages - 1, 0, -1))  # pop() yields 1, 2, …
+        self._used: set = set()
+
+    @property
+    def free_pages(self) -> int:
+        return len(self._free)
+
+    @property
+    def used_pages(self) -> int:
+        return len(self._used)
+
+    def alloc(self, n: int) -> list | None:
+        """``n`` physical page ids, or None if the arena can't supply them
+        (all-or-nothing: a partial allocation is never handed out)."""
+        if n < 0:
+            raise ValueError(f"alloc({n})")
+        if n > len(self._free):
+            return None
+        pages = [self._free.pop() for _ in range(n)]
+        self._used.update(pages)
+        return pages
+
+    def free(self, pages) -> None:
+        for p in pages:
+            if p not in self._used:
+                raise ValueError(
+                    f"free() of page {p} which is not allocated "
+                    f"(double free or foreign page)"
+                )
+            self._used.remove(p)
+            self._free.append(p)

@@ -171,6 +171,8 @@ def apply_layer(
     positions=None,
     mrope_positions=None,
     mla_absorb=False,
+    pages=None,
+    decode_attn="off",
 ):
     aux = jnp.zeros((), jnp.float32)
     hn = rmsnorm(p["mixer_norm"], h, eps=cfg.rms_eps)
@@ -179,6 +181,8 @@ def apply_layer(
         kw["positions"] = positions
     if spec.mixer == "attn":
         kw["mrope_positions"] = mrope_positions
+        kw["pages"] = pages
+        kw["decode_attn"] = decode_attn
     if spec.mixer == "mla":
         kw["absorb"] = mla_absorb
     mix, new_cache = _MIXER_APPLY[spec.mixer](p["mixer"], cfg, hn, cache=cache, **kw)
@@ -307,6 +311,8 @@ def forward(
     mla_absorb: bool = False,
     return_hidden: bool = False,
     skip_logits: bool = False,
+    pages: tuple | None = None,
+    decode_attn: str = "off",
 ):
     """Returns (logits, aux_loss, new_cache[, hidden])."""
     cd = jnp.dtype(cfg.compute_dtype)
@@ -346,6 +352,8 @@ def forward(
                     positions=positions,
                     mrope_positions=mrope_positions,
                     mla_absorb=mla_absorb,
+                    pages=pages,
+                    decode_attn=decode_attn,
                 )
                 aux = aux + a
                 if c_out is not None:
@@ -496,7 +504,7 @@ def loss_fn(params, cfg: ModelConfig, batch):
 
 
 def decode_step(params, cfg: ModelConfig, tokens, cache, *, positions=None,
-                mla_absorb: bool = False):
+                mla_absorb: bool = False, decode_attn: str = "off"):
     """One serve step: tokens (B, 1) + cache → (logits (B,1,V), new_cache)."""
     if positions is None:
         # position = current cache fill index (same for all layers); pure
@@ -507,6 +515,80 @@ def decode_step(params, cfg: ModelConfig, tokens, cache, *, positions=None,
         else:
             positions = jnp.zeros(tokens.shape, jnp.int32)
     logits, aux, new_cache = forward(
-        params, cfg, tokens, positions=positions, cache=cache, mla_absorb=mla_absorb
+        params, cfg, tokens, positions=positions, cache=cache,
+        mla_absorb=mla_absorb, decode_attn=decode_attn,
     )
     return logits, new_cache
+
+
+# ----------------------------------------------------------------------------
+# Paged decode plane (continuous-batching serving)
+# ----------------------------------------------------------------------------
+
+def _is_paged(x) -> bool:
+    return isinstance(x, cache_lib.PagedKVCache)
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int, dtype):
+    """Stacked per-segment ``PagedKVCache`` arenas (same tree shape as
+    ``init_cache`` so ``forward`` scans them identically).  Only pure-attn
+    stacks have a paged decode path — recurrent/MLA mixers keep their own
+    cache families."""
+    for spec in layer_specs(cfg):
+        if spec.mixer != "attn":
+            raise ValueError(
+                f"paged decode supports attn-only stacks, got mixer "
+                f"{spec.mixer!r}"
+            )
+    caches = {}
+    for si, seg in enumerate(segs_of(cfg)):
+        reps = []
+        for _ in range(seg.repeats):
+            unit_c = {
+                f"l{li}": cache_lib.paged_kv_cache_init(
+                    n_pages, page_size, cfg.num_kv_heads, cfg.head_dim, dtype
+                )
+                for li in range(len(seg.unit))
+            }
+            reps.append(unit_c)
+        caches[f"seg{si}"] = _stack(reps)
+    return caches
+
+
+def paged_decode_step(params, cfg: ModelConfig, tokens, cache, block, length,
+                      *, decode_attn: str = "xla"):
+    """One continuous-batching step: advance every slot one token.
+
+    tokens: (n_slots, 1); block: (n_slots, pages_per_slot) physical page
+    ids; length: (n_slots,) tokens already cached per slot.  Returns
+    (logits (n_slots, 1, V), new_cache).  Inactive slots (block row all
+    NULL_PAGE, length 0) compute garbage harmlessly — rows are
+    independent and their writes land in the null page.
+    """
+    positions = jnp.broadcast_to(length[:, None], tokens.shape)
+    logits, _, new_cache = forward(
+        params, cfg, tokens, positions=positions, cache=cache,
+        pages=(block, length), decode_attn=decode_attn,
+    )
+    return logits, new_cache
+
+
+def paged_insert_prompt(paged, dense, block_row, n_valid):
+    """Scatter a B=1 prefilled dense cache into one slot's pages (join).
+
+    ``paged``: tree from ``init_paged_cache``; ``dense``: tree from
+    ``init_cache(batch=1)`` after prefill, same segment structure.
+    ``block_row``: (pages_per_slot,) page ids for the joining slot;
+    ``n_valid``: prompt length (rows ≥ n_valid go to the null page, so
+    bucket padding in the prefilled cache never becomes visible).
+    """
+
+    def insert_one(pg, dn):
+        def per_rep(pk, pv, dk, dv):
+            return cache_lib.paged_write(
+                cache_lib.PagedKVCache(k=pk, v=pv), block_row,
+                dk[0], dv[0], n_valid,
+            )
+        return jax.vmap(per_rep)(pg.k, pg.v, dn.k, dn.v)
+
+    return jax.tree.map(insert_one, paged, dense, is_leaf=_is_paged)

@@ -12,7 +12,10 @@ compose à la carte:
 * ``ModelRegistry`` — name/version store over ``checkpoint/io`` with an
   atomic LATEST pointer (``repro.serve.registry``);
 * ``ServeMetrics``  — latency/throughput + ``CommLedger`` inference-byte
-  metering (``repro.serve.metrics``).
+  metering (``repro.serve.metrics``);
+* ``ContinuousLMEngine`` / ``DecodeScheduler`` — continuous-batching LM
+  decode over a paged KV cache: requests join and retire independently,
+  ONE compiled step advances every slot (``repro.serve.continuous``).
 
 Quickstart (see ``docs/SERVING.md``)::
 
@@ -26,11 +29,19 @@ Quickstart (see ``docs/SERVING.md``)::
 """
 
 from repro.serve.batcher import MicroBatcher, Ticket
+from repro.serve.continuous import (
+    ContinuousLMEngine,
+    DecodeScheduler,
+    EvictedError,
+)
 from repro.serve.engine import ServeEngine
 from repro.serve.metrics import ServeMetrics
 from repro.serve.registry import ModelRegistry
 
 __all__ = [
+    "ContinuousLMEngine",
+    "DecodeScheduler",
+    "EvictedError",
     "MicroBatcher",
     "ModelRegistry",
     "ServeEngine",

@@ -39,7 +39,12 @@ class Ticket:
     the request is still queued and WAITS if its batch is already in
     flight on another thread.  A predict failure resolves every ticket of
     the batch with the error, which ``result()`` re-raises — a request is
-    never silently lost."""
+    never silently lost.
+
+    The owner passed at construction just needs a ``flush(key=...)``
+    method serving the keyed request — the ``MicroBatcher`` here, or the
+    continuous-batching ``ContinuousLMEngine`` (which additionally fails
+    tickets on eviction via ``_fail``)."""
 
     __slots__ = ("_batcher", "_key", "_value", "_error", "_done")
 
@@ -164,14 +169,27 @@ class MicroBatcher:
 
     def poll(self) -> int:
         """Flush every group whose oldest request has waited ≥ timeout_s.
-        Returns the number of requests served."""
+        Returns the number of requests served.
+
+        Errors are isolated per group: a failing predict resolves THAT
+        group's tickets with the error (``result()`` re-raises it) and
+        polling continues — one poisoned shape group must not kill the
+        polling loop and leave every other group's tickets hanging until
+        their timeout.
+        """
         now = self._clock()
         with self._lock:
             due = [
                 key for key, grp in self._pending.items()
                 if grp and now - grp[0][2] >= self.timeout_s
             ]
-        return sum(self._flush_group(key) for key in due)
+        served = 0
+        for key in due:
+            try:
+                served += self._flush_group(key)
+            except Exception:
+                pass  # delivered to the group's tickets by _serve
+        return served
 
     def flush(self, key=None) -> int:
         """Serve everything queued (or one shape group). Returns count."""
@@ -215,7 +233,9 @@ class MicroBatcher:
                 if tr is not None else nullcontext()
             ):
                 Y = self._call(X, n)
-        except Exception as e:
+        except BaseException as e:
+            # BaseException: a KeyboardInterrupt mid-predict must still
+            # resolve the batch's tickets, or waiters hang to timeout
             for _, ticket, _ in grp:
                 ticket._fail(e)
             raise

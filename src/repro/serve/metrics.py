@@ -49,8 +49,18 @@ class ServeMetrics:
     batches: int = 0
     padded_slots: int = 0
     busy_s: float = 0.0
+    # continuous-decode accounting (zero for pure request/response serving)
+    tokens: int = 0
+    decode_steps: int = 0
+    decode_busy_s: float = 0.0
+    slot_active_acc: int = 0
+    slot_cap_acc: int = 0
+    evictions: int = 0
     started_at: float = field(default_factory=time.perf_counter)
     latencies_s: deque = field(
+        default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
+    )
+    token_latencies_s: deque = field(
         default_factory=lambda: deque(maxlen=LATENCY_WINDOW)
     )
     # batches resolve concurrently (the batcher runs predict outside its
@@ -93,11 +103,64 @@ class ServeMetrics:
                 kind, t, prev = self.ledger.events[idx]
                 self.ledger.events[idx] = (kind, t, prev + up + down)
 
+    def record_decode_step(
+        self, n_active: int, n_slots: int, latency_s: float
+    ) -> None:
+        """One continuous-batching decode step: ``n_active`` of
+        ``n_slots`` slots each advanced one token in ``latency_s``
+        (per-token latency is the step wall time — every active slot
+        shares it)."""
+        with self._lock:
+            self.tokens += n_active
+            self.decode_steps += 1
+            self.decode_busy_s += latency_s
+            self.busy_s += latency_s
+            self.slot_active_acc += n_active
+            self.slot_cap_acc += n_slots
+            if n_active:
+                self.token_latencies_s.append(latency_s)
+
+    def record_request_stream(
+        self,
+        n_tokens: int,
+        e2e_latency_s: float,
+        request: PyTree = None,
+        response: PyTree = None,
+        tag: str = "serve",
+    ) -> None:
+        """One retired generation request (continuous batching): its
+        end-to-end latency enters the request-latency window and its
+        prompt/generated-ids bytes are metered like ``record_batch``."""
+        with self._lock:
+            self.requests += 1
+            self.latencies_s.append(e2e_latency_s)
+            up = tree_bytes(request) if request is not None else 0
+            down = tree_bytes(response) if response is not None else 0
+            self.ledger.uplink_bytes += up
+            self.ledger.downlink_bytes += down
+            if up or down:
+                idx = self._event_idx.get(tag)
+                if idx is None:
+                    self.ledger.events.append(("inference", tag, up + down))
+                    self._event_idx[tag] = len(self.ledger.events) - 1
+                else:
+                    kind, t, prev = self.ledger.events[idx]
+                    self.ledger.events[idx] = (kind, t, prev + up + down)
+
+    def record_eviction(self, n: int = 1) -> None:
+        with self._lock:
+            self.evictions += n
+
     def summary(self) -> dict:
         with self._lock:
             lat = sorted(self.latencies_s)
+            tok_lat = sorted(self.token_latencies_s)
             requests, batches = self.requests, self.batches
             padded, busy = self.padded_slots, self.busy_s
+            tokens, steps = self.tokens, self.decode_steps
+            dec_busy = self.decode_busy_s
+            slot_act, slot_cap = self.slot_active_acc, self.slot_cap_acc
+            evictions = self.evictions
             up, down = self.ledger.uplink_bytes, self.ledger.downlink_bytes
         slots = requests + padded
         return {
@@ -115,4 +178,13 @@ class ServeMetrics:
             "pad_fraction": (padded / slots) if slots else 0.0,
             "request_bytes": up,
             "response_bytes": down,
+            # continuous-decode stats (all zero for request/response serving)
+            "tokens": tokens,
+            "tokens_per_s": tokens / max(dec_busy, 1e-9) if tokens else 0.0,
+            "decode_steps": steps,
+            "slot_utilization": (slot_act / slot_cap) if slot_cap else 0.0,
+            "evictions": evictions,
+            "p50_token_ms": 1e3 * _percentile(tok_lat, 0.50),
+            "p95_token_ms": 1e3 * _percentile(tok_lat, 0.95),
+            "p99_token_ms": 1e3 * _percentile(tok_lat, 0.99),
         }

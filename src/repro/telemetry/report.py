@@ -92,14 +92,24 @@ class RunReport:
 
     @classmethod
     def from_serve(cls, engine, tracer=None) -> "RunReport":
-        """Join a ``ServeEngine``'s ``ServeMetrics`` summary (latency
+        """Join a serving engine's ``ServeMetrics`` summary (latency
         percentiles, pad fraction, inference bytes) with its tracer
-        (defaults to the tracer the engine itself records into)."""
+        (defaults to the tracer the engine itself records into).
+        Accepts a ``ServeEngine`` or a ``ContinuousLMEngine`` — the
+        latter additionally contributes its decode-attention kernel plan
+        and per-implementation token hits (the serve-side
+        ``wire_kernel_hits``)."""
         data = {
             "kind": "serve",
             "serve": engine.stats(),
             "comm": engine.ledger.summary(),
         }
+        hits = getattr(engine, "kernel_hits", None)
+        if hits is not None:
+            data["decode_kernel_hits"] = dict(hits)
+            data["decode_kernel_plan"] = dict(
+                getattr(engine, "kernel_plan", {}) or {}
+            )
         cls._join_tracer(data, tracer if tracer is not None else engine.tracer)
         return cls(data)
 
@@ -168,6 +178,11 @@ class RunReport:
         hits = d.get("wire_kernel_hits")
         if hits:
             lines.append(f"- wire kernel hits: `{hits}`")
+        dhits = d.get("decode_kernel_hits")
+        if dhits:
+            plan = d.get("decode_kernel_plan", {})
+            via = f" via `{plan['path']}` ({plan['reason']})" if plan else ""
+            lines.append(f"- decode kernel hits: `{dhits}`{via}")
         counters = d.get("counters")
         if counters:
             lines.append(
@@ -190,4 +205,17 @@ class RunReport:
                     f"| {100 * serve['pad_fraction']:.1f}% |"
                 ),
             ]
+            if serve.get("tokens"):
+                lines += [
+                    "",
+                    "| tokens | tok/s | slot util | p50 token | p99 token |",
+                    "|---|---|---|---|---|",
+                    (
+                        f"| {serve['tokens']} "
+                        f"| {serve['tokens_per_s']:.0f} "
+                        f"| {100 * serve['slot_utilization']:.1f}% "
+                        f"| {serve['p50_token_ms']:.2f} ms "
+                        f"| {serve['p99_token_ms']:.2f} ms |"
+                    ),
+                ]
         return "\n".join(lines) + "\n"

@@ -39,6 +39,34 @@ def test_per_batch_valid_lengths():
     assert float(jnp.max(jnp.abs(out - exp))) < 2e-5
 
 
+@pytest.mark.parametrize("case", CASES)
+def test_xla_reference_bitexact_single_block(case):
+    """``decode_attention_xla`` (the ``use_kernel`` fallback) mirrors the
+    kernel's single-pass math, not softmax@v: on one KV block (bk ≥ S)
+    the two are BITWISE equal, so flipping the knob never changes a
+    served token."""
+    B, S, Hq, Hkv, D, vl = case
+    ks = jax.random.split(jax.random.key(sum(case)), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    out = ops.decode_attention(q, k, v, jnp.asarray(vl), bk=1024)
+    exp = ops.decode_attention_xla(q, k, v, jnp.asarray(vl))
+    assert jnp.array_equal(out, exp)
+
+
+def test_xla_reference_close_to_oracle():
+    B, S, Hq, Hkv, D = 2, 192, 8, 2, 32
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (B, Hq, D))
+    k = jax.random.normal(ks[1], (B, S, Hkv, D))
+    v = jax.random.normal(ks[2], (B, S, Hkv, D))
+    vl = jnp.asarray([100, 192])
+    out = ops.decode_attention_xla(q, k, v, vl)
+    exp = ref.decode_attention_ref(q, k, v, vl)
+    assert float(jnp.max(jnp.abs(out - exp))) < 2e-5
+
+
 def test_bf16_cache():
     B, S, Hq, Hkv, D = 2, 256, 8, 2, 32
     ks = jax.random.split(jax.random.key(1), 3)

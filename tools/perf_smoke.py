@@ -6,10 +6,11 @@ executors plus the compressed wire, and compares against the checked-in
 ``slack × baseline`` (default 2×) fails the run.
 
 The primary metrics are RATIOS (mesh/local, per-scenario-sweep/local,
-topk/dense, cold/warm amortization), which are machine-speed invariant —
-a slower CI runner shifts numerator and denominator together.  The
-absolute local wall time is checked too, with the same slack, as a
-backstop against global slowdowns the ratios cannot see.
+topk/dense, cold/warm amortization, bucketed/continuous LM serving),
+which are machine-speed invariant — a slower CI runner shifts numerator
+and denominator together.  The absolute local wall time is checked too,
+with the same slack, as a backstop against global slowdowns the ratios
+cannot see.
 
 One metric is held to a FIXED bound instead of the baseline×slack rule:
 ``traced_over_untraced`` — a warm mesh fit with a live
@@ -37,6 +38,8 @@ BASELINES = os.path.join(
 )
 
 SLACK = 2.0
+# tiny-LM serving comparison (continuous vs bucketed, mixed lengths)
+LM_REQUESTS, LM_PROMPT, LM_GEN_MAX, LM_SLOTS = 12, 8, 16, 4
 #: hard ceiling on tracer-on / tracer-off warm-fit wall time — the
 #: tracing layer's "zero overhead" contract, checked absolutely (no
 #: baseline, no slack)
@@ -110,7 +113,69 @@ def _measure() -> dict:
         "topk_over_dense": local_topk / local,
         "mesh_cold_over_warm": cold_mesh / mesh,
         "traced_over_untraced": traced / untraced,
+        "bucketed_over_continuous_tokens_per_s": _measure_lm_serving(),
     }
+
+
+def _measure_lm_serving() -> float:
+    """Useful-tokens/s ratio of the fixed-bucket LM baseline over the
+    continuous-batching engine on a saturated mixed-length trace — the
+    serving plane's machine-invariant contract (continuous must not
+    regress below the bucketed path; the whole point of the slot
+    scheduler is this ratio staying < 1)."""
+    import jax
+    import numpy as np
+
+    from repro.api.strategy import OptimizerStrategy
+    from repro.launch.serve import lm_predict_fn
+    from repro.models import transformer as tf
+    from repro.models.config import ModelConfig
+    from repro.serve import ContinuousLMEngine, MicroBatcher, ServeEngine
+
+    cfg = ModelConfig(
+        name="smoke-lm", vocab_size=256, d_model=32, num_layers=2,
+        num_heads=4, num_kv_heads=2, head_dim=8, d_ff=128,
+        compute_dtype="float32", param_dtype="float32",
+    )
+    params = tf.init_params(jax.random.key(0), cfg)
+    rng = np.random.default_rng(3)
+    prompts = rng.integers(
+        0, cfg.vocab_size, size=(LM_REQUESTS, LM_PROMPT)
+    ).astype(np.int32)
+    max_new = rng.integers(2, LM_GEN_MAX + 1, size=LM_REQUESTS)
+    useful = int(max_new.sum())
+
+    # bucketed baseline: every request in a bucket decodes LM_GEN_MAX
+    strategy = OptimizerStrategy(
+        None, None, predict_fn=lm_predict_fn(cfg, gen=LM_GEN_MAX)
+    )
+    b_engine = ServeEngine(strategy, params)
+    batcher = MicroBatcher(b_engine, max_batch=LM_SLOTS)
+    for p in prompts[:LM_SLOTS]:  # compile outside the clock
+        batcher.submit(p)
+    batcher.flush()
+    t0 = time.perf_counter()
+    tickets = [batcher.submit(p) for p in prompts]
+    batcher.flush()
+    for t in tickets:
+        t.result()
+    bucketed = useful / (time.perf_counter() - t0)
+
+    # continuous: slots retire early and refill from the backlog
+    c_engine = ContinuousLMEngine(
+        cfg, params, n_slots=LM_SLOTS, page_size=8,
+        max_seq=LM_PROMPT + LM_GEN_MAX,
+    )
+    c_engine.submit(prompts[0], max_new=2).result()  # compile
+    t0 = time.perf_counter()
+    tickets = [
+        c_engine.submit(p, max_new=int(m)) for p, m in zip(prompts, max_new)
+    ]
+    c_engine.run_until_idle()
+    for t in tickets:
+        t.result()
+    continuous = useful / (time.perf_counter() - t0)
+    return bucketed / continuous
 
 
 def main() -> int:
