@@ -29,6 +29,7 @@ MODULES = {
     "compression": "benchmarks.bench_compression",
     "fit_executors": "benchmarks.bench_fit_executors",
     "multipod": "benchmarks.bench_multipod",
+    "faults": "benchmarks.bench_faults",
     "serve": "benchmarks.bench_serve",
     "cascade_svm": "benchmarks.bench_cascade_svm",
     "gp_experts": "benchmarks.bench_gp_experts",

@@ -9,7 +9,12 @@ package factors that observation into three orthogonal protocols:
   ``sequential_server`` · ``stale_server`` · ``delay_line`` ·
   ``allreduce`` · ``admm_consensus``;
 * ``Wire``      — what crosses the network and what it costs
-  (``repro.api.wire``): dense · top-k · int8, each ± error feedback;
+  (``repro.api.wire``): dense · top-k · int8, each ± error feedback,
+  plus the privacy wires dp (clip + Gaussian noise) and secagg
+  (pairwise-mask secure aggregation), composable via ``"a>b"`` chains;
+* ``FaultPlan`` — seeded client-fleet realism (``repro.api.faults``):
+  per-round node dropout, straggler lag, and quorum rounds threaded
+  through any update/server transport via ``fit(..., faults=...)``;
 * ``Executor``  — WHERE the fit runs (``repro.api.executor``):
   ``local`` stacked scan · ``mesh`` shard_map node placement ·
   ``multipod`` hierarchical ``("pod", "data")`` placement with per-hop
@@ -32,6 +37,7 @@ migration guide from the historical per-algorithm entry points.
 """
 
 from repro.api.engine import FitResult, fit
+from repro.api.faults import FaultCarry, FaultPlan, make_fault_plan
 from repro.api.executor import (
     COMPOSED_EXECUTORS,
     EXECUTORS,
@@ -60,8 +66,11 @@ from repro.api.transport import (
     make_transport,
 )
 from repro.api.wire import (
+    ChainWire,
     CompressedWire,
     DenseWire,
+    DPWire,
+    SecAggWire,
     ThresholdWire,
     Wire,
     make_wire,
@@ -86,7 +95,13 @@ __all__ = [
     "DenseWire",
     "CompressedWire",
     "ThresholdWire",
+    "DPWire",
+    "SecAggWire",
+    "ChainWire",
     "make_wire",
+    "FaultPlan",
+    "FaultCarry",
+    "make_fault_plan",
     "Executor",
     "LocalExecutor",
     "MeshExecutor",

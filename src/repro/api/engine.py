@@ -43,6 +43,7 @@ import numpy as np
 
 from repro.core.allreduce import CommLedger
 from repro.api.executor import Executor, make_executor
+from repro.api.faults import FaultPlan, make_fault_plan
 from repro.api.strategy import Strategy
 from repro.api.transport import Transport, make_transport
 from repro.api.wire import Wire, make_wire
@@ -109,6 +110,7 @@ def fit(
     stream: PyTree = None,
     theta0: PyTree = None,
     carry=None,
+    faults: FaultPlan | None = None,
     tag: str = "fit",
     tracer=None,
     trace: str | None = None,
@@ -125,7 +127,9 @@ def fit(
         ``delay_line`` / ``allreduce`` / ``admm_consensus``, or a
         ``Transport`` instance.
       wire: ``"dense"``, ``"topk:<f>[+ef]"``, ``"thresh:<τ>[+ef]"``,
-        ``"int8[+ef]"`` or a ``Wire``.
+        ``"int8[+ef]"``, the privacy wires ``"dp:<clip>,<sigma>"`` /
+        ``"secagg"``, a ``">"``-chain of those
+        (``"dp:1.0,0.5>topk:0.1+ef"``), or a ``Wire``.
       executor: ``"local"`` (stacked scan), ``"mesh"`` / ``"multipod"``
         (shard_map node placement; or a configured ``MeshExecutor(mesh)``
         / ``MultiPodExecutor(mesh, ...)``), an
@@ -143,6 +147,11 @@ def fit(
         per-round batch (update transports).
       theta0: initial parameter; defaults to ``strategy.init_theta(data)``.
       carry: resume token from a previous ``FitResult.metrics["carry"]``.
+      faults: optional ``repro.api.faults.FaultPlan`` — seeded per-round
+        node dropout / straggler lag / quorum model threaded through the
+        transport as masked participation (see ``docs/FAULTS.md``).
+        ``sweep={"dropout_p": ...}`` sweeps the plan's threshold against
+        its shared draws.
       tracer: optional ``repro.telemetry.trace.Tracer``.  Installed as
         the ambient tracer for the whole run, so the engine's loop /
         ledger spans, the executors' dispatch + program-cache spans, and
@@ -167,25 +176,27 @@ def fit(
         return _fit_traced(
             strategy, data, wire=wire, transport=transport,
             executor=executor, sweep=sweep, schedule=schedule, steps=steps,
-            stream=stream, theta0=theta0, carry=carry, tag=tag,
-            tracer=tracer, trace=trace, transport_options=transport_options,
+            stream=stream, theta0=theta0, carry=carry, faults=faults,
+            tag=tag, tracer=tracer, trace=trace,
+            transport_options=transport_options,
         )
 
 
 def _fit_traced(
     strategy, data, *, wire, transport, executor, sweep, schedule, steps,
-    stream, theta0, carry, tag, tracer, trace, transport_options,
+    stream, theta0, carry, faults, tag, tracer, trace, transport_options,
 ) -> FitResult:
     w = make_wire(wire)
     tr = make_transport(transport, **transport_options)
     ex = make_executor(executor, sweep_params=sweep)
+    plan = make_fault_plan(faults)
     with _trace.span(
         "fit/loop", transport=tr.name, wire=w.name, executor=ex.name, tag=tag
     ):
         raw = tr.run(
             strategy, data,
             wire=w, schedule=schedule, steps=steps, stream=stream,
-            theta0=theta0, carry=carry, executor=ex,
+            theta0=theta0, carry=carry, executor=ex, faults=plan,
         )
         if tracer is not None:
             # fence so the loop span covers device completion, not just

@@ -174,6 +174,21 @@ def node_global_index(k_local):
     return node_shard_index() * ctx.nodes_per_shard + k_local
 
 
+def local_rows(x):
+    """This shard's slice of a REPLICATED leading-node-axis array
+    (identity locally).  The fault layer's per-round participation masks
+    are global ``(K,)`` jit arguments replicated to every shard; each
+    shard masks only the message rows it owns, so the masked aggregate
+    is placement-invariant."""
+    ctx = current_exec_context()
+    if ctx is None or ctx.node_axis is None:
+        return x
+    Kl = ctx.nodes_per_shard
+    return jax.lax.dynamic_slice_in_dim(
+        x, node_shard_index() * Kl, Kl, axis=0
+    )
+
+
 def local_node(k):
     """Resolve a GLOBAL node index against this shard: returns
     ``(k_local, mine)`` where ``k_local`` indexes the shard's node slice
@@ -541,13 +556,17 @@ class Executor:
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
         wire=None, cache_key=None, enter_loop=None, exit_loop=None,
+        sweep_targets=(),
     ):
         """Place and run the update loop.  ``cache_key`` (optional) keys
         the jitted program cache; ``enter_loop(carry)`` /
         ``exit_loop(carry, ys)`` are transport hooks running INSIDE the
         placed program (ambient context installed) immediately before /
         after the scan — the overlap schedule's carry conversions and the
-        deferred-stats completion live there."""
+        deferred-stats completion live there.  ``sweep_targets`` are
+        extra objects (fault plans, chain-wire stages) whose attributes
+        the sweep executor may rebind per scenario; non-sweep executors
+        ignore them."""
         raise NotImplementedError
 
     def run_server(self, *, strategy, data, carry, make_step, schedule,
@@ -577,6 +596,7 @@ class LocalExecutor(Executor):
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
         wire=None, cache_key=None, enter_loop=None, exit_loop=None,
+        sweep_targets=(),
     ):
         if carry is None:
             carry = make_carry()
@@ -851,6 +871,7 @@ class MeshExecutor(Executor):
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
         wire=None, cache_key=None, enter_loop=None, exit_loop=None,
+        sweep_targets=(),
     ):
         if carry is None:
             carry = make_carry()
@@ -1113,7 +1134,7 @@ class SweepExecutor(Executor):
             return None
         return self.inner.ledger_hops(strategy, data)
 
-    def _resolve_targets(self, strategy, wire):
+    def _resolve_targets(self, strategy, wire, extra=()):
         attrs = {
             k: v for k, v in self.params.items() if k not in self.RESERVED
         }
@@ -1124,11 +1145,17 @@ class SweepExecutor(Executor):
             elif wire is not None and hasattr(wire, k):
                 targets[k] = wire
             else:
-                raise ValueError(
-                    f"swept parameter {k!r} is not an attribute of "
-                    f"{type(strategy).__name__} or the wire (reserved keys: "
-                    f"{self.RESERVED})"
-                )
+                # transport-supplied extras: fault plans, chain-wire stages
+                for obj in extra:
+                    if obj is not None and hasattr(obj, k):
+                        targets[k] = obj
+                        break
+                else:
+                    raise ValueError(
+                        f"swept parameter {k!r} is not an attribute of "
+                        f"{type(strategy).__name__}, the wire, or the fault "
+                        f"plan (reserved keys: {self.RESERVED})"
+                    )
         return attrs, targets
 
     @staticmethod
@@ -1161,8 +1188,9 @@ class SweepExecutor(Executor):
     def run_update(
         self, *, strategy, data, carry, make_carry, make_step, xs, length,
         wire=None, cache_key=None, enter_loop=None, exit_loop=None,
+        sweep_targets=(),
     ):
-        attrs, targets = self._resolve_targets(strategy, wire)
+        attrs, targets = self._resolve_targets(strategy, wire, sweep_targets)
         stal = self.params.get("staleness")
         theta0s = self.params.get("theta0")
 

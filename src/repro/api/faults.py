@@ -1,0 +1,165 @@
+"""Fault layer — client-fleet realism for the §5 deployment story.
+
+The paper's motivating clients are phones in a hospital study: they drop
+out, they straggle, and a server round proceeds once enough of them have
+responded.  Every ``repro.api.fit`` used to assume K reliable identical
+nodes; a :class:`FaultPlan` restores the fleet model as a *seeded,
+declarative, per-round* schedule the engine threads through the existing
+transports:
+
+* **dropout** — each round, each node independently fails to respond
+  with probability ``dropout_p``.  A dropped node's message is masked out
+  of the aggregate (participation masking through the stock
+  ``aggregate``/``mask_to_root`` machinery), its wire state (e.g. EF
+  residuals, DP noise counters) is frozen, and it costs zero uplink
+  bytes — the ledger meters only surviving participants.
+* **straggler** — each node draws an integer lag in ``[0, straggler]``
+  per round; the round's effective staleness is the max lag over the
+  *surviving* nodes (the round completes when the slowest live node
+  responds), riding ``core.staleness.delay_push_read`` on a delay line
+  deepened by ``straggler`` slots.
+* **quorum** — a round commits only when at least ``quorum`` nodes
+  responded.  Below quorum the round aborts: θ, strategy state, wire
+  state and the delay line all roll back (the server discards the round);
+  survivors' uplink bytes are still metered (their pushes crossed the
+  wire) but no downlink happens.
+
+Determinism and placement: all draws are host-side numpy arrays generated
+from ``seed`` (counter-addressed, so resuming from a carry mid-plan
+replays the identical schedule) and enter the compiled step as jit
+*arguments* — per-round participation masks are data, like PR 9's block
+tables, so round-varying faults never retrace, and the mask logic is
+replicated across shards, keeping local / mesh / multipod placements
+consistent.  ``dropout_p`` itself is a plain attribute, which makes it
+sweepable: the sweep executor rebinds it per scenario against the SHARED
+uniform draws (inverse-CDF coupling), so S dropout levels ride one
+executable — ``fit(..., faults=FaultPlan(seed=0), executor="mesh+sweep",
+sweep={"dropout_p": jnp.asarray([0.0, 0.2, 0.5])})``.
+
+See ``docs/FAULTS.md`` for the full semantics and the compat matrix.
+"""
+
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import numpy as np
+
+PyTree = Any
+
+#: numpy SeedSequence stream tags — keep draw families independent
+_STREAM_UNIFORM = 1
+_STREAM_LAG = 2
+
+
+class FaultDraws(NamedTuple):
+    """Host-side per-round draws for a window of rounds (jit arguments).
+
+    ``u`` are uniforms in [0, 1): node (t, k) drops iff ``u[t, k] <
+    dropout_p``, so participation is a pure comparison against a (possibly
+    swept, traced) scalar.  ``lag`` are integer straggler lags in
+    ``[0, straggler]``.
+    """
+
+    u: np.ndarray  # (T, K) float32
+    lag: np.ndarray  # (T, K) int32
+
+
+class FaultCarry(NamedTuple):
+    """Resume token for a faulted fit: the transport's own carry plus the
+    plan round offset, so ``fit(..., carry=...)`` replays the draw stream
+    from where the previous run stopped — mid-plan resume is bit-exact
+    with the uninterrupted run."""
+
+    inner: Any
+    next_round: int
+
+
+class FaultPlan:
+    """Seeded declarative fault model for one fit (see module docstring).
+
+    Args:
+      seed: base seed for all draws (dropout uniforms, straggler lags).
+      dropout_p: per-round per-node drop probability in [0, 1].  A plain
+        attribute — the sweep executor rebinds it per scenario
+        (``sweep={"dropout_p": ...}``) against shared draws.
+      straggler: max per-node integer lag per round (0 = no stragglers).
+        Update transports deepen their delay line by this many slots and
+        read at ``base_staleness + max(live lags)``.
+      quorum: minimum surviving responders for a round to commit, or
+        None to commit every round regardless of survivors.
+    """
+
+    def __init__(
+        self,
+        seed: int,
+        *,
+        dropout_p: float = 0.0,
+        straggler: int = 0,
+        quorum: int | None = None,
+    ):
+        if not 0.0 <= float(dropout_p) <= 1.0:
+            raise ValueError(f"dropout_p must be in [0, 1], got {dropout_p}")
+        if int(straggler) < 0:
+            raise ValueError(f"straggler must be >= 0, got {straggler}")
+        if quorum is not None and int(quorum) < 1:
+            raise ValueError(f"quorum must be >= 1 (or None), got {quorum}")
+        self.seed = int(seed)
+        self.dropout_p = float(dropout_p)
+        self.straggler = int(straggler)
+        self.quorum = None if quorum is None else int(quorum)
+
+    def draws(self, start_round: int, rounds: int, num_nodes: int) -> FaultDraws:
+        """Per-round draws for rounds ``[start_round, start_round+rounds)``.
+
+        Counter-addressed: the draws for round t are identical whether the
+        window starts at 0 or resumes at t, so a carry-resumed fit sees
+        the same schedule the uninterrupted fit would have.
+        """
+        stop = start_round + rounds
+        rng_u = np.random.default_rng([self.seed, _STREAM_UNIFORM])
+        u = rng_u.random((stop, num_nodes), dtype=np.float32)[start_round:]
+        rng_l = np.random.default_rng([self.seed, _STREAM_LAG])
+        lag = rng_l.integers(
+            0, self.straggler + 1, size=(stop, num_nodes), dtype=np.int32
+        )[start_round:]
+        return FaultDraws(u=u, lag=lag)
+
+    def cache_token(self, *, dropout_swept: bool = False):
+        """Fingerprint of everything this plan bakes into a traced step.
+
+        The draws themselves are jit arguments (never baked); what shapes
+        the trace is the dropout threshold (unless swept — then it is a
+        traced per-scenario value), the straggler depth and the quorum
+        gate.  The seed deliberately does NOT key the program cache:
+        plans differing only in seed share one compiled program.
+        """
+        return (
+            "faults",
+            None if dropout_swept else self.dropout_p,
+            self.straggler,
+            self.quorum,
+        )
+
+    def describe(self) -> dict:
+        return {
+            "seed": self.seed,
+            "dropout_p": self.dropout_p,
+            "straggler": self.straggler,
+            "quorum": self.quorum,
+        }
+
+    def __repr__(self) -> str:
+        return (
+            f"FaultPlan(seed={self.seed}, dropout_p={self.dropout_p}, "
+            f"straggler={self.straggler}, quorum={self.quorum})"
+        )
+
+
+def make_fault_plan(spec: "FaultPlan | None") -> "FaultPlan | None":
+    """Engine-side resolution hook (mirrors ``make_wire``/``make_transport``)."""
+    if spec is None or isinstance(spec, FaultPlan):
+        return spec
+    raise TypeError(
+        f"faults= takes a repro.api.faults.FaultPlan or None, got {type(spec)!r}"
+    )

@@ -471,6 +471,11 @@ class OptimizerStrategy(Strategy):
     """
 
     stacked_msgs = False
+    #: the aggregate() override below is the identity on ONE message — a
+    #: zeroed (fault-masked) message passes through exactly like a sum
+    #: term dropping out, so faults= may mask through it (a dead round
+    #: applies a zero gradient)
+    fault_maskable = True
 
     def __init__(
         self,

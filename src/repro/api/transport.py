@@ -37,6 +37,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.api import executor as _exec
+from repro.api.faults import FaultCarry
 from repro.api.strategy import Strategy
 from repro.core.admm import consensus_admm
 from repro.core.server import contact, init_server
@@ -67,13 +68,36 @@ class Transport:
 
     def run(
         self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
-        executor,
+        executor, faults=None,
     ) -> RawRun:
         raise NotImplementedError
 
 
 def _resolve_theta0(strategy, data, theta0):
     return strategy.init_theta(data) if theta0 is None else theta0
+
+
+def _unwrap_fault_carry(carry, faults, name):
+    """Split a resume carry into (inner carry, plan round offset) —
+    faulted fits wrap their carry in a :class:`FaultCarry` so the draw
+    stream resumes where it stopped; mixing faulted and fault-free
+    carries is a usage error, not something to guess through."""
+    if faults is None:
+        if isinstance(carry, FaultCarry):
+            raise ValueError(
+                f"transport {name!r}: carry= comes from a faults= fit — "
+                "pass the same FaultPlan to resume it"
+            )
+        return carry, 0
+    if carry is None:
+        return None, 0
+    if not isinstance(carry, FaultCarry):
+        raise ValueError(
+            f"transport {name!r}: resuming under faults= needs the carry "
+            "of a faulted fit (a FaultCarry); this one is from a "
+            "fault-free fit"
+        )
+    return carry.inner, int(carry.next_round)
 
 
 class ServerTransport(Transport):
@@ -104,15 +128,23 @@ class ServerTransport(Transport):
         )
 
     def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
-            executor):
+            executor, faults=None):
         if schedule is None:
             raise ValueError(
                 f"transport {self.name!r} needs a contact schedule= "
                 "(see repro.core.schedules)"
             )
+        K = strategy.num_nodes(data)
+        carry, t0 = _unwrap_fault_carry(carry, faults, self.name)
+        if faults is not None:
+            if faults.straggler > 0 or faults.quorum is not None:
+                raise ValueError(
+                    f"transport {self.name!r} contacts ONE node per round — "
+                    "straggler/quorum fault modes only apply to update "
+                    "transports (allreduce/delay_line); use dropout_p alone"
+                )
         if carry is None:
             theta0 = _resolve_theta0(strategy, data, theta0)
-            K = strategy.num_nodes(data)
             carry = (
                 init_server(theta0),
                 strategy.init_state(theta0, data),
@@ -122,17 +154,37 @@ class ServerTransport(Transport):
         handoff = self.handoff
         down_const = wire.measure(theta_template)  # dense θ handed back
         static_up = wire.push_bytes(theta_template)
+        if faults is not None and static_up is None:
+            raise ValueError(
+                f"faults= with wire {wire.name!r}: per-contact survivor "
+                "accounting needs a shape-static push cost "
+                "(wire.push_bytes); value-dependent wires (thresh) are "
+                "not supported under faults"
+            )
         # shape-static push cost → the per-contact owner-select psum on the
         # byte scalar is pure overhead; emit a placeholder instead (replaced
         # by exact integer accounting below)
         skip_up = static_up is not None
+        T = len(schedule)
+        if faults is not None:
+            draws = faults.draws(t0, T, K)
+            xs = (np.asarray(schedule), draws.u)
+        else:
+            xs = schedule
 
         def make_step(shard_data):
             """Per-contact step over whatever node slice the executor
             placed here (the full stack locally, a shard under a mesh)."""
 
-            def step(c, k):
+            def step(c, xt):
                 server, sstate, wstate = c
+                if faults is not None:
+                    k, u_t = xt
+                    # contacted node answers iff its uniform clears the
+                    # (possibly swept/traced) dropout threshold
+                    alive = u_t[k] >= faults.dropout_p
+                else:
+                    k = xt
                 theta_start = (
                     server.theta if handoff == "sequential"
                     else server.theta_prev
@@ -142,7 +194,7 @@ class ServerTransport(Transport):
                 # run at its own (clamped) slice index; only the owner's
                 # result is real.  The strategy state stays replicated
                 # (see MeshExecutor.run_server), so it is NOT selected.
-                theta_new, sstate = strategy.local_step(
+                theta_new, sstate_new = strategy.local_step(
                     k_loc, theta_start, sstate, shard_data
                 )
                 wstate_new, theta_push, up = wire.encode_push(
@@ -150,8 +202,30 @@ class ServerTransport(Transport):
                 )
                 theta_push = _exec.from_owner(theta_push, mine)
                 up = jnp.zeros(()) if skip_up else _exec.from_owner(up, mine)
-                wstate = _exec.commit_owner(wstate_new, wstate, mine)
-                server, received = contact(server, theta_push, handoff=handoff)
+                if faults is not None:
+                    # dead contact: the round is a no-op — the server keeps
+                    # its state, the node's wire state does not commit, and
+                    # the trajectory records the unchanged θ
+                    server_new, received_new = contact(
+                        server, theta_push, handoff=handoff
+                    )
+                    received = jax.tree.map(
+                        lambda n, o: jnp.where(alive, n, o),
+                        received_new, server.theta,
+                    )
+                    server = jax.tree.map(
+                        lambda n, o: jnp.where(alive, n, o), server_new, server
+                    )
+                    sstate = jax.tree.map(
+                        lambda n, o: jnp.where(alive, n, o), sstate_new, sstate
+                    )
+                    wstate = _exec.commit_owner(wstate_new, wstate, mine & alive)
+                else:
+                    sstate = sstate_new
+                    wstate = _exec.commit_owner(wstate_new, wstate, mine)
+                    server, received = contact(
+                        server, theta_push, handoff=handoff
+                    )
                 return (server, sstate, wstate), (received, up)
 
             return step
@@ -163,25 +237,42 @@ class ServerTransport(Transport):
                 "server", handoff, st_tok, wire.cache_token(), skip_up,
                 strategy.num_nodes(data),
             )
+            if faults is not None:
+                cache_key += (faults.cache_token(),)
         (server, sstate, wstate), (traj, ups) = executor.run_server(
             strategy=strategy, data=data, carry=carry, make_step=make_step,
-            schedule=schedule, wire=wire, cache_key=cache_key,
+            schedule=xs, wire=wire, cache_key=cache_key,
         )
         theta = executor.finalize(strategy, server.theta, sstate, data)
-        T = len(schedule)
-        if static_up is not None:
-            # exact integer accounting — large models overflow f32 mantissas
-            ups = np.full((T,), static_up, dtype=np.int64)
+        if faults is not None:
+            # exact host-side survivor accounting: the draws and schedule
+            # are host arrays, so the per-contact byte stream never enters
+            # the compiled step — a dropped contact costs nothing up or down
+            alive_np = (
+                draws.u[np.arange(T), np.asarray(schedule)]
+                >= faults.dropout_p
+            )
+            ups = alive_np.astype(np.int64) * static_up
+            downs = alive_np.astype(np.int64) * down_const
+        else:
+            if static_up is not None:
+                # exact integer accounting — large models overflow f32
+                # mantissas
+                ups = np.full((T,), static_up, dtype=np.int64)
+            downs = np.full((T,), down_const, dtype=np.int64)
+        out_carry = (server, sstate, wstate)
+        if faults is not None:
+            out_carry = FaultCarry(inner=out_carry, next_round=t0 + T)
         return RawRun(
             theta=theta,
             state=sstate,
             trajectory=traj,
             uplink=ups,
-            downlink=np.full((T,), down_const, dtype=np.int64),
+            downlink=downs,
             rounds_per_step=1,
             event_kind="contact",
-            extras={"server_state": server},
-            carry=(server, sstate, wstate),
+            extras={"faults": faults.describe()} if faults is not None else {},
+            carry=out_carry,
         )
 
 
@@ -208,7 +299,7 @@ class UpdateTransport(Transport):
         self.name = "allreduce" if staleness == 0 else "delay_line"
 
     def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
-            executor):
+            executor, faults=None):
         K = strategy.num_nodes(data)
         if stream is not None:
             T = jax.tree.leaves(stream)[0].shape[0]
@@ -219,13 +310,59 @@ class UpdateTransport(Transport):
                 f"transport {self.name!r} needs steps= or a stream= with a "
                 "leading time axis"
             )
+        carry, t0 = _unwrap_fault_carry(carry, faults, self.name)
+        p_sweep = executor.swept("dropout_p")
+        if faults is None:
+            if p_sweep is not None:
+                raise ValueError(
+                    "sweep={'dropout_p': ...} needs faults=FaultPlan(...) — "
+                    "the plan supplies the shared per-round draws the swept "
+                    "thresholds compare against"
+                )
+            draws = None
+        else:
+            if faults.quorum is not None and faults.quorum > K:
+                raise ValueError(
+                    f"quorum={faults.quorum} can never be met by K={K} nodes"
+                )
+            if strategy.aggregate_op != "sum" or (
+                type(strategy).aggregate is not Strategy.aggregate
+                and not getattr(strategy, "fault_maskable", False)
+            ):
+                raise ValueError(
+                    f"faults= masks dropped nodes out of a SUM aggregate; "
+                    f"{type(strategy).__name__} declares "
+                    f"aggregate_op={strategy.aggregate_op!r}"
+                    + (
+                        " with an aggregate() override (set fault_maskable"
+                        " = True only if the override is linear, so a"
+                        " zeroed message drops out of it like a sum term)"
+                        if type(strategy).aggregate is not Strategy.aggregate
+                        else ""
+                    )
+                )
+            if (
+                type(strategy).uplink_bytes is not Strategy.uplink_bytes
+                or type(strategy).downlink_bytes is not Strategy.downlink_bytes
+            ):
+                raise ValueError(
+                    f"faults= meters survivors host-side from the plan's "
+                    f"draws; {type(strategy).__name__}'s byte-accounting "
+                    "overrides would disagree with it"
+                )
+            # the draws ride the scan as jit arguments (masks are data,
+            # so round-varying faults never retrace the step)
+            draws = faults.draws(t0, T, K)
         # a swept "staleness" supersedes the transport's own D: one delay
-        # line of depth max(D_s) is shared, read at a per-scenario index
+        # line of depth max(D_s) is shared, read at a per-scenario index;
+        # stragglers deepen whatever line that leaves by their max lag
         stal_sweep = executor.swept("staleness")
         if stal_sweep is not None:
             D_buf = max(1, int(np.max(np.asarray(stal_sweep))))
         else:
             D_buf = self.staleness
+        straggler = 0 if faults is None else faults.straggler
+        D_buf += straggler
         resolved0 = None
         if carry is None and executor.swept("theta0") is None:
             resolved0 = _resolve_theta0(strategy, data, theta0)
@@ -261,6 +398,13 @@ class UpdateTransport(Transport):
             and wire.push_bytes(theta_template) is not None
         )
         down_is_static = type(strategy).downlink_bytes is Strategy.downlink_bytes
+        if faults is not None and not up_is_static:
+            raise ValueError(
+                f"faults= with wire {wire.name!r}: per-survivor byte "
+                "accounting needs a shape-static push cost "
+                "(wire.push_bytes); value-dependent wires (thresh) are "
+                "not supported under faults"
+            )
 
         # per-step scalar stats (metric pmean, byte psum) defer to one
         # post-loop reduction on the stacked (T,) outputs — bitwise
@@ -284,6 +428,9 @@ class UpdateTransport(Transport):
             and strategy.aggregate_op == "sum"
             and type(strategy).aggregate is Strategy.aggregate
             and type(strategy).uplink_bytes is Strategy.uplink_bytes
+            # a quorum abort would have to recall an in-flight partial;
+            # keep faulted rounds on the plain aggregate path
+            and faults is None
         )
 
         def make_step(shard_data, sweep_delay):
@@ -295,6 +442,11 @@ class UpdateTransport(Transport):
             """
 
             def step(c, xt):
+                if faults is not None:
+                    (u_t, lag_t), batch = xt
+                else:
+                    batch = xt
+                c0 = c  # pre-round carry — the quorum rollback target
                 theta, sstate, wstate, delay = c
                 if overlap_active:
                     buf2, pending, step0 = delay
@@ -302,11 +454,50 @@ class UpdateTransport(Transport):
                     # collective overlaps the local compute traced below
                     agg_done = _exec.aggregate_complete(pending)
                 msgs, sstate = strategy.local_updates(
-                    theta, sstate, shard_data, xt
+                    theta, sstate, shard_data, batch
                 )
-                wstate, msgs_hat, up = wire.encode_updates(
+                wstate_new, msgs_hat, up = wire.encode_updates(
                     wstate, msgs, stacked=strategy.stacked_msgs
                 )
+                if faults is not None:
+                    # participation: node k answers iff u_t[k] clears the
+                    # (possibly swept, traced) threshold.  The global mask
+                    # is replicated data; each shard masks only its own
+                    # message rows, so the sum aggregate sees zeros for the
+                    # dead and the result is placement-invariant.  Dead
+                    # nodes' wire state freezes (they neither encoded nor
+                    # sent — EF residuals must not absorb a discarded push).
+                    alive = u_t >= faults.dropout_p
+                    live = jnp.sum(alive.astype(jnp.int32))
+                    if strategy.stacked_msgs:
+                        alive_loc = _exec.local_rows(alive)
+
+                        def _rows(sel, n, o):
+                            return jnp.where(
+                                sel.reshape(sel.shape + (1,) * (n.ndim - 1)),
+                                n, o,
+                            )
+
+                        msgs_hat = jax.tree.map(
+                            lambda x: _rows(alive_loc, x, jnp.zeros_like(x)),
+                            msgs_hat,
+                        )
+                        wstate = jax.tree.map(
+                            lambda n, o: _rows(alive_loc, n, o),
+                            wstate_new, wstate,
+                        )
+                    else:
+                        alive0 = alive[0]
+                        msgs_hat = jax.tree.map(
+                            lambda x: jnp.where(alive0, x, jnp.zeros_like(x)),
+                            msgs_hat,
+                        )
+                        wstate = jax.tree.map(
+                            lambda n, o: jnp.where(alive0, n, o),
+                            wstate_new, wstate,
+                        )
+                else:
+                    wstate = wstate_new
                 up_override = strategy.uplink_bytes(msgs_hat, shard_data)
                 if up_override is not None:
                     up = up_override
@@ -325,7 +516,18 @@ class UpdateTransport(Transport):
                     delay = (buf2, pending_new, step0)
                 else:
                     agg = _exec.broadcast(strategy.aggregate(msgs_hat))
-                    if sweep_delay is not None:
+                    if straggler > 0:
+                        # the round completes when its slowest LIVE node
+                        # responds: read the delay line at base + max lag
+                        base = (
+                            sweep_delay if sweep_delay is not None
+                            else jnp.asarray(self.staleness, jnp.int32)
+                        )
+                        lag_eff = jnp.max(jnp.where(alive, lag_t, 0))
+                        delay, agg = delay_push_read(
+                            delay, agg, base + lag_eff
+                        )
+                    elif sweep_delay is not None:
                         delay, agg = delay_push_read(delay, agg, sweep_delay)
                     elif D_buf > 0:
                         delay, agg = delay_push_pop(delay, agg)
@@ -338,9 +540,18 @@ class UpdateTransport(Transport):
                     down = strategy.downlink_bytes(theta_new, shard_data)
                     if down is None:
                         down = jnp.asarray(float(K * wire.measure(theta_new)))
+                new_c = (theta_new, sstate, wstate, delay)
+                if faults is not None and faults.quorum is not None:
+                    # below quorum the server discards the round: the whole
+                    # carry (θ, strategy state, wire state, delay line)
+                    # rolls back to the pre-round value
+                    proceed = live >= faults.quorum
+                    new_c = jax.tree.map(
+                        lambda n, o: jnp.where(proceed, n, o), new_c, c0
+                    )
                 with _exec.deferring(stats if defer_ok else None):
-                    m = strategy.round_metric(theta_new, sstate, shard_data)
-                return (theta_new, sstate, wstate, delay), (m, up, down)
+                    m = strategy.round_metric(new_c[0], new_c[1], shard_data)
+                return new_c, (m, up, down)
 
             return step
 
@@ -402,26 +613,59 @@ class UpdateTransport(Transport):
                 stal_sweep is None, overlap_active, defer_ok,
                 up_is_static, down_is_static, strategy.stacked_msgs, K,
             )
+            if faults is not None:
+                # the plan's seed is NOT in the token: draws are data, so
+                # plans differing only in seed share one compiled program
+                cache_key += (
+                    faults.cache_token(dropout_swept=p_sweep is not None),
+                )
 
         xs = stream if stream is not None else None
+        if faults is not None:
+            xs = ((draws.u, draws.lag), xs)
         carry, (traj, ups, downs) = executor.run_update(
             strategy=strategy, data=data, carry=carry,
             make_carry=make_carry, make_step=make_step, xs=xs, length=T,
             wire=wire, cache_key=cache_key,
             enter_loop=enter_loop if overlap_active else None,
             exit_loop=exit_loop if (overlap_active or defer_ok) else None,
+            sweep_targets=(faults,) + tuple(getattr(wire, "stages", ())),
         )
         theta, sstate = carry[0], carry[1]
         theta = executor.finalize(strategy, theta, sstate, data)
-        if up_is_static:
-            per_round = wire.push_bytes(theta_template) * (
-                K if strategy.stacked_msgs else 1
+        if faults is not None:
+            # exact host-side survivor accounting from the same draws the
+            # step masked with: uplink charges only live pushes; downlink
+            # hands θ back to survivors, and only when quorum committed
+            p_vals = (
+                np.asarray(p_sweep, dtype=np.float64).reshape(-1)
+                if p_sweep is not None
+                else np.asarray([faults.dropout_p])
             )
-            ups = np.full((T,), per_round, dtype=np.int64)
-        if down_is_static:
-            downs = np.full(
-                (T,), K * wire.measure(theta_template), dtype=np.int64
+            alive_np = draws.u[None, :, :] >= p_vals[:, None, None]
+            live_np = alive_np.sum(axis=2).astype(np.int64)  # (S|1, T)
+            ups = live_np * int(wire.push_bytes(theta_template))
+            commit_np = (
+                live_np >= faults.quorum
+                if faults.quorum is not None
+                else np.ones_like(live_np, dtype=bool)
             )
+            downs = (
+                np.where(commit_np, live_np, 0)
+                * int(wire.measure(theta_template))
+            )
+            if p_sweep is None:
+                ups, downs = ups[0], downs[0]
+        else:
+            if up_is_static:
+                per_round = wire.push_bytes(theta_template) * (
+                    K if strategy.stacked_msgs else 1
+                )
+                ups = np.full((T,), per_round, dtype=np.int64)
+            if down_is_static:
+                downs = np.full(
+                    (T,), K * wire.measure(theta_template), dtype=np.int64
+                )
         S = executor.num_scenarios
         if S is not None:
             ups = np.asarray(ups)
@@ -430,6 +674,9 @@ class UpdateTransport(Transport):
                 ups = np.broadcast_to(ups, (S, T)).copy()
             if downs.ndim == 1:
                 downs = np.broadcast_to(downs, (S, T)).copy()
+        out_carry = carry
+        if faults is not None:
+            out_carry = FaultCarry(inner=carry, next_round=t0 + T)
         return RawRun(
             theta=theta,
             state=sstate,
@@ -438,8 +685,8 @@ class UpdateTransport(Transport):
             downlink=downs,
             rounds_per_step=1,
             event_kind="allreduce",
-            extras={},
-            carry=carry,
+            extras={"faults": faults.describe()} if faults is not None else {},
+            carry=out_carry,
         )
 
 
@@ -463,7 +710,13 @@ class AdmmTransport(Transport):
         self.g_lam = g_lam
 
     def run(self, strategy, data, *, wire, schedule, steps, stream, theta0, carry,
-            executor):
+            executor, faults=None):
+        if faults is not None:
+            raise ValueError(
+                "admm_consensus wraps core.admm's own synchronous loop — "
+                "consensus ADMM has no masked-participation form here; "
+                "faults= applies to server/allreduce/delay_line transports"
+            )
         if steps is None:
             raise ValueError("transport 'admm_consensus' needs steps= (iterations)")
         if theta0 is not None or carry is not None:

@@ -65,6 +65,11 @@ class Wire:
     #: loss).  Transports whose algorithm would CHANGE under compression
     #: (e.g. admm_consensus) gate on this instead of the wire's type/name.
     lossless = True
+    #: True when this wire re-encodes a payload without changing its size
+    #: (secure aggregation masks).  A ``ChainWire`` then keeps the
+    #: previous stage's byte count — the masked payload crossing the wire
+    #: is exactly as large as what it wraps.
+    preserves_bytes = False
 
     def init_state(self, theta: PyTree, num_nodes: int, *, stacked: bool = True):
         """Per-run wire state (e.g. error-feedback residuals); () if none."""
@@ -364,14 +369,271 @@ class Int8Wire(_FusedWire):
         return float(sum(x.size * 1 + 4 for x in jax.tree.leaves(tree)))
 
 
+class DPWire(Wire):
+    """Differentially-private uplink: per-node L2 clip + Gaussian noise.
+
+    The Gaussian mechanism on each node's message: the whole-tree update
+    is scaled to L2 norm ≤ ``dp_clip`` and perturbed with
+    ``N(0, (dp_sigma · dp_clip)²)`` noise per coordinate before it leaves
+    the node — the server/aggregate only ever sees the privatized
+    message.  Noise keys chain ``fold_in(seed → round counter → GLOBAL
+    node index → leaf index)``, so the draw for node k at round t is one
+    fixed function of (seed, t, k): placement-invariant (local ≡ mesh ≡
+    multipod run the same chain via ``node_global_index``) and
+    occupancy-invariant (dead rows under a ``FaultPlan`` don't shift
+    anyone else's stream).
+
+    ``dp_clip`` and ``dp_sigma`` are plain attributes, so both are
+    sweepable per scenario (``sweep={"dp_sigma": jnp.asarray([...])}``)
+    within one executable.  The payload is dense (same shape/dtype as the
+    message — noise does not compress), so the ledger meters dense bytes;
+    compose with a sparsifier (``"dp:1.0,0.5>topk:0.1+ef"``) to trade
+    bytes too.
+    """
+
+    lossless = False
+
+    def __init__(self, clip: float, sigma: float, *, seed: int = 0):
+        if float(clip) <= 0.0:
+            raise ValueError(f"dp clip must be > 0, got {clip}")
+        if float(sigma) < 0.0:
+            raise ValueError(f"dp sigma must be >= 0, got {sigma}")
+        self.dp_clip = float(clip)
+        self.dp_sigma = float(sigma)
+        self.seed = int(seed)
+        self.name = f"dp:{self.dp_clip},{self.dp_sigma}"
+
+    def init_state(self, theta, num_nodes, *, stacked: bool = True):
+        # per-node round counters — the only state is WHERE each node is
+        # in its noise stream, so resume-from-carry continues the stream
+        if stacked:
+            return jnp.zeros((num_nodes,), jnp.int32)
+        return jnp.asarray(0, jnp.int32)
+
+    def _privatize(self, msg, cnt, gidx):
+        """Clip + noise one node's whole-tree message (one (cnt, gidx))."""
+        leaves, treedef = jax.tree.flatten(msg)
+        sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32))) for x in leaves)
+        nrm = jnp.sqrt(sq)
+        clip = jnp.asarray(self.dp_clip, jnp.float32)
+        scale = jnp.minimum(1.0, clip / jnp.maximum(nrm, 1e-12))
+        key = jax.random.fold_in(
+            jax.random.fold_in(jax.random.key(self.seed), cnt), gidx
+        )
+        out = []
+        for i, x in enumerate(leaves):
+            noise = jax.random.normal(
+                jax.random.fold_in(key, i), x.shape, dtype=jnp.float32
+            )
+            y = x.astype(jnp.float32) * scale + self.dp_sigma * clip * noise
+            out.append(y.astype(x.dtype))
+        return treedef.unflatten(out)
+
+    def encode_push(self, wstate, k, theta_start, theta_new):
+        delta = tree_sub(theta_new, theta_start)
+        priv = self._privatize(delta, wstate[k], node_global_index_fn(k))
+        theta_push = tree_add(theta_start, priv)
+        nb = jnp.asarray(float(self.measure(theta_new)))
+        return wstate.at[k].add(1), theta_push, nb
+
+    def encode_updates(self, wstate, msgs, *, stacked: bool = True):
+        nb = jnp.asarray(float(tree_bytes(msgs)))
+        if not stacked:
+            gidx = node_global_index_fn(jnp.asarray(0, jnp.int32))
+            return wstate + 1, self._privatize(msgs, wstate, gidx), nb
+        k_local = jax.tree.leaves(msgs)[0].shape[0]
+        gidx = node_global_index_fn(jnp.arange(k_local, dtype=jnp.int32))
+        hat = jax.vmap(self._privatize)(msgs, wstate, gidx)
+        return wstate + 1, hat, nb
+
+    def cache_token(self):
+        # clip/sigma are baked into the trace when not swept; the seed is
+        # baked always (it parameterizes jax.random.key inside the step)
+        return (
+            type(self).__name__, self.name,
+            float(self.dp_clip), float(self.dp_sigma), self.seed,
+        )
+
+
+class SecAggWire(Wire):
+    """Secure-aggregation simulation: pairwise antisymmetric uplink masks.
+
+    Bonawitz-style masking: nodes g < j share a seeded pairwise mask
+    m_{gj} (keyed ``fold_in(seed → round counter → g → j → leaf)``); node
+    g uploads ``x_g + Σ_{j>g} m_{gj} − Σ_{j<g} m_{jg}``.  Summed over all
+    K nodes every mask appears once with each sign, so the aggregate
+    equals Σ x_g exactly while no individual uplink reveals x_g.
+
+    The real protocol cancels in modular integer arithmetic, where the
+    cancellation is EXACT.  Floating-point summation cannot represent
+    that (masks would perturb rounding), so this wire simulates the
+    protocol algebraically: ``encode_updates`` passes the messages to the
+    aggregate unchanged — the bitwise-identical-to-unmasked guarantee is
+    by construction, mirroring the exact ℤ_M cancellation — while
+    :meth:`uplink_payloads` materializes what each uplink actually
+    carries (masked, metered dense).  Tests assert per-node payloads
+    differ from the raw messages AND that the payload sum still recovers
+    the aggregate to fp tolerance.
+
+    Under a ``FaultPlan`` a dropped node's counter freezes with the rest
+    of its wire row; pairwise masks between nodes whose counters
+    diverged no longer cancel — which is exactly the real secagg dropout
+    problem (Bonawitz et al. solve it with mask-share recovery; this
+    simulation documents rather than hides it, see docs/FAULTS.md).
+    """
+
+    lossless = True
+    preserves_bytes = True
+
+    def __init__(self, *, seed: int = 0):
+        self.seed = int(seed)
+        self.name = "secagg"
+
+    def init_state(self, theta, num_nodes, *, stacked: bool = True):
+        if stacked:
+            return jnp.zeros((num_nodes,), jnp.int32)
+        return jnp.asarray(0, jnp.int32)
+
+    def _masked(self, msg, cnt, gidx, num_global: int):
+        """One node's masked uplink payload (O(K) mask draws per node)."""
+        leaves, treedef = jax.tree.flatten(msg)
+        kc = jax.random.fold_in(jax.random.key(self.seed), cnt)
+        out = []
+        for i, x in enumerate(leaves):
+            total = jnp.zeros(x.shape, jnp.float32)
+            for j in range(num_global):
+                lo = jnp.minimum(gidx, j)
+                hi = jnp.maximum(gidx, j)
+                kp = jax.random.fold_in(
+                    jax.random.fold_in(jax.random.fold_in(kc, lo), hi), i
+                )
+                m = jax.random.normal(kp, x.shape, dtype=jnp.float32)
+                sign = jnp.where(
+                    gidx < j, 1.0, jnp.where(gidx > j, -1.0, 0.0)
+                )
+                total = total + sign * m
+            out.append((x.astype(jnp.float32) + total).astype(x.dtype))
+        return treedef.unflatten(out)
+
+    def uplink_payloads(self, wstate, msgs, *, stacked: bool = True):
+        """What each uplink actually carries at the CURRENT round counter
+        (the payload ``encode_updates`` meters): message + pairwise mask.
+        Same size as the raw message — masking never compresses."""
+        if not stacked:
+            return self._masked(msgs, wstate, jnp.asarray(0, jnp.int32), 1)
+        k_local = jax.tree.leaves(msgs)[0].shape[0]
+        num_global = k_local * num_node_shards_fn()
+        gidx = node_global_index_fn(jnp.arange(k_local, dtype=jnp.int32))
+        return jax.vmap(
+            lambda m, c, g: self._masked(m, c, g, num_global)
+        )(msgs, wstate, gidx)
+
+    def encode_push(self, wstate, k, theta_start, theta_new):
+        raise NotImplementedError(
+            "secagg masks only cancel inside an aggregate — use an update "
+            "transport (allreduce/delay line); a §5 server contact has "
+            "nothing to cancel against"
+        )
+
+    def encode_updates(self, wstate, msgs, *, stacked: bool = True):
+        # algebraic exact-cancellation: the aggregate-path value IS the
+        # unmasked message (see class docstring); the wire crossing is
+        # the masked payload, dense-sized, metered here
+        nb = jnp.asarray(float(tree_bytes(msgs)))
+        return wstate + 1, msgs, nb
+
+    def cache_token(self):
+        return (type(self).__name__, self.name, self.seed)
+
+
+class ChainWire(Wire):
+    """Composition of wire stages applied left to right (``"a>b"``).
+
+    Canonical chains: ``"dp:1.0,0.5>topk:0.1+ef"`` (privatize, THEN
+    sparsify the private message — EF recycles only already-noised
+    residue) and ``"topk:0.1+ef>secagg"`` (sparsify, then mask the
+    compressed payload).  Byte metering: each stage re-prices the payload
+    except ``preserves_bytes`` stages (secagg), which keep the previous
+    stage's count — the chain's cost is the LAST re-pricing stage's.
+    """
+
+    def __init__(self, stages):
+        stages = tuple(stages)
+        if len(stages) < 2:
+            raise ValueError("a wire chain needs at least two stages")
+        for s in stages:
+            if isinstance(s, ChainWire):
+                raise ValueError("wire chains do not nest")
+        self.stages = stages
+        self.name = ">".join(s.name for s in stages)
+        self.lossless = all(s.lossless for s in stages)
+        self.preserves_bytes = all(s.preserves_bytes for s in stages)
+
+    def init_state(self, theta, num_nodes, *, stacked: bool = True):
+        return tuple(
+            s.init_state(theta, num_nodes, stacked=stacked)
+            for s in self.stages
+        )
+
+    def push_bytes(self, theta):
+        pb: int | None = self.measure(theta)
+        for s in self.stages:
+            if not s.preserves_bytes:
+                pb = s.push_bytes(theta)  # None propagates: value-dependent
+        return pb
+
+    def encode_push(self, wstate, k, theta_start, theta_new):
+        new_states = []
+        theta, nb = theta_new, jnp.asarray(float(self.measure(theta_new)))
+        for s, st in zip(self.stages, wstate):
+            st, theta, b = s.encode_push(st, k, theta_start, theta)
+            new_states.append(st)
+            if not s.preserves_bytes:
+                nb = b
+        return tuple(new_states), theta, nb
+
+    def encode_updates(self, wstate, msgs, *, stacked: bool = True):
+        new_states = []
+        nb = jnp.asarray(float(tree_bytes(msgs)))
+        for s, st in zip(self.stages, wstate):
+            st, msgs, b = s.encode_updates(st, msgs, stacked=stacked)
+            new_states.append(st)
+            if not s.preserves_bytes:
+                nb = b
+        return tuple(new_states), msgs, nb
+
+    def cache_token(self):
+        return (type(self).__name__,) + tuple(
+            s.cache_token() for s in self.stages
+        )
+
+
+def node_global_index_fn(k_local):
+    """Late-bound ``executor.node_global_index`` (import cycle guard —
+    executor imports nothing from wire, but keeping the edge one-way at
+    module import time lets either load first)."""
+    from repro.api.executor import node_global_index
+
+    return node_global_index(k_local)
+
+
+def num_node_shards_fn() -> int:
+    from repro.api.executor import num_node_shards
+
+    return num_node_shards()
+
+
 def make_wire(spec: str | Wire | None) -> Wire:
     """Resolve a wire spec.
 
     Accepts a ``Wire`` instance, ``None``/"dense", or a string of the form
-    ``"<codec>[+ef]"`` with codecs ``topk:<fraction>``, ``thresh:<tau>``
-    and ``int8`` — e.g. ``"topk:0.05+ef"`` is top-5% magnitude
-    sparsification with error feedback; ``"thresh:0.01"`` keeps entries
-    with magnitude ≥ 0.01 (value-dependent ratio, sweepable).
+    ``"<codec>[+ef]"`` with codecs ``topk:<fraction>``, ``thresh:<tau>``,
+    ``int8``, ``dp:<clip>,<sigma>`` (L2 clip + Gaussian noise) and
+    ``secagg`` (pairwise-mask secure aggregation) — e.g. ``"topk:0.05+ef"``
+    is top-5% magnitude sparsification with error feedback;
+    ``"thresh:0.01"`` keeps entries with magnitude ≥ 0.01
+    (value-dependent ratio, sweepable).  Stages compose left to right
+    with ``>``: ``"dp:1.0,0.5>topk:0.1+ef"``.
     """
     if spec is None:
         return DenseWire()
@@ -379,6 +641,8 @@ def make_wire(spec: str | Wire | None) -> Wire:
         return spec
     if not isinstance(spec, str):
         raise TypeError(f"wire spec must be a Wire or str, got {type(spec)!r}")
+    if ">" in spec:
+        return ChainWire([make_wire(part) for part in spec.split(">")])
     if spec == "dense":
         return DenseWire()
     ef = spec.endswith("+ef")
@@ -389,7 +653,22 @@ def make_wire(spec: str | Wire | None) -> Wire:
         return TopKWire(float(base.split(":", 1)[1]), error_feedback=ef)
     if base == "int8":
         return Int8Wire(error_feedback=ef)
+    if base.startswith("dp:"):
+        if ef:
+            raise ValueError(
+                "dp takes no +ef (noise is not a compression residual); "
+                "chain it with a sparsifier instead: 'dp:<c>,<s>>topk:<f>+ef'"
+            )
+        parts = base.split(":", 1)[1].split(",")
+        if len(parts) != 2:
+            raise ValueError(f"dp wire spec must be 'dp:<clip>,<sigma>', got {spec!r}")
+        return DPWire(float(parts[0]), float(parts[1]))
+    if base == "secagg":
+        if ef:
+            raise ValueError("secagg takes no +ef (masking is lossless)")
+        return SecAggWire()
     raise ValueError(
         f"unknown wire spec {spec!r} — expected 'dense', 'topk:<f>[+ef]', "
-        "'thresh:<tau>[+ef]' or 'int8[+ef]'"
+        "'thresh:<tau>[+ef]', 'int8[+ef]', 'dp:<clip>,<sigma>', 'secagg', "
+        "or a '>'-chain of those"
     )

@@ -261,7 +261,20 @@ class CommLedger:
         """
         total_m = sum(m for _, m, _ in hop_messages)
         if total_m <= 0:
-            raise ValueError("hop attribution needs a positive message count")
+            # a zero-message decomposition is legal exactly when there is
+            # nothing to attribute — a fault-plan scenario can drop every
+            # participant of every round (dropout_p=1.0), leaving a valid
+            # all-zero ledger; the tier buckets still materialize (zeroed)
+            # so summaries keep a stable shape across scenarios
+            if self.uplink_bytes or self.downlink_bytes:
+                raise ValueError(
+                    "hop attribution needs a positive message count "
+                    f"({self.uplink_bytes}B up / {self.downlink_bytes}B down "
+                    "unattributed)"
+                )
+            for name, _, price in hop_messages:
+                self._hop_add(name, 0, 0, price)
+            return
         up_rem, down_rem = self.uplink_bytes, self.downlink_bytes
         for i, (name, m, price) in enumerate(hop_messages):
             if i == len(hop_messages) - 1:

@@ -85,6 +85,26 @@ def main(argv=None):
         "count=N for N fake devices)",
     )
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument(
+        "--fault-seed", type=int, default=0,
+        help="seed for the FaultPlan draw streams (used when any fault "
+        "flag below is set; see docs/FAULTS.md)",
+    )
+    ap.add_argument(
+        "--dropout-p", type=float, default=0.0,
+        help="per-round per-node drop probability: dead nodes are masked "
+        "out of the aggregate and cost zero uplink bytes",
+    )
+    ap.add_argument(
+        "--straggler", type=int, default=0,
+        help="max per-node integer lag per round; the delay line deepens "
+        "by this many slots and reads at staleness + max(live lags)",
+    )
+    ap.add_argument(
+        "--quorum", type=int, default=0,
+        help="minimum surviving responders for a round to commit "
+        "(0 = no quorum gate); below quorum the round rolls back",
+    )
     ap.add_argument("--log-every", type=int, default=10)
     ap.add_argument("--ckpt-dir", default="")
     ap.add_argument("--ckpt-every", type=int, default=0)
@@ -106,6 +126,17 @@ def main(argv=None):
         lambda p, batch: tf.loss_fn(p, cfg, batch), optimizer, has_aux=True
     )
     wire = f"topk:{args.compress_topk}+ef" if args.compress_topk > 0 else "dense"
+
+    faults = None
+    if args.dropout_p or args.straggler or args.quorum:
+        from repro.api.faults import FaultPlan
+
+        faults = FaultPlan(
+            seed=args.fault_seed,
+            dropout_p=args.dropout_p,
+            straggler=args.straggler,
+            quorum=args.quorum or None,
+        )
 
     sweep_levels = None
     executor = "local"
@@ -135,9 +166,11 @@ def main(argv=None):
         )
 
     data = synthetic_lm_batches(args.seed, args.batch, args.seq, cfg.vocab_size)
+    fault_note = f", faults={faults!r}" if faults is not None else ""
     print(
         f"training {cfg.name} ({n_params/1e6:.1f}M params, "
-        f"staleness={sweep_levels or args.staleness}, wire={wire}{mesh_note})"
+        f"staleness={sweep_levels or args.staleness}, wire={wire}"
+        f"{mesh_note}{fault_note})"
     )
     t0 = time.time()
     history = []
@@ -157,6 +190,7 @@ def main(argv=None):
             stream=stream,
             theta0=theta,
             carry=carry,
+            faults=faults,
             tag="train",
         )
         theta, carry = res.theta, res.metrics["carry"]

@@ -85,6 +85,8 @@ class RunReport:
             "comm": comm,
             "program_cache": program_cache_stats(),
         }
+        if "faults" in m:  # the plan's spec (seed/dropout/straggler/quorum)
+            data["faults"] = dict(m["faults"])
         if "wire_kernel_hits" in m:
             data["wire_kernel_hits"] = m["wire_kernel_hits"]
         cls._join_tracer(data, tracer)
@@ -139,6 +141,13 @@ class RunReport:
             lines.append(
                 "- config: "
                 + " × ".join(f"`{v}`" for v in cfg.values() if v)
+            )
+        faults = d.get("faults")
+        if faults:
+            lines.append(
+                "- faults: "
+                + ", ".join(f"{k}={v}" for k, v in faults.items()
+                            if v not in (None, 0, 0.0))
             )
         comm = d.get("comm", {})
         if "total_bytes" in comm:

@@ -26,10 +26,6 @@ produce the same fit under every placement.
   the local walk (the ``from_owner`` psum adds only zeros).
 """
 
-import json
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -410,21 +406,8 @@ out["overlap"] = {
 print(json.dumps(out))
 """
 
-    def test_mesh_matches_local_on_8_devices(self):
-        # repro may be a namespace package (no __file__) — anchor on api
-        src = os.path.dirname(
-            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
-        )
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        env["JAX_PLATFORMS"] = "cpu"
-        proc = subprocess.run(
-            [sys.executable, "-c", self.SCRIPT],
-            capture_output=True, text=True, env=env, timeout=600,
-        )
-        assert proc.returncode == 0, proc.stderr[-2000:]
-        out = json.loads(proc.stdout.strip().splitlines()[-1])
+    def test_mesh_matches_local_on_8_devices(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
         assert out["num_devices"] == 8
         for transport in ("allreduce", "delay_line"):
             assert out[transport] == {
@@ -630,20 +613,8 @@ out["cascade"] = {
 print(json.dumps(out))
 """
 
-    def test_hierarchical_matches_flat_on_8_devices(self):
-        src = os.path.dirname(
-            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
-        )
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        env["JAX_PLATFORMS"] = "cpu"
-        proc = subprocess.run(
-            [sys.executable, "-c", self.SCRIPT],
-            capture_output=True, text=True, env=env, timeout=600,
-        )
-        assert proc.returncode == 0, proc.stderr[-2000:]
-        out = json.loads(proc.stdout.strip().splitlines()[-1])
+    def test_hierarchical_matches_flat_on_8_devices(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
         assert out["num_devices"] == 8
         for transport in ("allreduce", "delay_line"):
             for wire in ("dense", "topk:0.5+ef"):

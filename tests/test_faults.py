@@ -1,0 +1,663 @@
+"""Client-fleet fault suite: FaultPlan semantics, seeded determinism,
+privacy wires (dp / secagg / chains), and placement equivalence.
+
+The contracts this file pins down:
+
+* FaultPlan draws are counter-addressed — resuming mid-plan from a carry
+  replays the identical schedule, so split runs are BITWISE equal to the
+  uninterrupted run (on the same executor).
+* Dropout masks survivors out of a SUM aggregate; the ledger meters
+  survivors only, host-exactly (``live(t) × push_bytes``).
+* Quorum rolls back whole rounds (θ, strategy state, wire state, delay
+  line); survivor uplinks are still charged, downlink only on commit.
+* Empty rounds are legal: ``dropout_p=1.0`` runs, charges zero bytes,
+  and by-hop attribution materializes zero buckets instead of raising.
+* ``dp:<clip>,<sigma>`` clips per-node L2 and adds seeded Gaussian noise
+  (statistically checked); ``secagg`` per-node payloads are masked while
+  the masked fit is bitwise-identical to the dense fit.
+* Mesh placements agree with local to fp tolerance, mesh ≡ multipod
+  bitwise on a shared mesh, and round-varying masks compile ONE program
+  (8-fake-device subprocess cases).
+"""
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import api
+from repro.api.faults import FaultCarry, FaultDraws, FaultPlan, make_fault_plan
+from repro.api.wire import make_wire
+from repro.core.schedules import round_robin
+from repro.ml.linear import lsq_loss
+
+
+def _make_problem(K=8, Nk=10, n=5, seed=0):
+    rng = np.random.default_rng(seed)
+    X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+    w = jnp.asarray(rng.normal(size=(n,)))
+    y = jnp.einsum("kni,i->kn", X, w)
+    return X, y, w, n
+
+
+def _gd():
+    return api.GradientDescent(lsq_loss, lr=0.1)
+
+
+class TestFaultPlan:
+    """The plan object itself: validation, draw determinism, cache keys."""
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="dropout_p"):
+            FaultPlan(seed=0, dropout_p=1.5)
+        with pytest.raises(ValueError, match="straggler"):
+            FaultPlan(seed=0, straggler=-1)
+        with pytest.raises(ValueError, match="quorum"):
+            FaultPlan(seed=0, quorum=0)
+        with pytest.raises(TypeError, match="FaultPlan"):
+            make_fault_plan({"dropout_p": 0.5})
+        assert make_fault_plan(None) is None
+        plan = FaultPlan(seed=3, dropout_p=0.25)
+        assert make_fault_plan(plan) is plan
+
+    def test_draws_are_deterministic_and_counter_addressed(self):
+        plan = FaultPlan(seed=7, dropout_p=0.3, straggler=3)
+        full = plan.draws(0, 20, 4)
+        assert isinstance(full, FaultDraws)
+        assert full.u.shape == (20, 4) and full.u.dtype == np.float32
+        assert full.lag.shape == (20, 4) and full.lag.dtype == np.int32
+        assert np.all((0 <= full.lag) & (full.lag <= 3))
+        # same call → bitwise identical
+        np.testing.assert_array_equal(full.u, plan.draws(0, 20, 4).u)
+        # a window resumed at t=8 is the tail of the full window
+        tail = plan.draws(8, 12, 4)
+        np.testing.assert_array_equal(tail.u, full.u[8:])
+        np.testing.assert_array_equal(tail.lag, full.lag[8:])
+
+    def test_streams_and_seeds_independent(self):
+        a = FaultPlan(seed=1, straggler=5).draws(0, 10, 4)
+        b = FaultPlan(seed=2, straggler=5).draws(0, 10, 4)
+        assert not np.array_equal(a.u, b.u)
+        assert not np.array_equal(a.lag, b.lag)
+
+    def test_cache_token_excludes_seed(self):
+        # plans differing only in seed share one compiled program
+        a = FaultPlan(seed=1, dropout_p=0.3, quorum=2)
+        b = FaultPlan(seed=99, dropout_p=0.3, quorum=2)
+        assert a.cache_token() == b.cache_token()
+        assert a.cache_token() != FaultPlan(seed=1, dropout_p=0.4).cache_token()
+        # a swept dropout_p is traced per scenario → not baked in the key
+        assert a.cache_token(dropout_swept=True) \
+            == b.cache_token(dropout_swept=True)
+        assert a.cache_token(dropout_swept=True) != a.cache_token()
+
+    def test_describe_round_trips_the_spec(self):
+        plan = FaultPlan(seed=5, dropout_p=0.2, straggler=1, quorum=3)
+        assert plan.describe() == {
+            "seed": 5, "dropout_p": 0.2, "straggler": 1, "quorum": 3,
+        }
+
+
+class TestSeededDeterminism:
+    """Bitwise-identical FitResult across repeats and across resume."""
+
+    def test_repeat_is_bitwise(self, fault_plan):
+        X, y, w, n = _make_problem()
+        kw = dict(transport="allreduce", steps=25, faults=fault_plan)
+        a = api.fit(_gd(), (X, y), **kw)
+        b = api.fit(_gd(), (X, y), **kw)
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+        np.testing.assert_array_equal(
+            np.asarray(a.trajectory), np.asarray(b.trajectory)
+        )
+        assert a.ledger.uplink_bytes == b.ledger.uplink_bytes
+        assert a.metrics["faults"] == fault_plan.describe()
+
+    def test_resume_mid_plan_is_bitwise(self, fault_plan):
+        X, y, w, n = _make_problem()
+        kw = dict(transport="allreduce", faults=fault_plan)
+        full = api.fit(_gd(), (X, y), steps=20, **kw)
+        first = api.fit(_gd(), (X, y), steps=10, **kw)
+        carry = first.metrics["carry"]
+        assert isinstance(carry, FaultCarry) and carry.next_round == 10
+        second = api.fit(_gd(), (X, y), steps=10, carry=carry, **kw)
+        np.testing.assert_array_equal(
+            np.asarray(second.theta), np.asarray(full.theta)
+        )
+        assert first.ledger.uplink_bytes + second.ledger.uplink_bytes \
+            == full.ledger.uplink_bytes
+
+    def test_faulted_differs_from_fault_free(self):
+        X, y, w, n = _make_problem()
+        clean = api.fit(_gd(), (X, y), transport="allreduce", steps=25)
+        faulted = api.fit(_gd(), (X, y), transport="allreduce", steps=25,
+                          faults=FaultPlan(seed=11, dropout_p=0.5))
+        assert not np.array_equal(
+            np.asarray(clean.theta), np.asarray(faulted.theta)
+        )
+
+    def test_zero_plan_matches_fault_free_bitwise(self):
+        # dropout_p=0 with no straggler/quorum: every node always alive —
+        # the masked path must reduce to the stock one exactly
+        X, y, w, n = _make_problem()
+        clean = api.fit(_gd(), (X, y), transport="allreduce", steps=20)
+        zero = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                       faults=FaultPlan(seed=11))
+        np.testing.assert_array_equal(
+            np.asarray(clean.theta), np.asarray(zero.theta)
+        )
+        assert clean.ledger.uplink_bytes == zero.ledger.uplink_bytes
+
+    def test_carry_cross_wiring_rejected(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11, dropout_p=0.3)
+        clean = api.fit(_gd(), (X, y), transport="allreduce", steps=5)
+        faulted = api.fit(_gd(), (X, y), transport="allreduce", steps=5,
+                          faults=plan)
+        with pytest.raises(ValueError, match="faults="):
+            api.fit(_gd(), (X, y), transport="allreduce", steps=5,
+                    carry=clean.metrics["carry"], faults=plan)
+        with pytest.raises(ValueError, match="faults="):
+            api.fit(_gd(), (X, y), transport="allreduce", steps=5,
+                    carry=faulted.metrics["carry"])
+
+
+class TestDropoutAccounting:
+    """The ledger meters SURVIVORS, host-exactly from the plan's draws."""
+
+    def test_survivor_bytes_exact(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11, dropout_p=0.4)
+        T, K = 30, X.shape[0]
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=T,
+                      faults=plan)
+        live = (plan.draws(0, T, K).u >= plan.dropout_p).sum(axis=1)
+        per_push = n * 4  # dense float32 θ
+        assert res.ledger.uplink_bytes == int(live.sum()) * per_push
+        assert res.ledger.downlink_bytes == int(live.sum()) * per_push
+        assert res.ledger.rounds == T
+
+    def test_survivor_bytes_with_compression(self):
+        X, y, w, n = _make_problem(n=8)
+        plan = FaultPlan(seed=11, dropout_p=0.4)
+        T, K = 30, X.shape[0]
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=T,
+                      wire="topk:0.5+ef", faults=plan)
+        live = (plan.draws(0, T, K).u >= plan.dropout_p).sum(axis=1)
+        up_each = make_wire("topk:0.5+ef").push_bytes(jnp.zeros((8,)))
+        assert res.ledger.uplink_bytes == int(live.sum()) * up_each
+        # downlink hands dense θ back to survivors
+        assert res.ledger.downlink_bytes == int(live.sum()) * 8 * 4
+
+    def test_quorum_charges_uplink_only_on_aborted_rounds(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11, dropout_p=0.5, quorum=5)
+        T, K = 40, X.shape[0]
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=T,
+                      faults=plan)
+        live = (plan.draws(0, T, K).u >= plan.dropout_p).sum(axis=1)
+        committed = live >= plan.quorum
+        assert 0 < committed.sum() < T  # the seed exercises both branches
+        per = n * 4
+        assert res.ledger.uplink_bytes == int(live.sum()) * per
+        assert res.ledger.downlink_bytes \
+            == int(np.where(committed, live, 0).sum()) * per
+
+    def test_all_dead_round_is_legal_and_free(self):
+        # dropout_p=1.0: u ∈ [0, 1) never reaches the threshold — every
+        # round is empty.  θ must stay put and the wire must charge zero.
+        X, y, w, n = _make_problem()
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=10,
+                      theta0=jnp.zeros((n,)),
+                      faults=FaultPlan(seed=11, dropout_p=1.0, quorum=1))
+        np.testing.assert_array_equal(np.asarray(res.theta), np.zeros((n,)))
+        assert res.ledger.uplink_bytes == 0
+        assert res.ledger.downlink_bytes == 0
+        assert res.ledger.rounds == 10
+
+    def test_empty_rounds_attribute_zero_hop_buckets(self):
+        # by-hop attribution over a zero-message run keeps the summary
+        # shape (zero buckets) instead of raising — empty rounds are legal
+        res = api.fit(_gd(), _make_problem()[:2], transport="allreduce",
+                      steps=5, executor="multipod",
+                      faults=FaultPlan(seed=11, dropout_p=1.0))
+        assert res.ledger.total_bytes == 0
+        by_hop = res.ledger.summary()["by_hop"]
+        assert set(by_hop) == {"intra_pod", "inter_pod"}
+        assert all(v["total_bytes"] == 0 for v in by_hop.values())
+
+
+class TestStraggler:
+    """Straggler lags deepen the delay line and stale the aggregate."""
+
+    def test_straggler_changes_trajectory_not_bytes(self):
+        X, y, w, n = _make_problem()
+        base = api.fit(_gd(), (X, y), transport="allreduce", steps=25,
+                       faults=FaultPlan(seed=11))
+        lagged = api.fit(_gd(), (X, y), transport="allreduce", steps=25,
+                         faults=FaultPlan(seed=11, straggler=3))
+        # everyone still participates — bytes identical, dynamics stale
+        assert lagged.ledger.uplink_bytes == base.ledger.uplink_bytes
+        assert not np.array_equal(
+            np.asarray(base.trajectory), np.asarray(lagged.trajectory)
+        )
+
+    def test_straggler_zero_lag_draws_match_baseline(self):
+        # straggler=0 draws all-zero lags → identical to the no-straggler
+        # plan bitwise (the deeper-buffer path only engages when > 0)
+        X, y, w, n = _make_problem()
+        a = api.fit(_gd(), (X, y), transport="delay_line", steps=20,
+                    staleness=1, faults=FaultPlan(seed=11, dropout_p=0.3))
+        b = api.fit(_gd(), (X, y), transport="delay_line", steps=20,
+                    staleness=1,
+                    faults=FaultPlan(seed=11, dropout_p=0.3, straggler=0))
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+    def test_straggler_composes_with_staleness(self):
+        X, y, w, n = _make_problem()
+        res = api.fit(_gd(), (X, y), transport="delay_line", steps=25,
+                      staleness=2,
+                      faults=FaultPlan(seed=11, straggler=2))
+        assert np.all(np.isfinite(np.asarray(res.theta)))
+        assert res.metrics["faults"]["straggler"] == 2
+
+
+class TestServerFaults:
+    """§5 server transports: dropout only — a dead contact is a no-op."""
+
+    def test_dropout_contact_noop_and_metered(self):
+        X, y, w, n = _make_problem(K=4)
+        sched = round_robin(4, 24)
+        plan = FaultPlan(seed=11, dropout_p=0.5)
+        res = api.fit(_gd(), (X, y), transport="sequential_server",
+                      schedule=sched, faults=plan)
+        clean = api.fit(_gd(), (X, y), transport="sequential_server",
+                        schedule=sched)
+        assert not np.array_equal(
+            np.asarray(res.theta), np.asarray(clean.theta)
+        )
+        u = plan.draws(0, len(sched), 4).u
+        alive = u[np.arange(len(sched)), np.asarray(sched)] >= plan.dropout_p
+        per = n * 4
+        assert res.ledger.uplink_bytes == int(alive.sum()) * per
+        assert res.ledger.downlink_bytes == int(alive.sum()) * per
+
+    def test_repeat_and_resume_bitwise(self):
+        X, y, w, n = _make_problem(K=4)
+        plan = FaultPlan(seed=11, dropout_p=0.4)
+        full = api.fit(_gd(), (X, y), transport="stale_server",
+                       schedule=round_robin(4, 20), faults=plan)
+        again = api.fit(_gd(), (X, y), transport="stale_server",
+                        schedule=round_robin(4, 20), faults=plan)
+        np.testing.assert_array_equal(
+            np.asarray(full.theta), np.asarray(again.theta)
+        )
+        first = api.fit(_gd(), (X, y), transport="stale_server",
+                        schedule=round_robin(4, 20)[:10], faults=plan)
+        second = api.fit(_gd(), (X, y), transport="stale_server",
+                         schedule=round_robin(4, 20)[10:],
+                         carry=first.metrics["carry"], faults=plan)
+        np.testing.assert_array_equal(
+            np.asarray(second.theta), np.asarray(full.theta)
+        )
+
+    def test_straggler_and_quorum_rejected(self):
+        X, y, w, n = _make_problem(K=4)
+        for bad in (FaultPlan(seed=0, straggler=1), FaultPlan(seed=0, quorum=2)):
+            with pytest.raises(ValueError, match="ONE node per round"):
+                api.fit(_gd(), (X, y), transport="sequential_server",
+                        schedule=round_robin(4, 8), faults=bad)
+
+
+class TestValidation:
+    """Fault-mode compatibility gates fail loudly, not silently."""
+
+    def test_mean_aggregate_rejected(self):
+        # LBFGS declares aggregate_op="mean" — masking nodes out of a
+        # mean silently reweights it, so the gate must refuse
+        X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="SUM aggregate"):
+            api.fit(api.LBFGS(lsq_loss), (X, y), transport="allreduce",
+                    steps=4, faults=FaultPlan(seed=0))
+
+    def test_value_dependent_wire_rejected(self):
+        X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="thresh"):
+            api.fit(_gd(), (X, y), transport="allreduce", steps=4,
+                    wire="thresh:0.1", faults=FaultPlan(seed=0))
+
+    def test_quorum_above_fleet_rejected(self):
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(ValueError, match="never be met"):
+            api.fit(_gd(), (X, y), transport="allreduce", steps=4,
+                    faults=FaultPlan(seed=0, quorum=5))
+
+    def test_admm_rejected(self):
+        from repro.ml.linear import lasso_prox_builder
+
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(ValueError, match="admm"):
+            api.fit(api.ProxStrategy(lasso_prox_builder), (X, y),
+                    transport="admm_consensus", steps=4, g="l1", g_lam=0.1,
+                    faults=FaultPlan(seed=0))
+
+    def test_dropout_sweep_needs_a_plan(self):
+        X, y, w, n = _make_problem()
+        with pytest.raises(ValueError, match="needs faults="):
+            api.fit(_gd(), (X, y), transport="allreduce", steps=4,
+                    executor="sweep",
+                    sweep={"dropout_p": jnp.asarray([0.0, 0.3])})
+
+
+class TestDPWire:
+    """dp:<clip>,<sigma> — per-node L2 clip + seeded Gaussian noise."""
+
+    def test_spec_parsing(self):
+        wi = make_wire("dp:1.5,0.25")
+        assert (wi.dp_clip, wi.dp_sigma) == (1.5, 0.25)
+        assert not wi.lossless
+        with pytest.raises(ValueError, match="dp clip"):
+            make_wire("dp:0,0.5")
+        with pytest.raises(ValueError, match="chain"):
+            make_wire("dp:1.0,0.5+ef")
+
+    def test_clip_enforced_exactly(self):
+        # sigma=0 isolates the clip: every privatized row lands at
+        # L2 norm == min(‖m‖, clip)
+        wi = make_wire("dp:1.0,0.0")
+        msgs = jnp.asarray(
+            np.random.default_rng(0).normal(size=(4, 64)) * 10.0,
+            jnp.float32,
+        )
+        st = wi.init_state(msgs[0], 4)
+        _, hat, nb = wi.encode_updates(st, msgs)
+        norms = np.linalg.norm(np.asarray(hat), axis=1)
+        np.testing.assert_allclose(norms, 1.0, rtol=1e-5)
+        assert int(nb) == msgs.size * 4  # dense payload
+
+    def test_small_updates_pass_unclipped(self):
+        wi = make_wire("dp:100.0,0.0")
+        msgs = jnp.asarray(
+            np.random.default_rng(0).normal(size=(4, 16)), jnp.float32
+        )
+        _, hat, _ = wi.encode_updates(wi.init_state(msgs[0], 4), msgs)
+        np.testing.assert_allclose(
+            np.asarray(hat), np.asarray(msgs), rtol=1e-5, atol=1e-6
+        )
+
+    def test_noise_scale_statistical(self):
+        # zero message → output IS the noise; empirical std over 8×4096
+        # draws must sit within a few percent of dp_sigma·dp_clip
+        wi = make_wire("dp:2.0,0.5")
+        msgs = jnp.zeros((8, 4096), jnp.float32)
+        _, hat, _ = wi.encode_updates(wi.init_state(msgs[0], 8), msgs)
+        flat = np.asarray(hat).ravel()
+        assert abs(flat.mean()) < 0.05
+        np.testing.assert_allclose(flat.std(), 0.5 * 2.0, rtol=0.05)
+
+    def test_noise_seeded_and_counter_advanced(self):
+        wi = make_wire("dp:1.0,0.5")
+        msgs = jnp.zeros((4, 32), jnp.float32)
+        st = wi.init_state(msgs[0], 4)
+        st1, a, _ = wi.encode_updates(st, msgs)
+        _, a2, _ = wi.encode_updates(st, msgs)
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(a2))
+        # counters advanced → round 2 draws a fresh noise slice
+        _, b, _ = wi.encode_updates(st1, msgs)
+        assert not np.array_equal(np.asarray(a), np.asarray(b))
+        # per-node streams differ (global index folds into the key)
+        assert not np.array_equal(np.asarray(a)[0], np.asarray(a)[1])
+
+    def test_fit_end_to_end_and_sweepable(self):
+        X, y, w, n = _make_problem()
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                      wire="dp:1.0,0.01")
+        assert np.all(np.isfinite(np.asarray(res.theta)))
+        # dp_sigma is a plain attribute → sweepable per scenario
+        sw = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                     wire="dp:1.0,0.01", executor="sweep",
+                     sweep={"dp_sigma": jnp.asarray([0.0, 0.01, 0.1])})
+        traj = np.asarray(sw.trajectory)
+        assert traj.shape[0] == 3
+        # σ=0 scenario is the clipped-but-noiseless run; more noise hurts
+        clipped = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                          wire="dp:1.0,0.0")
+        np.testing.assert_allclose(
+            traj[0, -1], np.asarray(clipped.trajectory)[-1],
+            rtol=1e-5, atol=1e-6,
+        )
+
+    def test_dp_under_dropout_freezes_dead_counters(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11, dropout_p=0.4)
+        a = api.fit(_gd(), (X, y), transport="allreduce", steps=15,
+                    wire="dp:1.0,0.05", faults=plan)
+        b = api.fit(_gd(), (X, y), transport="allreduce", steps=15,
+                    wire="dp:1.0,0.05", faults=plan)
+        np.testing.assert_array_equal(np.asarray(a.theta), np.asarray(b.theta))
+
+
+class TestSecAggWire:
+    """secagg — pairwise antisymmetric masks, exact in the aggregate."""
+
+    def test_fit_bitwise_equals_dense(self):
+        X, y, w, n = _make_problem()
+        dense = api.fit(_gd(), (X, y), transport="allreduce", steps=20)
+        masked = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                         wire="secagg")
+        np.testing.assert_array_equal(
+            np.asarray(masked.theta), np.asarray(dense.theta)
+        )
+        np.testing.assert_array_equal(
+            np.asarray(masked.trajectory), np.asarray(dense.trajectory)
+        )
+        # masking never compresses: metered bytes equal the dense wire's
+        assert masked.ledger.uplink_bytes == dense.ledger.uplink_bytes
+
+    def test_payloads_masked_but_sum_recovers_aggregate(self):
+        wi = make_wire("secagg")
+        msgs = jnp.asarray(
+            np.random.default_rng(0).normal(size=(4, 32)), jnp.float32
+        )
+        st = wi.init_state(msgs[0], 4)
+        pay = np.asarray(wi.uplink_payloads(st, msgs))
+        raw = np.asarray(msgs)
+        # every individual uplink is masked away from its raw message...
+        for k in range(4):
+            assert not np.allclose(pay[k], raw[k], atol=1e-3)
+        # ...while the pairwise masks cancel in the sum
+        np.testing.assert_allclose(
+            pay.sum(axis=0), raw.sum(axis=0), rtol=1e-4, atol=1e-4
+        )
+
+    def test_server_transport_rejected(self):
+        X, y, w, n = _make_problem(K=4)
+        with pytest.raises(NotImplementedError, match="aggregate"):
+            api.fit(_gd(), (X, y), transport="sequential_server",
+                    schedule=round_robin(4, 8), wire="secagg")
+
+    def test_ef_suffix_rejected(self):
+        with pytest.raises(ValueError, match="secagg"):
+            make_wire("secagg+ef")
+
+
+class TestChainWire:
+    """'a>b' chains: stage composition, byte metering, guard rails."""
+
+    def test_chain_parsing_and_metering(self):
+        wi = make_wire("dp:1.0,0.5>topk:0.5+ef")
+        assert [type(s).__name__ for s in wi.stages] == ["DPWire", "TopKWire"]
+        assert not wi.lossless
+        theta = jnp.zeros((12,), jnp.float32)
+        # the chain's cost is the LAST re-pricing stage's (topk)
+        assert wi.push_bytes(theta) == make_wire("topk:0.5+ef").push_bytes(theta)
+        # a preserves_bytes tail (secagg) keeps the previous stage's price
+        tail = make_wire("topk:0.5+ef>secagg")
+        assert tail.push_bytes(theta) == wi.push_bytes(theta)
+        assert tail.preserves_bytes is False
+
+    def test_chain_fit_and_faults(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11, dropout_p=0.3)
+        res = api.fit(_gd(), (X, y), transport="allreduce", steps=15,
+                      wire="dp:1.0,0.1>topk:0.5+ef", faults=plan)
+        again = api.fit(_gd(), (X, y), transport="allreduce", steps=15,
+                        wire="dp:1.0,0.1>topk:0.5+ef", faults=plan)
+        np.testing.assert_array_equal(
+            np.asarray(res.theta), np.asarray(again.theta)
+        )
+        T, K = 15, X.shape[0]
+        live = (plan.draws(0, T, K).u >= plan.dropout_p).sum(axis=1)
+        up_each = make_wire("dp:1.0,0.1>topk:0.5+ef").push_bytes(
+            jnp.zeros((n,))
+        )
+        assert res.ledger.uplink_bytes == int(live.sum()) * up_each
+
+    def test_no_nesting(self):
+        with pytest.raises(ValueError, match="at least two"):
+            api.ChainWire([make_wire("dense")])
+        with pytest.raises(ValueError, match="nest"):
+            api.ChainWire([make_wire("dense"), make_wire("dp:1.0,0.1>secagg")])
+
+
+class TestDropoutSweep:
+    """sweep={'dropout_p': ...}: S dropout levels, ONE executable, shared
+    draws (inverse-CDF coupling)."""
+
+    def test_scenarios_match_single_runs(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11)
+        levels = [0.0, 0.3, 0.6]
+        sw = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                     executor="sweep", faults=plan,
+                     sweep={"dropout_p": jnp.asarray(levels)})
+        traj = np.asarray(sw.trajectory)
+        assert traj.shape[0] == 3
+        for s, p in enumerate(levels):
+            single = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                             faults=FaultPlan(seed=11, dropout_p=p))
+            np.testing.assert_allclose(
+                traj[s], np.asarray(single.trajectory), rtol=1e-4, atol=1e-5
+            )
+        # per-scenario survivor accounting: (S, T) uplink rows
+        per = np.asarray(sw.ledger[0].uplink_bytes if isinstance(sw.ledger, list)
+                         else sw.ledger.uplink_bytes)
+        assert per is not None
+
+    def test_per_scenario_ledgers_meter_survivors(self):
+        X, y, w, n = _make_problem()
+        plan = FaultPlan(seed=11)
+        levels = np.asarray([0.0, 0.5])
+        sw = api.fit(_gd(), (X, y), transport="allreduce", steps=20,
+                     executor="sweep", faults=plan,
+                     sweep={"dropout_p": jnp.asarray(levels)})
+        ledgers = sw.ledger if isinstance(sw.ledger, list) else [sw.ledger]
+        assert len(ledgers) == 2
+        T, K = 20, X.shape[0]
+        u = plan.draws(0, T, K).u
+        per = n * 4
+        for led, p in zip(ledgers, levels):
+            live = (u >= p).sum(axis=1)
+            assert led.uplink_bytes == int(live.sum()) * per
+
+
+class TestMeshFaultEquivalence:
+    """Placement equivalence on a REAL 8-fake-device placement: local ≈
+    mesh (fp-order tolerance), mesh ≡ multipod bitwise on one shared
+    mesh, survivor attribution, and the single-program guarantee."""
+
+    SCRIPT = r"""
+import os
+os.environ["XLA_FLAGS"] = (
+    os.environ.get("XLA_FLAGS", "") + " --xla_force_host_platform_device_count=8"
+)
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+import json
+import jax
+import jax.numpy as jnp
+import numpy as np
+from repro import api
+from repro.api.executor import clear_program_cache, program_cache_stats
+from repro.api.faults import FaultPlan
+from repro.core.schedules import round_robin
+from repro.launch.mesh import make_multipod_mesh
+from repro.ml.linear import lsq_loss
+
+rng = np.random.default_rng(0)
+K, Nk, n = 8, 10, 5
+X = jnp.asarray(rng.normal(size=(K, Nk, n)))
+w = jnp.asarray(rng.normal(size=(n,)))
+y = jnp.einsum("kni,i->kn", X, w)
+gd = lambda: api.GradientDescent(lsq_loss, lr=0.1)
+plan = FaultPlan(seed=11, dropout_p=0.4, straggler=1, quorum=2)
+out = {"num_devices": jax.device_count()}
+
+# local vs mesh: same masked math, different reduction order → allclose
+loc = api.fit(gd(), (X, y), transport="allreduce", steps=25, faults=plan)
+mesh = api.fit(gd(), (X, y), transport="allreduce", steps=25, faults=plan,
+               executor="mesh")
+out["local_mesh_allclose"] = bool(np.allclose(
+    np.asarray(loc.theta), np.asarray(mesh.theta), rtol=1e-5, atol=1e-6))
+out["bytes_equal"] = bool(
+    loc.ledger.uplink_bytes == mesh.ledger.uplink_bytes)
+
+# mesh vs multipod ON THE SAME MESH: bitwise (the repo's §5 guarantee)
+shared = make_multipod_mesh()
+flat = api.fit(gd(), (X, y), transport="allreduce", steps=25, faults=plan,
+               executor=api.MeshExecutor(shared))
+hier = api.fit(gd(), (X, y), transport="allreduce", steps=25, faults=plan,
+               executor=api.MultiPodExecutor(shared))
+out["mesh_multipod_bitwise"] = bool(
+    np.array_equal(np.asarray(flat.theta), np.asarray(hier.theta))
+    and np.array_equal(np.asarray(flat.trajectory),
+                       np.asarray(hier.trajectory)))
+by_hop = hier.ledger.summary()["by_hop"]
+out["survivor_hops_sum"] = bool(
+    sum(v["total_bytes"] for v in by_hop.values())
+    == flat.ledger.total_bytes)
+
+# server dropout: local ≡ mesh bitwise (one contact per round — no
+# reduction-order freedom)
+splan = FaultPlan(seed=11, dropout_p=0.4)
+sched = round_robin(K, 24)
+sl = api.fit(gd(), (X, y), transport="sequential_server", schedule=sched,
+             faults=splan)
+sm = api.fit(gd(), (X, y), transport="sequential_server", schedule=sched,
+             faults=splan, executor="mesh")
+out["server_bitwise"] = bool(
+    np.array_equal(np.asarray(sl.theta), np.asarray(sm.theta)))
+out["server_bytes_equal"] = bool(
+    sl.ledger.uplink_bytes == sm.ledger.uplink_bytes)
+
+# ONE compiled program under round-varying masks: plans differing only
+# in seed (different masks every round) share the cached executable
+clear_program_cache()
+api.fit(gd(), (X, y), transport="allreduce", steps=25,
+        faults=FaultPlan(seed=1, dropout_p=0.4, straggler=1, quorum=2),
+        executor="mesh")
+api.fit(gd(), (X, y), transport="allreduce", steps=25,
+        faults=FaultPlan(seed=2, dropout_p=0.4, straggler=1, quorum=2),
+        executor="mesh")
+out["program_cache"] = program_cache_stats()
+
+# secagg on mesh: masked fit bitwise-identical to the dense fit
+sd = api.fit(gd(), (X, y), transport="allreduce", steps=20, executor="mesh")
+sa = api.fit(gd(), (X, y), transport="allreduce", steps=20, executor="mesh",
+             wire="secagg")
+out["secagg_mesh_bitwise"] = bool(
+    np.array_equal(np.asarray(sd.theta), np.asarray(sa.theta)))
+print(json.dumps(out))
+"""
+
+    def test_fault_equivalence_on_8_devices(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
+        assert out["num_devices"] == 8
+        assert out["local_mesh_allclose"]
+        assert out["bytes_equal"]
+        assert out["mesh_multipod_bitwise"]
+        assert out["survivor_hops_sum"]
+        assert out["server_bitwise"]
+        assert out["server_bytes_equal"]
+        assert out["program_cache"]["size"] == 1
+        assert out["program_cache"]["misses"] == 1
+        assert out["program_cache"]["hits"] >= 1
+        assert out["secagg_mesh_bitwise"]

@@ -13,10 +13,7 @@
 """
 
 import dataclasses
-import json
 import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -738,20 +735,8 @@ out["kwindows"] = {
 print(json.dumps(out))
 """
 
-    def test_fit_publish_serve_on_8_devices(self):
-        src = os.path.dirname(
-            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
-        )
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        env["JAX_PLATFORMS"] = "cpu"
-        proc = subprocess.run(
-            [sys.executable, "-c", self.SCRIPT],
-            capture_output=True, text=True, env=env, timeout=600,
-        )
-        assert proc.returncode == 0, proc.stderr[-2000:]
-        out = json.loads(proc.stdout.strip().splitlines()[-1])
+    def test_fit_publish_serve_on_8_devices(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
         assert out["num_devices"] == 8
         assert out["gd"]["matches_local"], out
         assert out["gd"]["uplink"] == 6 * 5 * 4  # 6 requests × 5 f32 features

@@ -19,10 +19,6 @@ The contracts this file pins down:
 * 8-fake-device subprocess acceptance run.
 """
 
-import json
-import os
-import subprocess
-import sys
 
 import jax
 import jax.numpy as jnp
@@ -581,22 +577,8 @@ print(json.dumps({
 }))
 """
 
-    def test_continuous_serve_on_8_devices(self):
-        from repro import api
-
-        src = os.path.dirname(os.path.dirname(os.path.dirname(
-            os.path.abspath(api.__file__)
-        )))
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        env["JAX_PLATFORMS"] = "cpu"
-        proc = subprocess.run(
-            [sys.executable, "-c", self.SCRIPT],
-            capture_output=True, text=True, env=env, timeout=600,
-        )
-        assert proc.returncode == 0, proc.stderr[-2000:]
-        out = json.loads(proc.stdout.strip().splitlines()[-1])
+    def test_continuous_serve_on_8_devices(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
         assert out["num_devices"] == 8
         assert out["matches_dense"], out
         assert out["step_cache"] == 1

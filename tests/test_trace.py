@@ -341,20 +341,8 @@ out = {
 print(json.dumps(out))
 """
 
-    def test_per_hop_spans(self):
-        src = os.path.dirname(
-            os.path.dirname(os.path.dirname(os.path.abspath(api.__file__)))
-        )
-        env = dict(os.environ)
-        env["PYTHONPATH"] = src + os.pathsep + env.get("PYTHONPATH", "")
-        env["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
-        env["JAX_PLATFORMS"] = "cpu"
-        proc = subprocess.run(
-            [sys.executable, "-c", self.SCRIPT],
-            capture_output=True, text=True, env=env, timeout=600,
-        )
-        assert proc.returncode == 0, proc.stderr[-2000:]
-        out = json.loads(proc.stdout.strip().splitlines()[-1])
+    def test_per_hop_spans(self, fake_devices):
+        out = fake_devices(self.SCRIPT)
         assert out["num_devices"] == 8
         assert out["theta_bitwise"], "traced multipod fit drifted"
         names = set(out["span_names"])

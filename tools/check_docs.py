@@ -36,7 +36,8 @@ REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 #: documentation files whose python blocks must execute
 SNIPPET_FILES = ("README.md", "docs/API.md", "docs/EXECUTORS.md",
-                 "docs/SERVING.md", "docs/OBSERVABILITY.md")
+                 "docs/SERVING.md", "docs/OBSERVABILITY.md",
+                 "docs/FAULTS.md")
 
 
 def link_files(repo: str = REPO) -> list[str]:

@@ -12,12 +12,20 @@ and denominator together.  The absolute local wall time is checked too,
 with the same slack, as a backstop against global slowdowns the ratios
 cannot see.
 
-One metric is held to a FIXED bound instead of the baseline×slack rule:
-``traced_over_untraced`` — a warm mesh fit with a live
-``telemetry.trace.Tracer`` vs the same fit untraced — must stay ≤ 1.05×
-(``TRACED_BOUND``).  That is the tracing layer's overhead contract
-(docs/OBSERVABILITY.md): host-side spans around whole-program dispatch
-may not tax the hot path, traced or not.
+Two metrics are held to FIXED bounds instead of the baseline×slack rule:
+
+* ``traced_over_untraced`` — a warm mesh fit with a live
+  ``telemetry.trace.Tracer`` vs the same fit untraced — must stay ≤
+  1.05× (``TRACED_BOUND``).  That is the tracing layer's overhead
+  contract (docs/OBSERVABILITY.md): host-side spans around
+  whole-program dispatch may not tax the hot path, traced or not.
+* ``faulted_over_clean`` — a warm mesh fit under a full
+  ``FaultPlan`` (dropout + straggler + quorum) vs the fault-free warm
+  fit — must stay ≤ 1.1× (``FAULTED_BOUND``).  The fault layer's
+  masks-are-jit-arguments contract (docs/FAULTS.md): per-round
+  participation is data, so faults cost a comparison + select, never a
+  retrace.  The same pass asserts the program cache compiled exactly
+  ONE executable across two different-seed plans.
 
 Usage:
   PYTHONPATH=src python tools/perf_smoke.py            # check
@@ -44,6 +52,10 @@ LM_REQUESTS, LM_PROMPT, LM_GEN_MAX, LM_SLOTS = 12, 8, 16, 4
 #: tracing layer's "zero overhead" contract, checked absolutely (no
 #: baseline, no slack)
 TRACED_BOUND = 1.05
+#: hard ceiling on faulted / fault-free warm mesh fit wall time — the
+#: fault layer's masks-are-jit-arguments contract (no retraces, mask
+#: math is a comparison + select on the hot path)
+FAULTED_BOUND = 1.1
 K, NK, N = 8, 64, 256
 STEPS = 100
 LRS = (0.02, 0.05, 0.1, 0.2)
@@ -106,6 +118,20 @@ def _measure() -> dict:
     untraced = warm_best(lambda: fit(executor="mesh"))
     traced = warm_best(lambda: fit(executor="mesh", tracer=Tracer()))
 
+    # fault overhead contract: a full fault plan on the warm mesh path
+    # (masks ride as jit arguments — comparison + select, no retrace),
+    # measured against the fault-free warm fit above; two different-seed
+    # plans must share ONE compiled program
+    from repro.api.faults import FaultPlan
+
+    def fplan(seed):
+        return FaultPlan(seed=seed, dropout_p=0.3, straggler=1, quorum=4)
+
+    _exec.clear_program_cache()
+    faulted = warm_best(lambda: fit(executor="mesh", faults=fplan(1)))
+    jax.block_until_ready(fit(executor="mesh", faults=fplan(2)).theta)
+    fault_programs = _exec.program_cache_stats()["size"]
+
     return {
         "local_warm_s": local,
         "mesh_over_local": mesh / local,
@@ -113,6 +139,8 @@ def _measure() -> dict:
         "topk_over_dense": local_topk / local,
         "mesh_cold_over_warm": cold_mesh / mesh,
         "traced_over_untraced": traced / untraced,
+        "faulted_over_clean": faulted / untraced,
+        "fault_programs_across_seeds": fault_programs,
         "bucketed_over_continuous_tokens_per_s": _measure_lm_serving(),
     }
 
@@ -190,8 +218,11 @@ def main() -> int:
     for k, v in measured.items():
         print(f"  {k}: {v:.4f}")
 
-    # fixed-bound contract, not a baseline ratio: tracing must stay free
+    # fixed-bound contracts, not baseline ratios: tracing must stay
+    # free, and faults must cost masks (not retraces) on the warm path
     traced_ratio = measured.pop("traced_over_untraced")
+    faulted_ratio = measured.pop("faulted_over_clean")
+    fault_programs = measured.pop("fault_programs_across_seeds")
 
     if args.update:
         with open(BASELINES, "w") as f:
@@ -220,6 +251,17 @@ def main() -> int:
         failures.append(
             f"traced_over_untraced: {traced_ratio:.4f} > fixed "
             f"{TRACED_BOUND}x tracing-overhead bound"
+        )
+    if faulted_ratio > FAULTED_BOUND:
+        failures.append(
+            f"faulted_over_clean: {faulted_ratio:.4f} > fixed "
+            f"{FAULTED_BOUND}x fault-overhead bound (masks must ride as "
+            f"jit arguments, not retraces)"
+        )
+    if fault_programs != 1:
+        failures.append(
+            f"fault_programs_across_seeds: {fault_programs} != 1 — "
+            f"different-seed fault plans must share ONE compiled program"
         )
     if failures:
         print("PERF REGRESSION (>{:.1f}x baseline):".format(args.slack))
